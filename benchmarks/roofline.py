@@ -1,0 +1,67 @@
+"""Beyond-paper — roofline table from the compiled dry-run artifacts.
+
+Reads the dry-run JSON (produced by `python -m repro.launch.dryrun`) and
+emits the three-term roofline per (arch x workload x mesh): compute /
+memory / collective seconds, the binding term, and the useful-FLOP ratio
+(6ND / HLO FLOPs).  This is the §Roofline table of EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+
+DEFAULT_PATHS = [
+    os.path.join(os.path.dirname(__file__), "..", "scratch",
+                 "dryrun_v2.json"),
+    os.path.join(os.path.dirname(__file__), "..", "scratch",
+                 "dryrun_all.json"),
+    "dryrun_results.json",
+]
+
+
+def load_records(path: str | None = None) -> list:
+    paths = [path] if path else DEFAULT_PATHS
+    for p in paths:
+        if p and os.path.exists(p):
+            with open(p) as f:
+                return json.load(f)
+    return []
+
+
+def run(quick: bool = False, path: str | None = None) -> dict:
+    recs = load_records(path)
+    if not recs:
+        print("roofline: no dry-run results found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+        return {"rows": []}
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        dom = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        rows.append({
+            "arch": r["arch"], "workload": r["workload"], "mesh": r["mesh"],
+            "compute_ms": round(ro["compute_s"] * 1e3, 2),
+            "memory_ms": round(ro["memory_s"] * 1e3, 2),
+            "coll_ms": round(ro["collective_s"] * 1e3, 2),
+            "bound": ro["bound"],
+            "roofline_frac": round(ro["compute_s"] / dom, 3) if dom else 0.0,
+            "useful_ratio": round(ro.get("useful_ratio", 0.0), 3),
+            "GiB_per_dev": round(
+                r["memory"]["total_bytes_per_device"] / 2**30, 2),
+        })
+    rows.sort(key=lambda x: (x["workload"], x["arch"], x["mesh"]))
+    common.print_table("roofline terms per cell (from compiled dry-run)",
+                       rows, ["arch", "workload", "mesh", "compute_ms",
+                              "memory_ms", "coll_ms", "bound",
+                              "roofline_frac", "useful_ratio",
+                              "GiB_per_dev"])
+    common.save_result("roofline", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Benchmark harness: `PYTHONPATH=src python -m benchmarks.run [--quick]`.
+
+One benchmark per paper table/figure (DESIGN.md §5):
+  storage_overhead  §4.2          txn_latency  Fig. 3
+  scalability       Fig. 4/§3.5   app_kv       Fig. 5 + Table 3
+  scrub_freq        Fig. 6        recovery     §4.6
+  roofline          (beyond paper: from the compiled dry-run)
+
+Multi-device CPU meshes are required for the zone collectives, so the
+device count is forced before jax's first import (8 hosts — not the
+512-way production flag, which only launch/dryrun.py sets).
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+import argparse
+import importlib
+import time
+import traceback
+
+BENCHES = ["storage_overhead", "txn_latency", "scalability", "app_kv",
+           "scrub_freq", "recovery", "roofline"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes/reps for CI")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else BENCHES
+
+    status = {}
+    for name in names:
+        print(f"\n{'=' * 70}\nBENCH {name}\n{'=' * 70}", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(quick=args.quick)
+            status[name] = f"ok ({time.time() - t0:.1f}s)"
+        except Exception as e:  # noqa: BLE001 — report all failures at the end
+            traceback.print_exc()
+            status[name] = f"FAILED: {type(e).__name__}: {e}"
+    print("\n" + "=" * 70)
+    for name, s in status.items():
+        print(f"{name:20s} {s}")
+    if any(s.startswith("FAILED") for s in status.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

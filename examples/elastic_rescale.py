@@ -1,0 +1,85 @@
+"""Elastic rescale demo: move a protected training job between meshes.
+
+    PYTHONPATH=src python examples/elastic_rescale.py
+
+A job training on a (4, 2) mesh loses nodes and continues on (2, 2); later
+it scales back up to (4, 2).  The divisibility-fallback sharding rules keep
+the same model valid on every mesh; protection (zone geometry depends on G)
+is rebuilt after each move, exactly as Pangolin rebuilds parity when row
+geometry changes.  Loss history continues seamlessly across both moves.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ProtectConfig, TrainConfig
+from repro.dist.elastic import reshard_state
+from repro.runtime.trainer import Trainer
+
+
+def make_trainer(mesh, seed=0):
+    cfg = ModelConfig(
+        name="elastic-demo", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv=2, d_ff=128, vocab=512, param_dtype="float32",
+        compute_dtype="float32")
+    t = Trainer(cfg, TrainConfig(learning_rate=1e-3, warmup_steps=5,
+                                 total_steps=200),
+                ProtectConfig(mode="mlpc", block_words=64),
+                mesh, seq_len=64, global_batch=8, seed=seed)
+    return t
+
+
+def move(trainer_old, new_mesh):
+    """Re-shard state onto the new mesh and rebuild protection there."""
+    t_new = make_trainer(new_mesh, seed=0)
+    state = reshard_state(
+        trainer_old.prot.state, new_mesh,
+        t_new.protector.state_specs)
+    t_new.prot = t_new.protector.init(state)
+    import dataclasses
+    import jax.numpy as jnp
+    # the step counter moves as a host value — device arrays must not leak
+    # across meshes
+    t_new.prot = dataclasses.replace(
+        t_new.prot,
+        step=jnp.asarray(int(jax.device_get(trainer_old.prot.step)),
+                         jnp.uint32))
+    t_new.cursor = trainer_old.cursor
+    return t_new
+
+
+def main():
+    mesh_full = jax.make_mesh((4, 2), ("data", "model"))
+    mesh_small = jax.make_mesh((2, 2), ("data", "model"))
+
+    t = make_trainer(mesh_full)
+    t.initialize()
+    losses = [o["loss"] for o in t.run(10)]
+    print(f"phase 1 (4x2, G=4):  steps 1-10,  loss -> {losses[-1]:.4f}, "
+          f"parity overhead {t.protector.overhead_report()['parity_fraction']:.3f}")
+
+    # nodes evicted: shrink to 2x2 (G=2), protection rebuilt
+    t = move(t, mesh_small)
+    losses += [o["loss"] for o in t.run(10)]
+    print(f"phase 2 (2x2, G=2):  steps 11-20, loss -> {losses[-1]:.4f}, "
+          f"parity overhead {t.protector.overhead_report()['parity_fraction']:.3f}")
+
+    # capacity restored: scale back up, verify recovery still works
+    t = move(t, mesh_full)
+    losses += [o["loss"] for o in t.run(10)]
+    print(f"phase 3 (4x2, G=4):  steps 21-30, loss -> {losses[-1]:.4f}")
+
+    from repro.runtime import failure
+    t.prot, ev = failure.inject_rank_loss(t.protector, t.prot, rank=1)
+    rep = t.on_failure(ev)
+    print(f"post-rescale rank loss: recovered, verified={rep['verified']}")
+
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), "loss must decrease"
+    assert int(jax.device_get(t.prot.step)) == 30
+    print("elastic rescale demo passed: 30 contiguous steps across 3 meshes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Quickstart: protect any sharded JAX state with Pangolin-JAX.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the whole public surface in ~60 lines: build a Protector over
+a sharded pytree, commit a transactional update, lose a rank, recover it
+online, scribble a page, scrub-detect it, repair it.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.txn import Mode, Protector
+from repro.runtime import failure
+
+# 1. a sharded state pytree: FSDP weights, TP weights, a replicated scalar
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+specs = {"w_fsdp": P("data", "model"), "w_tp": P(None, "model"),
+         "scale": P()}
+state = {
+    "w_fsdp": jnp.arange(16 * 64, dtype=jnp.float32).reshape(16, 64) * .01,
+    "w_tp": jnp.ones((8, 32), jnp.bfloat16),
+    "scale": jnp.float32(1.0),
+}
+state = jax.tree.map(
+    lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), state, specs)
+
+# 2. protect it: checksums detect corruption, XOR parity across the 4-rank
+#    zone repairs it, at 1/4 storage overhead (1/G; 1% at G=100)
+protector = Protector(mesh, jax.eval_shape(lambda: state), specs,
+                      mode=Mode.MLPC, block_words=64)
+prot = protector.init(state)
+print("protected:", protector.overhead_report())
+
+# 3. transactional update (the paper's Listing 2: open -> mutate -> commit)
+commit = jax.jit(protector.make_commit())
+new_state = jax.tree.map(lambda x: (x * 2).astype(x.dtype), state)
+prot, ok = commit(prot, new_state, rng_key=jax.random.PRNGKey(0))
+print(f"commit ok={bool(ok)} step={int(prot.step)}")
+
+# 4. media error: lose data-rank 2 entirely; rebuild online from parity
+want = np.asarray(prot.state["w_fsdp"]).copy()
+prot, event = failure.inject_rank_loss(protector, prot, rank=2)
+prot, ok = protector.recover_rank(prot, event.lost_rank)
+assert bool(ok)
+assert np.array_equal(np.asarray(prot.state["w_fsdp"]), want)
+print("rank-loss recovery: bit-exact")
+
+# 5. silent scribble: flip bits, detect by scrub, repair the page
+prot, event = failure.inject_scribble(protector, prot, rank=1,
+                                      word_offsets=[7])
+report = protector.scrub(prot)
+locs = np.argwhere(np.asarray(report["bad_pages"]))
+print("scrub found corrupted (mesh-pos..., page):", locs.tolist())
+prot, ok = protector.repair_pages(
+    prot, [int(locs[0][0])], [int(locs[0][-1])])
+assert bool(ok)
+assert np.array_equal(np.asarray(prot.state["w_fsdp"]), want)
+print("scribble repair: bit-exact")
+
+# 6. canary: a staged buffer overrun aborts the commit, state untouched
+prot2, ok = commit(prot, new_state, canary_ok=False)
+assert not bool(ok) and int(prot2.step) == int(prot.step)
+print("canary abort: state untouched — all quickstart checks passed")

@@ -1,0 +1,65 @@
+"""Attribute hlo_cost byte counts by opcode for one dry-run cell."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, collections
+import jax, numpy as np
+from repro.launch.dryrun import dryrun_cell
+from repro.launch import hlo_cost
+
+# monkeypatch analyze_text to capture per-opcode byte attribution
+orig = hlo_cost.HloCostModel.comp_cost
+BYTES_BY_OP = collections.Counter()
+FLOPS_BY_OP = collections.Counter()
+
+class Model2(hlo_cost.HloCostModel):
+    def comp_cost(self, name):
+        if name in self._memo: return self._memo[name]
+        comp = self.comps.get(name)
+        tot = hlo_cost.CostTotals()
+        self._memo[name] = tot
+        if comp is None: return tot
+        count_bytes = name not in self.fused
+        for ins in comp.instrs:
+            dt0 = hlo_cost._tuple_shapes(ins.type_str)
+            is_float = bool(dt0) and dt0[0][0] in hlo_cost._FLOAT_DTYPES
+            if ins.opcode in ("dot", "convolution"):
+                tot.flops += self._dot_flops(ins)
+            elif is_float and ins.opcode not in hlo_cost._NO_BYTES:
+                tot.flops += hlo_cost._elems_of(ins.type_str)
+            self._collective(ins, tot)
+            if count_bytes and ins.opcode not in hlo_cost._NO_BYTES:
+                ob = sum(hlo_cost._bytes_of(self.shapes.get(o, ""))
+                         for o in ins.operands if o in self.shapes)
+                nbytes = ob + hlo_cost._bytes_of(ins.type_str)
+                tot.raw_hbm_bytes += nbytes
+                if ins.opcode not in hlo_cost._ELEMENTWISE:
+                    tot.hbm_bytes += nbytes
+                    BYTES_BY_OP[ins.opcode] += nbytes  # un-multiplied
+            trip = 1
+            tm = hlo_cost._TRIP_RE.search(ins.line)
+            if tm: trip = int(tm.group(1))
+            elif ins.opcode == "while": trip = self._trip_from_cond(ins)
+            bm = hlo_cost._ATTR_BODY.search(ins.line)
+            if bm:
+                sub = self.comp_cost(bm.group(1))
+                tot.add(sub, trip)
+                BYTES_BY_OP[f"__body_{bm.group(1)[:40]}_x{trip}"] += sub.hbm_bytes * trip
+                cm = hlo_cost._ATTR_COND.search(ins.line)
+                if cm: tot.add(self.comp_cost(cm.group(1)), trip + 1)
+            for m in hlo_cost._ATTR_CALLS.finditer(ins.line):
+                tot.add(self.comp_cost(m.group(1)), 1)
+            brm = hlo_cost._ATTR_BRANCHES.search(ins.line)
+            if brm:
+                for b in hlo_cost._OPERAND_RE.findall(brm.group(1)):
+                    tot.add(self.comp_cost(b), 1.0)
+        self._memo[name] = tot
+        return tot
+
+hlo_cost.HloCostModel = Model2
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-0.5b"
+wl = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+rec = dryrun_cell(arch, wl, multi_pod=False, verbose=True)
+print("\ntop byte contributors (body entries show rolled-up xtrip):")
+for op, b in BYTES_BY_OP.most_common(25):
+    print(f"  {op:55s} {b/1e9:12.1f} GB")
+print("\ncost:", {k: f"{v:.3g}" for k, v in rec["cost"].items()})

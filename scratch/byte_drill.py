@@ -1,0 +1,63 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, collections
+import jax, numpy as np
+from repro.configs import WORKLOADS
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_config
+from repro.core.txn import Mode, Protector
+from repro.launch import hlo_cost
+from repro.launch.dryrun import MICROBATCHES, _specs_to_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.models.transformer import build_model
+from repro.optim import build_optimizer
+
+arch, wl_name = sys.argv[1], sys.argv[2]
+cfg = get_config(arch); wl = WORKLOADS[wl_name]
+mesh = make_production_mesh()
+model = build_model(cfg, mesh)
+train_cfg = TrainConfig(microbatches=MICROBATCHES.get(arch, 1))
+optimizer = build_optimizer(train_cfg, cfg)
+abstract_state = api.abstract_train_state(model, optimizer)
+state_specs = api.train_state_specs(model, optimizer, mesh)
+protector = Protector(mesh, abstract_state, state_specs, mode=Mode.MLPC)
+commit = protector.make_commit()
+train_step = api.make_train_step(model, optimizer, train_cfg)
+def step(prot, batch):
+    new_state, metrics = train_step(prot.state, batch)
+    prot2, ok = commit(prot, new_state, data_cursor=prot.step, rng_key=jax.random.PRNGKey(0))
+    return prot2, (metrics["loss"], ok)
+prot_abs = protector.abstract_protected(abstract_state)
+prot_specs = protector.protected_specs()
+batch_abs = api.batch_abstract(cfg, wl)
+b_specs = api.batch_specs(cfg, mesh, wl.global_batch)
+in_sh = (_specs_to_shardings(prot_specs, mesh), _specs_to_shardings(b_specs, mesh))
+fn = jax.jit(step, in_shardings=in_sh)
+text = fn.lower(prot_abs, batch_abs).compile().as_text()
+open('/root/repo/scratch/drill_hlo.txt','w').write(text)
+
+m = hlo_cost.HloCostModel(text)
+# self bytes per computation (unrolled into sub-calls? no: only own instrs)
+def self_cost(comp):
+    tot = 0.0
+    instr_bytes = collections.Counter()
+    for ins in comp.instrs:
+        if ins.opcode in hlo_cost._NO_BYTES or ins.opcode in hlo_cost._ELEMENTWISE:
+            continue
+        ob = sum(hlo_cost._bytes_of(m.shapes.get(o, "")) for o in ins.operands if o in m.shapes)
+        nb = ob + hlo_cost._bytes_of(ins.type_str)
+        tot += nb
+        instr_bytes[f"{ins.opcode}:{ins.type_str[:60]}"] += nb
+    return tot, instr_bytes
+
+rows = []
+for name, comp in m.comps.items():
+    if name in m.fused:  continue
+    t, ib = self_cost(comp)
+    rows.append((t, name, ib))
+rows.sort(reverse=True)
+for t, name, ib in rows[:6]:
+    print(f"\n=== {name}  self_bytes={t/1e9:.2f} GB ===")
+    for k, v in ib.most_common(8):
+        print(f"   {v/1e9:10.2f} GB  {k}")

@@ -1,0 +1,48 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, collections
+import jax, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import WORKLOADS
+from repro.configs.registry import get_config
+from repro.launch import hlo_cost
+from repro.launch.dryrun import _specs_to_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.models.transformer import build_model
+
+arch, wl_name = sys.argv[1], sys.argv[2]
+cfg = get_config(arch); wl = WORKLOADS[wl_name]
+mesh = make_production_mesh()
+model = build_model(cfg, mesh)
+forward = api.make_forward(model)
+pspecs = model.param_specs(mesh)
+abstract_params = model.abstract_params()
+batch_abs = api.batch_abstract(cfg, wl)
+b_specs = api.batch_specs(cfg, mesh, wl.global_batch)
+in_sh = (_specs_to_shardings(pspecs, mesh), _specs_to_shardings(b_specs, mesh))
+fn = jax.jit(forward, in_shardings=in_sh)
+text = fn.lower(abstract_params, batch_abs).compile().as_text()
+open('/root/repo/scratch/drill2_hlo.txt','w').write(text)
+m = hlo_cost.HloCostModel(text)
+def self_cost(comp):
+    tot = 0.0; instr_bytes = collections.Counter()
+    for ins in comp.instrs:
+        if ins.opcode in hlo_cost._NO_BYTES or ins.opcode in hlo_cost._ELEMENTWISE:
+            continue
+        ob = sum(hlo_cost._bytes_of(m.shapes.get(o, "")) for o in ins.operands if o in m.shapes)
+        nb = ob + hlo_cost._bytes_of(ins.type_str)
+        tot += nb; instr_bytes[f"{ins.opcode}:{ins.type_str[:58]}"] += nb
+    return tot, instr_bytes
+rows = []
+for name, comp in m.comps.items():
+    if name in m.fused: continue
+    t, ib = self_cost(comp)
+    rows.append((t, name, ib))
+rows.sort(reverse=True)
+for t, name, ib in rows[:5]:
+    print(f"\n=== {name}  self_bytes={t/1e9:.2f} GB ===")
+    for kk, vv in ib.most_common(6):
+        print(f"   {vv/1e9:10.2f} GB  {kk}")
+tot = m.entry_cost()
+print("\nentry totals: flops", f"{tot.flops:.3g}", "bytes", f"{tot.hbm_bytes:.3g}")

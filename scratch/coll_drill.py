@@ -1,0 +1,24 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, collections, re
+import jax
+from repro.launch import hlo_cost
+from repro.launch.dryrun import dryrun_cell
+
+# capture per-collective-shape wire bytes
+orig = hlo_cost.HloCostModel._collective
+BY_SHAPE = collections.Counter()
+MULT = {}
+def patched(self, ins, tot):
+    before = dict(tot.wire_bytes)
+    orig(self, ins, tot)
+    delta = sum(tot.wire_bytes.values()) - sum(before.values())
+    if delta:
+        BY_SHAPE[f"{ins.opcode}:{ins.type_str[:70]}"] += delta
+hlo_cost.HloCostModel._collective = patched
+rec = dryrun_cell(sys.argv[1], sys.argv[2], multi_pod=False, verbose=True)
+print("\nun-multiplied wire bytes by collective shape:")
+for k, v in BY_SHAPE.most_common(15):
+    print(f"  {v/1e9:10.2f} GB  {k}")
+print("\ncounts:", rec["collectives"]["counts"])
+print("wire GB:", {k: round(v*512/1e9,1) for k,v in rec["collectives"]["wire_bytes"].items()})

@@ -1,0 +1,8 @@
+"""repro — Pangolin-JAX: fault-tolerant protection of distributed training/serving state.
+
+A JAX/TPU adaptation of "Pangolin: A Fault-Tolerant Persistent Memory
+Programming Library" (Zhang & Swanson, 2019).  See DESIGN.md for the
+NVMM -> multi-pod-HBM mapping.
+"""
+
+__version__ = "0.1.0"

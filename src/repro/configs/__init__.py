@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoESpec, ProtectConfig, TrainConfig, Workload, WORKLOADS,
+    workload_skips)
+from repro.configs.registry import get_config, list_archs  # noqa: F401

@@ -1,0 +1,138 @@
+"""Config system: model architecture, training, mesh, protection.
+
+Every assigned architecture gets a `src/repro/configs/<id>.py` exporting
+`CONFIG` (the exact published configuration) and `reduced()` (a small
+same-family variant for CPU smoke tests).  `repro.configs.registry` resolves
+`--arch <id>` strings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_expert: int                 # expert FFN hidden size
+    interleave: int = 1           # 1 = every layer MoE; 2 = alternate dense/MoE
+    shared_expert: bool = False   # llama4-style always-on shared expert
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | encdec | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None        # default d_model // n_heads
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    act: str = "silu"                      # GLU activation
+    moe: Optional[MoESpec] = None
+    # layer pattern for hybrid/ssm families; None = homogeneous decoder
+    block_pattern: Optional[Tuple[str, ...]] = None   # e.g. ("rglru","rglru","attn")
+    window: Optional[int] = None           # sliding-window attention size
+    enc_layers: int = 0                    # >0 => encoder-decoder
+    mm_positions: int = 0                  # frontend stub embedding positions
+    subquadratic: bool = False             # True => long_500k runnable
+    # numerics
+    param_dtype: str = "float32"           # master/param dtype
+    compute_dtype: str = "bfloat16"
+    moment_dtype: Optional[str] = None     # Adam m/v dtype; None = param_dtype
+    logical_overrides: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        if self.block_pattern is not None:
+            return self.block_pattern
+        if self.moe is not None and self.moe.interleave == 2:
+            return ("dense", "moe")
+        if self.moe is not None:
+            return ("moe",)
+        return ("dense",)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail_pattern(self) -> Tuple[str, ...]:
+        return self.pattern[: self.n_layers % len(self.pattern)]
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline accounting)."""
+        from repro.models import api
+        return api.count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models import api
+        return api.count_params(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One input-shape cell from the assignment."""
+    name: str                 # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                 # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+WORKLOADS = {
+    "train_4k": Workload("train_4k", "train", 4096, 256),
+    "prefill_32k": Workload("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Workload("decode_32k", "decode", 32768, 128),
+    "long_500k": Workload("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    microbatches: int = 1             # gradient accumulation
+    remat: bool = True
+    optimizer: str = "adamw"          # adamw | adafactor
+    z_loss: float = 1e-4
+    grad_compression: bool = False    # int8 all-reduce with error feedback
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtectConfig:
+    mode: str = "mlpc"                # none | ml | mlp | mlpc | replica
+    block_words: int = 1024
+    hybrid_threshold: float = 0.5
+    scrub_period: int = 0             # transactions between scrubs; 0 = off
+    log_capacity: int = 64
+    overlap_commit: bool = False      # fuse parity RS into the next step (perf)
+
+
+def workload_skips(cfg: ModelConfig, wl: Workload) -> Optional[str]:
+    """Reason string if this (arch, workload) cell is skipped, else None."""
+    if wl.name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention architecture: 524k-token decode requires "
+                "sub-quadratic attention (see DESIGN.md §4)")
+    return None

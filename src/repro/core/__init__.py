@@ -1,0 +1,7 @@
+"""Pangolin-JAX core: the paper's contribution as composable JAX modules."""
+
+from repro.core.txn import Mode, ProtectedState, Protector  # noqa: F401
+from repro.core.scrub import Scrubber, ScrubReport  # noqa: F401
+from repro.core.recovery import (  # noqa: F401
+    RecoveryReport, recover_from_rank_loss, recover_from_scribble)
+from repro.core import checksum, layout, microbuffer, parity, redolog  # noqa: F401

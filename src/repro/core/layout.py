@@ -1,0 +1,140 @@
+"""Zone layout: a sharded state pytree viewed as Pangolin's 2-D zone.
+
+Pangolin organizes a zone's chunks as rows x columns; objects place anywhere
+within rows, the last row is parity, and "page columns" (4 KB-wide aligned
+columns) are the unit of recovery (§3.1).
+
+Mapping: for each (pod, model) coordinate, the G ranks along the **data**
+axis form one zone.  Each rank's local shards of every state leaf, bitcast
+to uint32 words and concatenated, form that rank's "chunk row".  Leaves are
+the "objects": they place at arbitrary offsets in the row, independent of
+page boundaries, exactly as the paper allows.  The parity row is XOR of the
+G rows, reduce-scattered so each rank stores 1/G of it — storage overhead is
+1/G of the pool (the paper's "100 chunk rows => ~1%" dial; G is the mesh's
+data-axis size here, and grows with the deployment).
+
+The layout is computed once from abstract shapes + shardings (no device
+data) and is identical on every rank of a zone by SPMD construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import utils
+from repro.core import checksum as cksum_mod
+
+PyTree = Any
+
+PAGE_WORDS = 1024  # 4 KB pages, as in the paper's recovery granularity.
+
+
+@dataclasses.dataclass(frozen=True)
+class ZoneLayout:
+    """Static placement of a state pytree inside the per-rank word row."""
+    treedef: Any
+    slots: tuple                # tuple[utils.LeafSlot]
+    row_words: int              # padded row length (multiple of G * PAGE_WORDS)
+    group_size: int             # G — ranks per zone (data-axis size)
+    block_words: int            # checksum block == page column width
+
+    @property
+    def n_blocks(self) -> int:
+        return self.row_words // self.block_words
+
+    @property
+    def seg_words(self) -> int:
+        """Per-rank parity segment length."""
+        return self.row_words // self.group_size
+
+    @property
+    def payload_words(self) -> int:
+        return sum(s.n_words for s in self.slots)
+
+    # -- storage accounting (the paper's §4.2) --------------------------------
+    def overhead_report(self) -> dict:
+        state_bytes = self.payload_words * 4
+        parity_bytes = self.seg_words * 4          # per rank; 1/G of row
+        cksum_bytes = self.n_blocks * 8
+        return dict(
+            state_bytes_per_rank=state_bytes,
+            parity_bytes_per_rank=parity_bytes,
+            checksum_bytes_per_rank=cksum_bytes,
+            parity_fraction=parity_bytes / max(state_bytes, 1),
+            checksum_fraction=cksum_bytes / max(state_bytes, 1),
+            replication_fraction=1.0,              # the Pmemobj-R comparison
+        )
+
+
+def _local_shape(leaf, sharding) -> tuple:
+    if sharding is None:
+        return tuple(leaf.shape)
+    return tuple(sharding.shard_shape(tuple(leaf.shape)))
+
+
+def build_layout(state: PyTree, group_size: int,
+                 shardings: PyTree | None = None,
+                 block_words: int = PAGE_WORDS) -> ZoneLayout:
+    """Compute the zone layout from abstract state.
+
+    `state`: pytree of arrays or ShapeDtypeStructs (global shapes).
+    `shardings`: matching pytree of NamedShardings (or None for local/CPU
+    use, in which case shapes are taken as-is).
+    """
+    leaves, treedef = jax.tree.flatten(state)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    assert len(shard_leaves) == len(leaves)
+    slots = []
+    offset = 0
+    for leaf, sh in zip(leaves, shard_leaves):
+        lshape = _local_shape(leaf, sh)
+        n_words = utils.num_words(lshape, leaf.dtype)
+        slots.append(utils.LeafSlot(offset=offset, n_words=n_words,
+                                    shape=lshape, dtype=jnp.dtype(leaf.dtype)))
+        offset += n_words
+    row_words = utils.round_up(max(offset, 1), group_size * block_words)
+    return ZoneLayout(treedef=treedef, slots=tuple(slots),
+                      row_words=row_words, group_size=group_size,
+                      block_words=block_words)
+
+
+def flatten_row(layout: ZoneLayout, local_state: PyTree) -> jax.Array:
+    """Bitcast + concatenate local shards into the padded word row."""
+    leaves = jax.tree.leaves(local_state)
+    assert len(leaves) == len(layout.slots)
+    parts = []
+    for leaf, slot in zip(leaves, layout.slots):
+        w = utils.to_words(leaf)
+        assert w.shape[0] == slot.n_words, (w.shape, slot)
+        parts.append(w)
+    row = jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.uint32)
+    return utils.pad_to(row, layout.row_words)
+
+
+def unflatten_row(layout: ZoneLayout, row: jax.Array) -> PyTree:
+    """Inverse of :func:`flatten_row` — bit-exact."""
+    leaves = []
+    for slot in layout.slots:
+        w = jax.lax.dynamic_slice_in_dim(row, slot.offset, slot.n_words)
+        leaves.append(utils.from_words(w, slot.shape, slot.dtype))
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def leaf_pages(layout: ZoneLayout, leaf_index: int) -> np.ndarray:
+    """Page-column indices overlapping a given leaf (for targeted patches)."""
+    slot = layout.slots[leaf_index]
+    first = slot.offset // layout.block_words
+    last = (slot.offset + slot.n_words - 1) // layout.block_words
+    return np.arange(first, last + 1)
+
+
+def range_pages(layout: ZoneLayout, offset: int, n_words: int) -> np.ndarray:
+    first = offset // layout.block_words
+    last = (offset + max(n_words, 1) - 1) // layout.block_words
+    return np.arange(first, last + 1)

@@ -1,0 +1,56 @@
+"""Micro-buffering and canaries (Pangolin §3.2).
+
+In the paper, a micro-buffer is a DRAM shadow copy of an NVMM object: the
+application mutates the shadow, and commit propagates it.  JAX state is
+already functional — `train_step`/`serve_step` *produce* the shadow copy —
+so micro-buffering's isolation property holds by construction.  What does
+not hold by construction is the paper's *canary*: a guard word that detects
+buffer overruns before they are committed.  Custom (Pallas) kernels can
+write out of bounds if a BlockSpec/grid is mis-specified, which is exactly
+the "scribble before commit" failure the canary catches.
+
+We therefore stage kernel outputs in guarded buffers: `guard()` appends a
+canary page of a fixed pattern, kernels write the interior, and
+`check(...)` verifies the canary at commit.  On mismatch the transaction
+aborts without touching protected state (txn.commit selects the old state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CANARY_WORD = jnp.uint32(0xDEADBEEF)
+CANARY_WORDS = 128  # one canary "page" of guard words
+
+
+def guard(row: jax.Array) -> jax.Array:
+    """Append a canary page to a 1-D uint32 buffer."""
+    canary = jnp.full((CANARY_WORDS,), CANARY_WORD, jnp.uint32)
+    return jnp.concatenate([row, canary])
+
+
+def split(guarded: jax.Array) -> tuple[jax.Array, jax.Array]:
+    return guarded[:-CANARY_WORDS], guarded[-CANARY_WORDS:]
+
+
+def check(guarded: jax.Array) -> jax.Array:
+    """True iff the canary is intact (no overrun into the guard page)."""
+    _, canary = split(guarded)
+    return jnp.all(canary == CANARY_WORD)
+
+
+def guard_nd(x: jax.Array) -> jax.Array:
+    """Guard an N-D staging buffer by appending a canary row on axis 0."""
+    pad_shape = (1,) + tuple(x.shape[1:])
+    canary = jnp.full(pad_shape, CANARY_WORD, jnp.uint32)
+    if x.dtype != jnp.uint32:
+        raise TypeError("guard_nd stages uint32 buffers")
+    return jnp.concatenate([x, canary], axis=0)
+
+
+def check_nd(guarded: jax.Array) -> jax.Array:
+    return jnp.all(guarded[-1] == CANARY_WORD)
+
+
+def interior_nd(guarded: jax.Array) -> jax.Array:
+    return guarded[:-1]

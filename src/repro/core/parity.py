@@ -1,0 +1,142 @@
+"""XOR parity over zone rows (Pangolin §3.1, §3.5).
+
+All functions run *inside* a shard_map over the full mesh and operate on the
+local word row; `axis_name` is the zone (data) axis of size G.
+
+Three update paths, mirroring the paper's hybrid scheme:
+
+  * build      — full XOR reduce-scatter of the rows (initialization, and
+                 the "writer lock / plain XOR" path for large updates).
+  * patch      — incremental: Delta = old XOR new on the *dirty pages only*,
+                 XOR-reduced and applied to the owners' parity segments.
+                 XOR's commutativity makes concurrent patches order-free —
+                 the paper's atomic-XOR insight, realized as a collective.
+  * hybrid     — picks patch vs build from the dirty fraction, the analogue
+                 of the paper's 512 B threshold.
+
+Reconstruction (§3.6): lost row r = XOR of surviving rows XOR parity,
+computed online by all survivors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.layout import ZoneLayout
+from repro.dist import collectives as coll
+
+
+# ---------------------------------------------------------------------------
+# bulk path
+# ---------------------------------------------------------------------------
+
+def build_parity(row: jax.Array, axis_name: str) -> jax.Array:
+    """Full parity build: XOR-reduce-scatter rows; rank keeps its segment."""
+    return coll.xor_reduce_scatter(row, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# incremental patch path
+# ---------------------------------------------------------------------------
+
+def page_view(row: jax.Array, block_words: int) -> jax.Array:
+    return row.reshape(-1, block_words)
+
+
+def gather_pages(row: jax.Array, page_idx: jax.Array,
+                 block_words: int) -> jax.Array:
+    """(k, block_words) dirty page contents."""
+    return page_view(row, block_words)[page_idx]
+
+
+def patch_parity(parity_seg: jax.Array, old_pages: jax.Array,
+                 new_pages: jax.Array, page_idx: jax.Array,
+                 layout: ZoneLayout, axis_name: str) -> jax.Array:
+    """Apply an incremental parity patch for the dirty pages.
+
+    old_pages/new_pages: (k, block_words) contents of the dirty pages on this
+    rank (page set must be SPMD-uniform across the zone); page_idx: (k,)
+    global page indices within the row.  Communicates only k pages (XOR
+    all-reduce), then each owner XORs the patch into its parity segment.
+    """
+    bw = layout.block_words
+    from repro.kernels import ops as kops
+    delta = kops.xor_delta(old_pages, new_pages)         # (k, bw)
+    patch = coll.xor_all_reduce(delta, axis_name)        # (k, bw) on all ranks
+    # Page p lives in parity segment of rank p // pages_per_seg.
+    pages_per_seg = layout.seg_words // bw
+    me = lax.axis_index(axis_name)
+    owner = page_idx // pages_per_seg
+    local_page = page_idx % pages_per_seg
+    mine = (owner == me)
+    seg_pages = parity_seg.reshape(pages_per_seg, bw)
+    # Scatter-XOR with O(k) work: page indices within one commit are unique,
+    # so gather -> xor -> scatter-set is exact; non-owned rows route to a
+    # dummy slot past the end (dropped by the final slice).  This is the
+    # "atomic XOR" application — commutativity already did the cross-rank
+    # combining in the all-reduce above.
+    scatter_idx = jnp.where(mine, local_page, pages_per_seg)
+    padded = jnp.concatenate(
+        [seg_pages, jnp.zeros((1, bw), seg_pages.dtype)], axis=0)
+    patched_rows = padded[scatter_idx] ^ patch           # (k, bw)
+    out = padded.at[scatter_idx].set(patched_rows)[:pages_per_seg]
+    return out.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# hybrid (paper §3.5)
+# ---------------------------------------------------------------------------
+
+def hybrid_update(row_old: jax.Array, row_new: jax.Array,
+                  parity_seg: jax.Array, layout: ZoneLayout,
+                  axis_name: str, dirty_page_idx=None,
+                  threshold_fraction: float = 0.5) -> jax.Array:
+    """Choose the patch or bulk path by dirty fraction (static decision).
+
+    `dirty_page_idx` is a static list/array of dirty page indices, or None
+    for "everything changed".  The threshold plays the role of the paper's
+    512 B atomic-XOR/plain-XOR crossover.
+    """
+    n_pages = layout.n_blocks
+    if dirty_page_idx is not None and len(dirty_page_idx) == 0:
+        # metadata-only transaction (the paper's "free"): parity unchanged
+        return parity_seg
+    if dirty_page_idx is None or len(dirty_page_idx) / n_pages >= threshold_fraction:
+        return build_parity(row_new, axis_name)
+    idx = jnp.asarray(dirty_page_idx, jnp.int32)
+    old_pages = gather_pages(row_old, idx, layout.block_words)
+    new_pages = gather_pages(row_new, idx, layout.block_words)
+    return patch_parity(parity_seg, old_pages, new_pages, idx, layout,
+                        axis_name)
+
+
+# ---------------------------------------------------------------------------
+# reconstruction (paper §3.6)
+# ---------------------------------------------------------------------------
+
+def reconstruct_row(row: jax.Array, parity_seg: jax.Array,
+                    lost_rank, axis_name: str) -> jax.Array:
+    """Rebuild the lost rank's row online; survivors contribute their rows.
+
+    Every rank returns the same reconstructed row (the lost rank replaces its
+    state from it; survivors can discard it or use it for verification).
+    """
+    me = lax.axis_index(axis_name)
+    contrib = jnp.where(me == lost_rank, jnp.zeros_like(row), row)
+    # XOR of surviving rows, scattered by segment...
+    survivor_seg = coll.xor_reduce_scatter(contrib, axis_name)
+    # ... XOR parity segment = lost row's segment, held by each owner.
+    # But parity segments are owned per rank; segment i of the lost row is
+    # survivor_seg_i XOR parity_seg_i on rank i.
+    lost_seg = survivor_seg ^ parity_seg
+    return coll.all_gather_row(lost_seg, axis_name)
+
+
+def verify_parity(row: jax.Array, parity_seg: jax.Array,
+                  axis_name: str) -> jax.Array:
+    """Zone-wide invariant: XOR of all rows equals parity. Returns bool."""
+    fresh = coll.xor_reduce_scatter(row, axis_name)
+    ok_local = jnp.all(fresh == parity_seg)
+    # AND across the zone == min over {0,1}
+    return lax.pmin(ok_local.astype(jnp.int32), axis_name) > 0

@@ -1,0 +1,74 @@
+"""Online recovery orchestration (Pangolin §3.6).
+
+Two entry points, both funneling into the Protector's reconstruction ops:
+
+  * `recover_from_rank_loss`  — media-error path: a failure event reports a
+    lost rank (the analogue of SIGBUS reporting a poisoned page); the pool
+    freezes, survivors rebuild the row from parity, the pool resumes.
+  * `recover_from_scribble`   — corruption path: checksum mismatches (from a
+    scrub or a verify-at-open) identify (rank, page) victims; targeted page
+    reconstruction repairs them in place.
+
+Recovery is idempotent (pure reconstruction from surviving rows + parity),
+so a crash mid-recovery simply re-executes it — the paper's §3.6 guarantee.
+
+Crash recovery (redo-log replay) lives in runtime/trainer.py, which owns the
+data pipeline and step function needed to re-execute logged steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import txn as txn_mod
+
+
+@dataclasses.dataclass
+class RecoveryReport:
+    kind: str                    # "rank_loss" | "scribble"
+    lost_rank: Optional[int]
+    pages: list
+    verified: bool               # post-repair checksum verification passed
+    frozen: bool
+
+
+def recover_from_rank_loss(protector: txn_mod.Protector,
+                           prot: txn_mod.ProtectedState, lost_rank: int,
+                           freeze: Optional[Callable] = None,
+                           resume: Optional[Callable] = None):
+    """Rebuild one data-rank's entire state shard from parity, online."""
+    if not protector.mode.has_parity:
+        raise RuntimeError(
+            f"mode {protector.mode.value} has no parity; rank loss is "
+            "unrecoverable online (restore from checkpoint instead)")
+    if freeze is not None:
+        freeze()
+    prot, ok = protector.recover_rank(prot, lost_rank)
+    verified = bool(jax.device_get(ok))
+    if resume is not None:
+        resume()
+    return prot, RecoveryReport("rank_loss", lost_rank, [], verified,
+                                freeze is not None)
+
+
+def recover_from_scribble(protector: txn_mod.Protector,
+                          prot: txn_mod.ProtectedState,
+                          locations: Sequence[tuple],
+                          freeze: Optional[Callable] = None,
+                          resume: Optional[Callable] = None):
+    """Repair (rank, page) scribble victims from parity, online."""
+    if not protector.mode.has_parity:
+        raise RuntimeError("scribble repair requires parity")
+    if freeze is not None:
+        freeze()
+    ranks = [r for r, _ in locations]
+    pages = [p for _, p in locations]
+    prot, ok = protector.repair_pages(prot, ranks, pages)
+    verified = bool(jax.device_get(ok))
+    if resume is not None:
+        resume()
+    return prot, RecoveryReport("scribble", None, list(locations), verified,
+                                freeze is not None)

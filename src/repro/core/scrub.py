@@ -1,0 +1,81 @@
+"""Periodic scrubbing (Pangolin §3.3).
+
+The scrubber walks the whole pool's checksums every `period` transactions
+(Fig. 6 of the paper) and hands any mismatches to recovery.  It freezes the
+pool (the trainer stops committing) while repair runs — scrub-triggered
+repair shares the recovery routine with failure-event-triggered repair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import txn as txn_mod
+
+
+@dataclasses.dataclass
+class ScrubReport:
+    step: int
+    checked: bool
+    bad_locations: list          # [(rank, page), ...]
+    parity_ok: Optional[bool]
+    repaired: bool
+    repair_ok: Optional[bool]
+
+
+class Scrubber:
+    """Transaction-count-based scrubbing with online repair."""
+
+    def __init__(self, protector: txn_mod.Protector, period: int = 0,
+                 auto_repair: bool = True):
+        self.protector = protector
+        self.period = period          # 0 = disabled
+        self.auto_repair = auto_repair
+        self._since = 0
+
+    def due(self) -> bool:
+        if self.period <= 0:
+            return False
+        return self._since >= self.period
+
+    def on_commit(self):
+        self._since += 1
+
+    def run(self, prot: txn_mod.ProtectedState,
+            freeze: Optional[Callable] = None,
+            resume: Optional[Callable] = None):
+        """Scrub (and repair) the pool.  Returns (prot, ScrubReport)."""
+        self._since = 0
+        mode = self.protector.mode
+        if not (mode.has_cksums or mode.has_parity):
+            return prot, ScrubReport(int(prot.step), False, [], None,
+                                     False, None)
+        if freeze is not None:
+            freeze()
+        out = self.protector.scrub(prot)
+        bad_locations = []
+        if "bad_pages" in out:
+            bad = np.asarray(jax.device_get(out["bad_pages"]))
+            # bad: (*mesh_dims, n_blocks); data axis position -> rank
+            data_pos = self.protector.axis_names.index(
+                self.protector.data_axis)
+            for idx in np.argwhere(bad):
+                rank = int(idx[data_pos])
+                page = int(idx[-1])
+                bad_locations.append((rank, page))
+        parity_ok = (bool(jax.device_get(out["parity_ok"]))
+                     if "parity_ok" in out else None)
+        repaired, repair_ok = False, None
+        if bad_locations and self.auto_repair and mode.has_parity:
+            ranks = [r for r, _ in bad_locations]
+            pages = [p for _, p in bad_locations]
+            prot, ok = self.protector.repair_pages(prot, ranks, pages)
+            repaired, repair_ok = True, bool(jax.device_get(ok))
+        if resume is not None:
+            resume()
+        return prot, ScrubReport(int(jax.device_get(prot.step)), True,
+                                 bad_locations, parity_ok, repaired,
+                                 repair_ok)

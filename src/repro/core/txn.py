@@ -1,0 +1,480 @@
+"""Fault-tolerant transactions over distributed state (Pangolin §3.4).
+
+The `Protector` wraps a sharded state pytree (params, optimizer moments, KV
+caches, ...) with Pangolin's protection stack and exposes the transactional
+API:
+
+    prot   = protector.init(state)                      # build parity+checksums
+    prot', ok = protector.commit(prot, new_state, ...)  # transactional update
+    report = protector.scrub(prot)                      # periodic verification
+    prot'  = protector.recover_rank(prot, lost)         # online media recovery
+    prot'  = protector.repair_pages(prot, rank, pages)  # online scribble repair
+
+Commit pipeline (paper order: redo log -> objects -> parity, idempotent):
+  1. redo record appended + commit-marked (replicated),
+  2. canary verified (abort without touching state on mismatch),
+  3. object checksums refreshed (incremental where dirty pages are known),
+  4. parity updated via the hybrid patch/bulk scheme,
+  5. the new state replaces the old (functional swap).
+
+Protection-mode ladder mirrors the paper's evaluation (Table 2):
+  NONE   ~ Pangolin baseline (micro-buffering + canary only)
+  ML     ~ + metadata/redo-log replication
+  MLP    ~ + XOR parity (media-error recovery; compare w/ REPLICA)
+  MLPC   ~ + object checksums (scribble detection)
+  REPLICA~ libpmemobj's replicated mode (2x storage, the paper's baseline)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import checksum as ck
+from repro.core import layout as layout_mod
+from repro.core import parity as parity_mod
+from repro.core import redolog
+from repro.dist import collectives as coll
+
+PyTree = Any
+U32 = jnp.uint32
+
+
+class Mode(enum.Enum):
+    NONE = "none"          # micro-buffering + canary only (pgl baseline)
+    ML = "ml"              # + redo-log/metadata replication
+    MLP = "mlp"            # + parity
+    MLPC = "mlpc"          # + checksums
+    REPLICA = "replica"    # full replica (Pmemobj-R analogue)
+
+    @property
+    def has_parity(self) -> bool:
+        return self in (Mode.MLP, Mode.MLPC)
+
+    @property
+    def has_cksums(self) -> bool:
+        return self is Mode.MLPC
+
+    @property
+    def has_log(self) -> bool:
+        return self in (Mode.ML, Mode.MLP, Mode.MLPC)
+
+    @property
+    def has_replica(self) -> bool:
+        return self is Mode.REPLICA
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ProtectedState:
+    state: PyTree
+    parity: Optional[jax.Array]      # (*mesh_dims, seg_words) u32
+    cksums: Optional[jax.Array]      # (*mesh_dims, n_blocks, 2) u32
+    digest: Optional[jax.Array]      # (*mesh_dims, 2) u32 whole-row digest
+    replica: Optional[PyTree]
+    log: Optional[redolog.RedoLog]
+    step: jax.Array                  # scalar u32, replicated
+
+    def tree_flatten(self):
+        return ((self.state, self.parity, self.cksums, self.digest,
+                 self.replica, self.log, self.step), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def tree_select(pred, on_true: PyTree, on_false: PyTree) -> PyTree:
+    return jax.tree.map(lambda t, f: jnp.where(pred, t, f), on_true, on_false)
+
+
+def _spec_leaf(x):
+    return isinstance(x, P)
+
+
+class Protector:
+    """Builds jitted, shard_map'd protection operations for one state layout."""
+
+    def __init__(self, mesh: Mesh, abstract_state: PyTree, state_specs: PyTree,
+                 *, data_axis: str = "data", mode: Mode = Mode.MLPC,
+                 block_words: int = layout_mod.PAGE_WORDS,
+                 hybrid_threshold: float = 0.5,
+                 log_capacity: int = 64):
+        self.mesh = mesh
+        self.mode = mode
+        self.data_axis = data_axis
+        self.axis_names = tuple(mesh.axis_names)
+        self.n_axes = len(self.axis_names)
+        self.group_size = mesh.shape[data_axis]
+        self.hybrid_threshold = hybrid_threshold
+        self.log_capacity = log_capacity
+        self.state_specs = state_specs
+
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), state_specs, is_leaf=_spec_leaf)
+        self.layout = layout_mod.build_layout(
+            abstract_state, self.group_size, shardings,
+            block_words=block_words)
+
+        self._zone_spec = P(*self.axis_names)
+        self._mesh_dims = tuple(mesh.shape[a] for a in self.axis_names)
+        self._jit_cache: dict = {}
+
+    # -- sharding helpers -----------------------------------------------------
+
+    def parity_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self._zone_spec)
+
+    def abstract_protected(self, abstract_state: PyTree) -> ProtectedState:
+        """ShapeDtypeStruct ProtectedState (dry-run: no allocation)."""
+        lo, mode = self.layout, self.mode
+        zdims = self._mesh_dims
+
+        def sds(shape, dtype=U32):
+            return jax.ShapeDtypeStruct(shape, dtype)
+
+        parity = sds(zdims + (lo.seg_words,)) if mode.has_parity else None
+        cksums = sds(zdims + (lo.n_blocks, 2)) if mode.has_cksums else None
+        dig = (sds(zdims + (2,))
+               if (mode.has_parity or mode.has_cksums) else None)
+        replica = (jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), abstract_state)
+            if mode.has_replica else None)
+        log = (jax.eval_shape(lambda: redolog.make(self.log_capacity))
+               if mode.has_log else None)
+        return ProtectedState(state=abstract_state, parity=parity,
+                              cksums=cksums, digest=dig, replica=replica,
+                              log=log, step=sds((), U32))
+
+    def protected_specs(self) -> ProtectedState:
+        """PartitionSpec tree matching ProtectedState."""
+        mode = self.mode
+        z = self._zone_spec
+        log = (jax.tree.map(lambda _: P(),
+                            jax.eval_shape(lambda: redolog.make(
+                                self.log_capacity)))
+               if mode.has_log else None)
+        return ProtectedState(
+            state=self.state_specs,
+            parity=z if mode.has_parity else None,
+            cksums=z if mode.has_cksums else None,
+            digest=z if (mode.has_parity or mode.has_cksums) else None,
+            replica=self.state_specs if mode.has_replica else None,
+            log=log, step=P())
+
+    def _pack(self, x: jax.Array) -> jax.Array:
+        """Local per-rank value -> shard_map output layout (leading 1s)."""
+        return x.reshape((1,) * self.n_axes + x.shape)
+
+    def _unpack(self, x: jax.Array) -> jax.Array:
+        return x.reshape(x.shape[self.n_axes:])
+
+    def _smap(self, f, in_specs, out_specs):
+        return shard_map(f, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+    # -- init ------------------------------------------------------------------
+
+    def init(self, state: PyTree, *, jit: bool = True) -> ProtectedState:
+        lo, ax = self.layout, self.data_axis
+        mode = self.mode
+
+        def _init(state):
+            row = layout_mod.flatten_row(lo, state)
+            outs = {}
+            if mode.has_parity:
+                outs["parity"] = self._pack(parity_mod.build_parity(row, ax))
+            if mode.has_cksums:
+                outs["cksums"] = self._pack(
+                    ck.block_checksums(row, lo.block_words))
+            if mode.has_parity or mode.has_cksums:
+                outs["digest"] = self._pack(ck.digest(row, lo.block_words))
+            return outs
+
+        out_specs = {}
+        probe = {}
+        if mode.has_parity:
+            out_specs["parity"] = self._zone_spec
+        if mode.has_cksums:
+            out_specs["cksums"] = self._zone_spec
+        if mode.has_parity or mode.has_cksums:
+            out_specs["digest"] = self._zone_spec
+        fn = self._smap(_init, in_specs=(self.state_specs,),
+                        out_specs=out_specs)
+        if jit:
+            fn = jax.jit(fn)
+        outs = fn(state)
+        replica = jax.tree.map(jnp.copy, state) if mode.has_replica else None
+        log = redolog.make(self.log_capacity) if mode.has_log else None
+        return ProtectedState(
+            state=state, parity=outs.get("parity"), cksums=outs.get("cksums"),
+            digest=outs.get("digest"), replica=replica, log=log,
+            step=jnp.zeros((), U32))
+
+    # -- commit ------------------------------------------------------------------
+
+    def make_commit(self, dirty_pages: Optional[Sequence[int]] = None,
+                    verify_old: bool = False):
+        """Build the jitted commit function.
+
+        `dirty_pages`: static page-index list when the update's footprint is
+        known (decode-time KV appends); None = whole state dirty (train).
+        `verify_old`: verify the old row's checksums before committing (the
+        paper's verify-at-micro-buffer-open), abort on mismatch.
+        """
+        lo, ax, mode = self.layout, self.data_axis, self.mode
+        thresh = self.hybrid_threshold
+
+        def _protect(state_old, parity, cksums, state_new, canary_ok):
+            parity_l = self._unpack(parity) if parity is not None else None
+            cksums_l = self._unpack(cksums) if cksums is not None else None
+            row_new = layout_mod.flatten_row(lo, state_new)
+            ok = canary_ok
+            row_old = None
+            if mode.has_parity or verify_old:
+                row_old = layout_mod.flatten_row(lo, state_old)
+            if verify_old and cksums_l is not None:
+                bad = ck.verify_blocks(row_old, cksums_l, lo.block_words)
+                ok = jnp.logical_and(ok, jnp.logical_not(jnp.any(bad)))
+                ok = lax.pmin(ok.astype(jnp.int32), ax) > 0
+            outs = {"ok": ok}
+            if mode.has_parity:
+                new_parity = parity_mod.hybrid_update(
+                    row_old, row_new, parity_l, lo, ax,
+                    dirty_page_idx=dirty_pages,
+                    threshold_fraction=thresh)
+                outs["parity"] = self._pack(
+                    jnp.where(ok, new_parity, parity_l))
+            if mode.has_cksums:
+                if dirty_pages is not None and (
+                        len(dirty_pages) < lo.n_blocks):
+                    idx = jnp.asarray(np.asarray(dirty_pages), jnp.int32)
+                    pages = parity_mod.gather_pages(row_new, idx,
+                                                    lo.block_words)
+                    new_ck = ck.update_blocks(cksums_l, pages, idx,
+                                              lo.block_words)
+                else:
+                    new_ck = ck.block_checksums(row_new, lo.block_words)
+                outs["cksums"] = self._pack(jnp.where(ok, new_ck, cksums_l))
+                outs["digest"] = self._pack(
+                    ck.combine(new_ck, lo.block_words))
+            elif mode.has_parity:
+                outs["digest"] = self._pack(ck.digest(row_new, lo.block_words))
+            return outs
+
+        out_specs = {"ok": P()}
+        if mode.has_parity:
+            out_specs["parity"] = self._zone_spec
+            out_specs["digest"] = self._zone_spec
+        if mode.has_cksums:
+            out_specs["cksums"] = self._zone_spec
+            out_specs["digest"] = self._zone_spec
+        protect = self._smap(
+            _protect,
+            in_specs=(self.state_specs, self._zone_spec, self._zone_spec,
+                      self.state_specs, P()),
+            out_specs=out_specs)
+
+        def commit(prot: ProtectedState, state_new: PyTree, *,
+                   data_cursor=0, rng_key=None, canary_ok=True):
+            step = prot.step + U32(1)
+            canary_ok = jnp.asarray(canary_ok, bool)
+            log = prot.log
+            digest_for_log = jnp.zeros((2,), U32)
+            if mode.has_parity or mode.has_cksums:
+                outs = protect(prot.state, prot.parity, prot.cksums,
+                               state_new, canary_ok)
+                ok = outs["ok"]
+                new_parity = outs.get("parity", prot.parity)
+                new_cksums = outs.get("cksums", prot.cksums)
+                new_digest = outs.get("digest", prot.digest)
+                if new_digest is not None:
+                    digest_for_log = new_digest.reshape(-1, 2)[0]
+            else:
+                ok = canary_ok
+                new_parity, new_cksums, new_digest = (prot.parity,
+                                                      prot.cksums,
+                                                      prot.digest)
+            # paper ordering: log record (replicated) persists before object
+            # writes; the commit mark follows the protected update.
+            if mode.has_log:
+                if rng_key is None:
+                    rng_key = jax.random.PRNGKey(0)
+                log = redolog.append(prot.log, step, data_cursor, rng_key,
+                                     digest_for_log)
+                log = tree_select(ok, redolog.commit_mark(log, step), log)
+            new_state = tree_select(ok, state_new, prot.state)
+            replica = prot.replica
+            if mode.has_replica:
+                replica = tree_select(ok, jax.tree.map(jnp.copy, state_new),
+                                      prot.replica)
+            return ProtectedState(
+                state=new_state, parity=new_parity, cksums=new_cksums,
+                digest=new_digest, replica=replica, log=log,
+                step=jnp.where(ok, step, prot.step)), ok
+
+        return commit
+
+    def commit(self, prot, state_new, **kw):
+        key = ("commit", kw.pop("_dirty_key", None))
+        if key not in self._jit_cache:
+            self._jit_cache[key] = self.make_commit()
+        return self._jit_cache[key](prot, state_new, **kw)
+
+    # -- scrub -------------------------------------------------------------------
+
+    def make_scrub(self):
+        lo, ax = self.layout, self.data_axis
+        mode = self.mode
+
+        def _scrub(state, parity, cksums):
+            row = layout_mod.flatten_row(lo, state)
+            out = {}
+            if mode.has_cksums:
+                bad = ck.verify_blocks(row, self._unpack(cksums),
+                                       lo.block_words)
+                out["bad_pages"] = self._pack(bad)
+            if mode.has_parity:
+                out["parity_ok"] = parity_mod.verify_parity(
+                    row, self._unpack(parity), ax)
+            return out
+
+        out_specs = {}
+        if mode.has_cksums:
+            out_specs["bad_pages"] = self._zone_spec
+        if mode.has_parity:
+            out_specs["parity_ok"] = P()
+        fn = self._smap(_scrub, in_specs=(self.state_specs, self._zone_spec,
+                                          self._zone_spec),
+                        out_specs=out_specs)
+
+        def scrub(prot: ProtectedState):
+            return fn(prot.state, prot.parity, prot.cksums)
+
+        return scrub
+
+    def scrub(self, prot):
+        if "scrub" not in self._jit_cache:
+            self._jit_cache["scrub"] = jax.jit(self.make_scrub())
+        return self._jit_cache["scrub"](prot)
+
+    # -- recovery ------------------------------------------------------------------
+
+    def make_recover_rank(self):
+        """Online reconstruction of one lost data-rank's entire row."""
+        lo, ax = self.layout, self.data_axis
+        mode = self.mode
+
+        def _recover(state, parity, cksums, lost):
+            row = layout_mod.flatten_row(lo, state)
+            rebuilt = parity_mod.reconstruct_row(
+                row, self._unpack(parity), lost, ax)
+            me = lax.axis_index(ax)
+            row_out = jnp.where(me == lost, rebuilt, row)
+            out = {"state": layout_mod.unflatten_row(lo, row_out)}
+            if mode.has_cksums:
+                bad = ck.verify_blocks(row_out, self._unpack(cksums),
+                                       lo.block_words)
+                any_bad = lax.pmax(jnp.any(bad).astype(jnp.int32), ax)
+                out["ok"] = any_bad == 0
+            else:
+                out["ok"] = jnp.asarray(True)
+            return out
+
+        out_specs = {"state": self.state_specs, "ok": P()}
+        fn = self._smap(_recover,
+                        in_specs=(self.state_specs, self._zone_spec,
+                                  self._zone_spec, P()),
+                        out_specs=out_specs)
+
+        def recover(prot: ProtectedState, lost_rank):
+            out = fn(prot.state, prot.parity, prot.cksums,
+                     jnp.asarray(lost_rank, jnp.int32))
+            return dataclasses.replace(prot, state=out["state"]), out["ok"]
+
+        return recover
+
+    def recover_rank(self, prot, lost_rank):
+        if "recover" not in self._jit_cache:
+            self._jit_cache["recover"] = jax.jit(self.make_recover_rank())
+        return self._jit_cache["recover"](prot, lost_rank)
+
+    def make_repair_pages(self, n_pages: int):
+        """Targeted scribble repair: fix `n_pages` (rank, page) locations."""
+        lo, ax = self.layout, self.data_axis
+        mode = self.mode
+        bw = lo.block_words
+        pages_per_seg = lo.seg_words // bw
+
+        def _repair(state, parity, cksums, bad_rank, bad_page):
+            row = layout_mod.flatten_row(lo, state)
+            pages = parity_mod.page_view(row, bw)
+            me = lax.axis_index(ax)
+            mine_bad = (bad_rank == me)                      # (k,)
+            contents = pages[bad_page]                       # (k, bw)
+            contrib = jnp.where(mine_bad[:, None], 0, contents)
+            others = coll.xor_all_reduce(contrib, ax)        # (k, bw)
+            # broadcast each bad page's parity from its owner via XOR trick
+            owner = bad_page // pages_per_seg
+            local_idx = bad_page % pages_per_seg
+            seg_pages = parity.reshape(pages_per_seg, bw) if parity.ndim == 1 \
+                else self._unpack(parity).reshape(pages_per_seg, bw)
+            par_contrib = jnp.where((owner == me)[:, None],
+                                    seg_pages[local_idx], 0)
+            par_pages = coll.xor_all_reduce(par_contrib, ax)  # (k, bw)
+            fixed = others ^ par_pages
+            new_pages = jnp.where(mine_bad[:, None], fixed, contents)
+            row_out = pages.at[bad_page].set(new_pages).reshape(-1)
+            out = {"state": layout_mod.unflatten_row(lo, row_out)}
+            if mode.has_cksums:
+                bad = ck.verify_blocks(row_out, self._unpack(cksums), bw)
+                any_bad = lax.pmax(jnp.any(bad).astype(jnp.int32), ax)
+                out["ok"] = any_bad == 0
+            else:
+                out["ok"] = jnp.asarray(True)
+            return out
+
+        fn = self._smap(_repair,
+                        in_specs=(self.state_specs, self._zone_spec,
+                                  self._zone_spec, P(), P()),
+                        out_specs={"state": self.state_specs, "ok": P()})
+
+        def repair(prot: ProtectedState, bad_rank, bad_page):
+            bad_rank = jnp.asarray(bad_rank, jnp.int32).reshape(n_pages)
+            bad_page = jnp.asarray(bad_page, jnp.int32).reshape(n_pages)
+            out = fn(prot.state, prot.parity, prot.cksums, bad_rank, bad_page)
+            return dataclasses.replace(prot, state=out["state"]), out["ok"]
+
+        return repair
+
+    def repair_pages(self, prot, bad_rank, bad_page):
+        n = int(np.asarray(bad_rank).size)
+        key = ("repair", n)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(self.make_repair_pages(n))
+        return self._jit_cache[key](prot, bad_rank, bad_page)
+
+    # -- introspection ---------------------------------------------------------
+
+    def overhead_report(self) -> dict:
+        rep = self.layout.overhead_report()
+        rep["mode"] = self.mode.value
+        rep["group_size"] = self.group_size
+        if self.mode.has_replica:
+            rep["protection_fraction"] = 1.0
+        else:
+            frac = 0.0
+            if self.mode.has_parity:
+                frac += rep["parity_fraction"]
+            if self.mode.has_cksums:
+                frac += rep["checksum_fraction"]
+            rep["protection_fraction"] = frac
+        return rep

@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticStream, batch_for  # noqa: F401

@@ -1,0 +1,60 @@
+"""Jit'd dispatch wrappers for the protection kernels.
+
+On TPU the Pallas kernels run natively; on CPU (this container, and the
+512-device dry-run) the pure-jnp oracles run instead — identical bit-level
+semantics, so tests and the dry-run exercise the same math the TPU kernels
+implement.  `interpret=True` forces the Pallas path in interpret mode (used
+by the kernel-vs-oracle tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import commit_fused as _fused
+from repro.kernels import fletcher as _fletcher
+from repro.kernels import ref as _ref
+from repro.kernels import xor_parity as _xor
+
+
+def _pallas_path(interpret: Optional[bool]) -> Optional[bool]:
+    """Returns interpret flag for the Pallas call, or None for the jnp ref."""
+    if interpret is not None:
+        return interpret            # forced by caller (tests)
+    if jax.default_backend() == "tpu":
+        return False                # native Mosaic lowering
+    return None                     # CPU: jnp oracle
+
+
+def fletcher_blocks(blocks: jax.Array, *, interpret: Optional[bool] = None
+                    ) -> jax.Array:
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fletcher_blocks_ref(blocks)
+    return _fletcher.fletcher_blocks(blocks, interpret=p)
+
+
+def xor_delta(old: jax.Array, new: jax.Array, *,
+              interpret: Optional[bool] = None) -> jax.Array:
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.xor_delta_ref(old, new)
+    return _xor.xor_delta(old, new, interpret=p)
+
+
+def xor_accum(parity: jax.Array, patch: jax.Array, *,
+              interpret: Optional[bool] = None) -> jax.Array:
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.xor_accum_ref(parity, patch)
+    return _xor.xor_accum(parity, patch, interpret=p)
+
+
+def fused_commit(old: jax.Array, new: jax.Array, *,
+                 interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_commit_ref(old, new)
+    return _fused.fused_commit(old, new, interpret=p)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the protection kernels.
+
+These define the semantics the Pallas kernels must match bit-for-bit; the
+kernel tests sweep shapes/dtypes and assert exact equality against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+def fletcher_blocks_ref(blocks: jax.Array) -> jax.Array:
+    """Per-block Fletcher-64 terms.  blocks: (n, bw) u32 -> (n, 2) u32.
+
+    A = sum_i w_i; B = sum_i (bw - i) * w_i, both mod 2^32 (wraparound).
+    """
+    assert blocks.dtype == U32
+    bw = blocks.shape[-1]
+    w = (U32(bw) - jnp.arange(bw, dtype=U32))[None, :]
+    a = jnp.sum(blocks, axis=-1, dtype=U32)
+    b = jnp.sum(blocks * w, axis=-1, dtype=U32)
+    return jnp.stack([a, b], axis=-1)
+
+
+def xor_delta_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Bitwise parity delta of two u32 buffers (any shape)."""
+    assert a.dtype == U32 and b.dtype == U32
+    return a ^ b
+
+
+def xor_accum_ref(parity: jax.Array, patch: jax.Array) -> jax.Array:
+    """Accumulate a patch into parity (the 'atomic XOR' application)."""
+    return parity ^ patch
+
+
+def fused_commit_ref(old: jax.Array, new: jax.Array):
+    """Fused commit pass: (delta, new-block checksums) in one logical sweep.
+
+    old/new: (n, bw) u32.  Returns (delta (n, bw), cksums (n, 2)).
+    The unfused baseline reads `new` twice (once for delta, once for
+    checksums); the fused kernel reads old+new exactly once.
+    """
+    return xor_delta_ref(old, new), fletcher_blocks_ref(new)

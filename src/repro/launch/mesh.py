@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* first init.
+
+Mesh axes:
+  single-pod:  (16, 16)        -> ("data", "model")     = 256 chips (v5e pod)
+  multi-pod:   (2, 16, 16)     -> ("pod", "data", "model") = 512 chips
+
+The "data" axis is the Pangolin zone axis (parity groups of G=16); "pod"
+carries cross-pod redo-log/metadata replication and (optionally) the
+compressed-gradient exchange.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def _mk(shape, axes) -> Mesh:
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_test_mesh(data: int = 4, model: int = 2, pod: int = 0) -> Mesh:
+    """Small mesh for CPU tests (requires forced host device count)."""
+    if pod:
+        return _mk((pod, data, model), ("pod", "data", "model"))
+    return _mk((data, model), ("data", "model"))
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    return mesh.shape["data"]

@@ -1,0 +1,72 @@
+"""Training launcher: `PYTHONPATH=src python -m repro.launch.train --arch <id>`.
+
+Runs the fault-tolerant training loop (runtime/trainer.py) for any
+registered architecture.  On real hardware the mesh comes from
+`jax.devices()` after `jax.distributed.initialize()`; on this container,
+`--host-devices N` forces N CPU host devices so the zone collectives run.
+Reduced configs (`--reduced`, default) train on CPU; full configs are for
+cluster use (the dry-run exercises them without allocation).
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--data", type=int, default=4, help="data-axis size")
+    ap.add_argument("--model", type=int, default=2, help="model-axis size")
+    ap.add_argument("--protect", default="mlpc",
+                    choices=["none", "ml", "mlp", "mlpc", "replica"])
+    ap.add_argument("--scrub-period", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--host-devices", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if "xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}")
+
+    import jax
+    from repro.configs.base import ProtectConfig, TrainConfig
+    from repro.configs.registry import get_config
+    from repro.runtime.trainer import Trainer
+
+    n_dev = len(jax.devices())
+    data = min(args.data, n_dev // args.model)
+    mesh = jax.make_mesh((data, args.model), ("data", "model"))
+    cfg = get_config(args.arch, reduced=args.reduced)
+    trainer = Trainer(
+        cfg,
+        TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                    microbatches=args.microbatches,
+                    optimizer=args.optimizer),
+        ProtectConfig(mode=args.protect, scrub_period=args.scrub_period),
+        mesh, seq_len=args.seq_len, global_batch=args.global_batch,
+        checkpoint_dir=args.ckpt_dir, seed=args.seed)
+    trainer.initialize()
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} protect={args.protect} "
+          f"overhead={trainer.protector.overhead_report()}")
+    outs = trainer.run(args.steps, checkpoint_every=args.ckpt_every)
+    for o in outs[:: max(args.steps // 10, 1)]:
+        print(f"step {o['step']:5d}  loss {o['loss']:.4f}")
+    print(f"final: step {outs[-1]['step']} loss {outs[-1]['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

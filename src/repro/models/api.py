@@ -1,0 +1,207 @@
+"""Public model API: param counting, step functions, dry-run input specs.
+
+`input_specs(cfg, workload, mesh)` returns ShapeDtypeStructs (+ shardings)
+for every model input of a workload cell — the dry-run lowers against these
+with zero allocation.  `make_train_step` / `make_decode_step` build the
+jittable step functions used by the trainer, the server, and the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, Workload
+from repro.dist import sharding as shd
+from repro.models import params as prm
+from repro.models.transformer import Model, build_model
+from repro.optim import Optimizer, clip_by_global_norm
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (for the 6ND roofline term)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    model = build_model(cfg)
+    defs = model.param_defs()
+    total = 0
+    for path, d in jax.tree.leaves_with_path(
+            defs, is_leaf=lambda x: isinstance(x, prm.ParamDef)):
+        n = int(np.prod(d.shape))
+        if active_only and cfg.moe is not None and "experts" in d.logical:
+            # only top_k of num_experts participate per token
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# input specs per workload (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_abstract(cfg: ModelConfig, wl: Workload) -> dict:
+    """Abstract batch for train/prefill workloads."""
+    B, S = wl.global_batch, wl.seq_len
+    batch = {"tokens": _sds((B, S - cfg.mm_positions), jnp.int32)}
+    if cfg.mm_positions:
+        batch["mm_embeds"] = _sds((B, cfg.mm_positions, cfg.d_model),
+                                  cfg.compute_dtype)
+    if cfg.enc_layers:
+        batch["src_embeds"] = _sds((B, S, cfg.d_model), cfg.compute_dtype)
+    return batch
+
+
+def batch_specs(cfg: ModelConfig, mesh, global_batch: int = 1 << 30) -> dict:
+    rules = cfg.logical_overrides
+    B = global_batch
+    specs = {"tokens": shd.spec_for(mesh, ("batch", None), (B, 1), rules)}
+    if cfg.mm_positions:
+        specs["mm_embeds"] = shd.spec_for(
+            mesh, ("batch", None, None), (B, 1, 1), rules)
+    if cfg.enc_layers:
+        specs["src_embeds"] = shd.spec_for(
+            mesh, ("batch", None, None), (B, 1, 1), rules)
+    return specs
+
+
+def decode_abstract(cfg: ModelConfig, wl: Workload, model: Model) -> dict:
+    """Abstract (token, cache, pos) for decode workloads."""
+    B, T = wl.global_batch, wl.seq_len
+    cache = jax.eval_shape(lambda: model._cache_defs(B, T))
+    return {"token": _sds((B,), jnp.int32), "cache": cache,
+            "pos": _sds((), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, wl: Workload, model: Model, mesh) -> dict:
+    return {
+        "token": shd.spec_for(mesh, ("batch",), (wl.global_batch,),
+                              cfg.logical_overrides),
+        "cache": model.cache_specs(wl.global_batch, wl.seq_len, mesh),
+        "pos": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# train / serve step builders
+# ---------------------------------------------------------------------------
+
+def init_train_state(model: Model, optimizer: Optimizer, key) -> dict:
+    params = model.init(key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model: Model, optimizer: Optimizer) -> dict:
+    params = prm.abstract_params(model.param_defs())
+    return jax.eval_shape(
+        lambda p: {"params": p, "opt": optimizer.init(p),
+                   "step": jnp.zeros((), jnp.int32)}, params)
+
+
+def train_state_specs(model: Model, optimizer: Optimizer, mesh) -> dict:
+    pspecs = model.param_specs(mesh)
+    return {"params": pspecs, "opt": optimizer.state_specs(pspecs),
+            "step": P()}
+
+
+def make_train_step(model: Model, optimizer: Optimizer, train_cfg,
+                    donate: bool = False):
+    """Returns train_step(state, batch) -> (new_state, metrics).
+
+    Supports microbatch gradient accumulation and per-example loss masks
+    (straggler mitigation drops slow replicas' examples via the mask).
+    """
+    nmb = train_cfg.microbatches
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        if "loss_mask" in batch:
+            # per-example weighting handled inside model.loss would need
+            # plumbing; re-weight the scalar instead for replica drops where
+            # the mask is constant within a replica's examples
+            w = jnp.mean(batch["loss_mask"].astype(jnp.float32))
+            loss = loss * w / jnp.maximum(w, 1e-9)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if nmb > 1:
+            def mb_body(carry, mb):
+                gacc, lacc = carry
+                loss, _, grads = single(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, grads)
+                return (gacc, lacc + loss), None
+
+            mb_batches = jax.tree.map(
+                lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(mb_body, (zeros, 0.0), mb_batches)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            loss = loss / nmb
+            metrics = {}
+        else:
+            loss, metrics, grads = single(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, train_cfg.grad_clip)
+        new_params, new_opt = optimizer.update(grads, state["opt"], params,
+                                               state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics or {}, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_forward(model: Model):
+    """Full-sequence forward: batch -> (B, S, V) logits (eval/scoring)."""
+    def forward(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+    return forward
+
+
+def make_prefill(model: Model):
+    """Serving prefill: batch -> next-token logits (B, V).
+
+    Slices the hidden state to the last position BEFORE the unembedding so
+    the (B, S, vocab) logits tensor never materializes — for seamless
+    (vocab 256k) that tensor alone is 33.5 GiB/device at 32k context.
+    """
+    def prefill(params, batch):
+        x, _ = model.hidden(params, batch)
+        from repro.models import layers as L
+        logits = L.apply_unembed(params["embed"], x[:, -1:, :], model.cfg)
+        return logits[:, 0]
+    return prefill
+
+
+def make_decode_step(model: Model, sample: str = "greedy"):
+    """serve_step: one new token against a full KV cache (decode cells)."""
+    def decode_step(params, token, cache, pos):
+        logits, cache = model.decode_step(params, token, cache, pos)
+        if sample == "greedy":
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return next_tok, logits, cache
+    return decode_step

@@ -1,0 +1,380 @@
+"""GQA attention: chunked (online-softmax) training path, KV-cache decode.
+
+The training/prefill path is a blockwise "flash"-style attention in pure
+JAX: a scan over KV chunks with an online-softmax carry keeps the score
+matrix working set at (q_chunk x kv_chunk) instead of S^2 — the memory
+roofline term for 32k prefill depends on it.  Decode attends one query
+against a linear or ring (sliding-window) cache.
+
+GQA: queries are grouped as (B, S, K, g, hd) with g = H // K so scores are
+computed against un-broadcast KV heads.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg, cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    defs = {
+        "wq": ParamDef((d, H, hd), cfg.param_dtype,
+                       ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, K, hd), cfg.param_dtype,
+                       ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, K, hd), cfg.param_dtype,
+                       ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, hd, d), cfg.param_dtype,
+                       ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = ParamDef((H, hd), cfg.param_dtype,
+                              ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((K, hd), cfg.param_dtype,
+                              ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = ParamDef((K, hd), cfg.param_dtype,
+                              ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        defs["qnorm"] = ParamDef((hd,), cfg.param_dtype, ("head_dim",),
+                                 init="ones")
+        defs["knorm"] = ParamDef((hd,), cfg.param_dtype, ("head_dim",),
+                                 init="ones")
+    return defs
+
+
+def _headnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def project_q(p: dict, x: jax.Array, cfg, positions, *, use_rope=True,
+              mesh=None):
+    dt = L.cdt(cfg)
+    wq = L.gather_fsdp(p["wq"].astype(dt), mesh,
+                       (None, "heads", "head_dim"))
+    q = jnp.einsum("...sd,dhk->...shk", x.astype(dt), wq,
+                   preferred_element_type=jnp.float32).astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    if "qnorm" in p:
+        q = _headnorm(q, p["qnorm"])
+    if use_rope:
+        q = L.rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def project_kv(p: dict, x: jax.Array, cfg, positions, *, use_rope=True,
+               mesh=None):
+    dt = L.cdt(cfg)
+    wk = L.gather_fsdp(p["wk"].astype(dt), mesh,
+                       (None, "kv_heads", "head_dim"))
+    wv = L.gather_fsdp(p["wv"].astype(dt), mesh,
+                       (None, "kv_heads", "head_dim"))
+    k = jnp.einsum("...sd,dhk->...shk", x.astype(dt), wk,
+                   preferred_element_type=jnp.float32).astype(dt)
+    v = jnp.einsum("...sd,dhk->...shk", x.astype(dt), wv,
+                   preferred_element_type=jnp.float32).astype(dt)
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if "knorm" in p:
+        k = _headnorm(k, p["knorm"])
+    if use_rope:
+        k = L.rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def apply_out(p: dict, attn: jax.Array, cfg, mesh=None) -> jax.Array:
+    dt = L.cdt(cfg)
+    wo = L.gather_fsdp(p["wo"].astype(dt), mesh,
+                       ("heads", "head_dim", None))
+    return jnp.einsum("...shk,hkd->...sd", attn.astype(dt), wo,
+                      preferred_element_type=jnp.float32).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (training / prefill)
+# ---------------------------------------------------------------------------
+#
+# The forward is a flash-style blockwise scan: the (qc x kc) score tile is
+# the only quadratic object and it lives in registers/VMEM, never HBM.  The
+# BACKWARD is a custom VJP that recomputes score tiles blockwise from
+# (q, k, v, lse) — without it, jax.grad of the nested scan stacks every
+# score tile as a residual ([nq, nk, B, K, g, qc, kc] f32: the full S^2
+# matrix re-materialized, ~15 GB/layer for 4k tokens), which defeats the
+# chunking entirely.  See EXPERIMENTS.md §Perf iteration 1.
+#
+# Block positions derive from the scan induction variable (not from
+# precomputed arange arrays), so the causal/window masks are computed
+# per-tile inside the loop; constant position inputs invite XLA's
+# loop-invariant code motion to hoist ALL tiles' masks into a carried
+# S^2-bool buffer.
+
+def _pick_chunk(s: int, target: int) -> int:
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _tile_specs(mesh, K: int, g: int, qc: int, kc: int, T: int = 1 << 30):
+    """Sharding hints for attention tiles on `mesh` (None = no hint).
+
+    GQA head counts rarely divide a 16-wide model axis, and the default
+    rule fallback then REPLICATES the whole attention computation across
+    it — a 16x waste of FLOPs and HBM traffic (EXPERIMENTS.md §Perf
+    iteration 2).  Preference order:
+      1. shard KV heads            (K % tp == 0: moonshot, seamless),
+      2. shard q-head groups       (g % tp == 0: glm4's g=16),
+      3. shard the q-tile rows     (sequence/context parallelism — always
+         divides since tiles are hardware-aligned).
+    Returns (q_axes, kv_axes, out_axes) logical-axis tuples for the
+    (nq, B, qc, K, g, hd) / (nk, B, kc, K, hd) / (nq, B, qc, H, hd)
+    stacked tile layouts.
+    """
+    if mesh is None:
+        return None, None, None
+    tp = dict(getattr(mesh, "shape", {})).get("model", 1)
+    if tp <= 1:
+        return None, None, None
+    if K % tp == 0:
+        return ((None, "batch", None, "kv_heads", None, None),
+                (None, "batch", None, "kv_heads", None),
+                (None, "batch", None, "kv_heads", None))
+    if (K * g) % tp == 0:
+        # H divides the model axis: GSPMD propagates the projection weights'
+        # head sharding into the tiles as a (K, g)-composite split on its
+        # own.  Hints here only fight it — a forced g-shard layout was tried
+        # and REFUTED (glm4 prefill: collective 3.3 s -> 24.1 s from per-
+        # layer resharding), and a forced seq-shard also lost (memory 67 s
+        # -> 120 s).  See EXPERIMENTS.md §Perf iteration 2.
+        return None, None, None
+    if qc % tp == 0:
+        # Context parallelism.  Costs: attention weight grads become
+        # partial sums over the model axis (all-reduced per microbatch x
+        # layer).  A "gate off below 16k context" variant was tried and
+        # REFUTED: replicated attention's memory term is far worse even at
+        # 4k (qwen2 train 2.95 s -> 18.7 s; llama4 train 65 s -> 165 s) —
+        # §Perf iteration 5.
+        return ((None, "batch", "seq_shard", None, None, None),
+                (None, "batch", None, None, None),
+                (None, "batch", "seq_shard", None, None))
+    return None, None, None
+
+
+def _hint(x, mesh, axes):
+    if mesh is None or axes is None:
+        return x
+    from repro.dist import sharding as shd
+    return shd.constrain(x, mesh, axes)
+
+
+def _tile_mask(causal: bool, window: Optional[int], qp, kp, qc: int, kc: int):
+    """(qc, kc) bool mask for a tile at query offset qp, key offset kp."""
+    qpos = qp + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    kpos = kp + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    mask = jnp.ones((qc, kc), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    return mask
+
+
+def _attend_fwd_impl(cfg, q, k, v):
+    """Returns (out, lse).  out: (B,S,H,hd); lse: (B,K,g,S) f32."""
+    causal, window, chunk, mesh = cfg
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qc = _pick_chunk(S, chunk)
+    kc = _pick_chunk(T, chunk)
+    nq, nk = S // qc, T // kc
+    q_axes, kv_axes, out_axes = _tile_specs(mesh, K, g, qc, kc, T)
+
+    qr = jnp.moveaxis(q.reshape(B, nq, qc, K, g, hd), 1, 0)
+    kr = jnp.moveaxis(k.reshape(B, nk, kc, K, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kc, K, hd), 1, 0)
+    qr = _hint(qr, mesh, q_axes)
+    kr = _hint(kr, mesh, kv_axes)
+    vr = _hint(vr, mesh, kv_axes)
+
+    def q_block(args):
+        qi, i = args                      # (B, qc, K, g, hd), scalar block id
+        m0 = jnp.full((B, K, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, g, qc), jnp.float32)
+        a0 = jnp.zeros((B, K, g, qc, hd), jnp.float32)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            kj, vj, j = inp
+            s = jnp.einsum("bqkgh,bckh->bkgqc", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(causal, window, i * qc, j * kc, qc, kc)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(qi.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = lax.scan(
+            body, (m0, l0, a0), (kr, vr, jnp.arange(nk)))
+        l_safe = jnp.maximum(l, 1e-30)
+        out = acc / l_safe[..., None]
+        lse = m + jnp.log(l_safe)                       # (B, K, g, qc)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, qc, H, hd)
+        return out.astype(q.dtype), lse
+
+    outs, lses = lax.map(q_block, (qr, jnp.arange(nq)))
+    outs = _hint(outs, mesh, out_axes)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+    # lses: (nq, B, K, g, qc) -> (B, K, g, S)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, K, g, S)
+    return out, lse
+
+
+def _attend_bwd_impl(cfg, res, dout):
+    """Flash backward: recompute score tiles; only lse was saved."""
+    causal, window, chunk, mesh = cfg
+    q, k, v, out, lse = res
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qc = _pick_chunk(S, chunk)
+    kc = _pick_chunk(T, chunk)
+    nq, nk = S // qc, T // kc
+    q_axes, kv_axes, _ = _tile_specs(mesh, K, g, qc, kc, T)
+
+    qr = jnp.moveaxis(q.reshape(B, nq, qc, K, g, hd), 1, 0)
+    kr = jnp.moveaxis(k.reshape(B, nk, kc, K, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kc, K, hd), 1, 0)
+    dor = jnp.moveaxis(dout.reshape(B, nq, qc, K, g, hd), 1, 0)
+    qr = _hint(qr, mesh, q_axes)
+    kr = _hint(kr, mesh, kv_axes)
+    vr = _hint(vr, mesh, kv_axes)
+    dor = _hint(dor, mesh, q_axes)
+    lser = jnp.moveaxis(lse.reshape(B, K, g, nq, qc), 3, 0)  # (nq,B,K,g,qc)
+    # D = rowsum(dout * out): (B, S, H) -> (nq, B, K, g, qc)
+    d_row = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)
+    d_row = jnp.moveaxis(
+        d_row.reshape(B, nq, qc, K, g), 1, 0).transpose(0, 1, 3, 4, 2)
+
+    def q_iter(carry, inp):
+        dk_acc, dv_acc = carry            # (nk, B, kc, K, hd) f32
+        qi, doi, lsei, di, i = inp
+
+        def kv_iter(dq_i, inp2):
+            kj, vj, j = inp2
+            s = jnp.einsum("bqkgh,bckh->bkgqc", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(causal, window, i * qc, j * kc, qc, kc)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lsei[..., None])            # (B,K,g,qc,kc) f32
+            dp = jnp.einsum("bqkgh,bckh->bkgqc", doi, vj,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - di[..., None]) * scale       # (B,K,g,qc,kc)
+            dq_t = jnp.einsum("bkgqc,bckh->bqkgh", ds.astype(kj.dtype), kj,
+                              preferred_element_type=jnp.float32)
+            dk_t = jnp.einsum("bkgqc,bqkgh->bckh", ds.astype(qi.dtype), qi,
+                              preferred_element_type=jnp.float32)
+            dv_t = jnp.einsum("bkgqc,bqkgh->bckh", p.astype(doi.dtype), doi,
+                              preferred_element_type=jnp.float32)
+            return dq_i + dq_t, (dk_t, dv_t)
+
+        dq0 = jnp.zeros((B, qc, K, g, hd), jnp.float32)
+        dq_i, (dks, dvs) = lax.scan(kv_iter, dq0, (kr, vr, jnp.arange(nk)))
+        return (dk_acc + dks, dv_acc + dvs), dq_i
+
+    zk = jnp.zeros((nk, B, kc, K, hd), jnp.float32)
+    (dk_f, dv_f), dqs = lax.scan(
+        q_iter, (zk, zk), (qr, dor, lser, d_row, jnp.arange(nq)))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, S, H, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dk_f, 0, 1).reshape(B, T, K, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dv_f, 0, 1).reshape(B, T, K, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _attend_cw(cfg, q, k, v):
+    out, _ = _attend_fwd_impl(cfg, q, k, v)
+    return out
+
+
+def _attend_cw_fwd(cfg, q, k, v):
+    out, lse = _attend_fwd_impl(cfg, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+_attend_cw.defvjp(_attend_cw_fwd, _attend_bwd_impl)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           causal: bool, window: Optional[int] = None,
+           chunk: int = 256, mesh=None) -> jax.Array:
+    """Blockwise attention.  q: (B,S,H,hd); k,v: (B,T,K,hd) -> (B,S,H,hd).
+
+    Query position i attends key position j under `causal` (j <= i) and
+    `window` (i - j < window); positions are block-index-derived (both
+    sequences start at position 0).  `mesh` enables tile sharding hints
+    (see `_tile_specs`).
+    """
+    return _attend_cw((causal, window, int(chunk), mesh), q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode (single query against a cache)
+# ---------------------------------------------------------------------------
+
+def attend_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                  slot_positions: jax.Array, pos: jax.Array, *,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: (B,1,H,hd); caches: (B,T,K,hd); slot_positions: (T,) true position
+    stored in each slot (-1 = empty).  Returns (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    T, K = k_cache.shape[1], k_cache.shape[2]
+    g = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, K, g, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (slot_positions >= 0) & (slot_positions <= pos)
+    if window is not None:
+        valid &= slot_positions > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p.astype(q.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cache_update(k_cache: jax.Array, v_cache: jax.Array,
+                 slot_positions: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array, pos: jax.Array, *,
+                 window: Optional[int] = None):
+    """Insert one step's k/v at the (possibly ring-buffer) slot for `pos`."""
+    T = k_cache.shape[1]
+    slot = (pos % T) if window is not None else pos
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k_new, slot, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v_new, slot, axis=1)
+    slot_positions = lax.dynamic_update_slice_in_dim(
+        slot_positions, pos[None].astype(slot_positions.dtype), slot, axis=0)
+    return k_cache, v_cache, slot_positions

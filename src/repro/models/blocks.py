@@ -1,0 +1,205 @@
+"""Block registry: one interface over all mixing/FFN layer families.
+
+Block types:
+  dense   — causal GQA attention + GLU MLP
+  moe     — causal GQA attention + routed-expert FFN
+  attn    — sliding-window attention + MLP (hybrid patterns)
+  rglru   — RG-LRU recurrence + MLP (RecurrentGemma)
+  mlstm   — xLSTM matrix-memory block (self-contained)
+  slstm   — xLSTM scalar-memory block (self-contained)
+  enc     — bidirectional attention + MLP (encoder stacks)
+  dec_x   — causal self-attention + cross-attention + MLP (decoder stacks)
+
+Each type provides defs / train / decode / cache-init so the model can scan
+over heterogeneous layer patterns with a single compiled group body.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+
+ATTN_TYPES = ("dense", "moe", "attn", "enc", "dec_x")
+
+
+def block_defs(cfg, btype: str) -> dict:
+    d = cfg.d_model
+    if btype in ATTN_TYPES:
+        defs = {
+            "ln1": L.rmsnorm_defs(d, cfg),
+            "attn": attn_mod.attn_defs(cfg),
+            "ln2": L.rmsnorm_defs(d, cfg),
+        }
+        if btype == "dec_x":
+            defs["lnx"] = L.rmsnorm_defs(d, cfg)
+            defs["xattn"] = attn_mod.attn_defs(cfg, cross=True)
+        if btype == "moe":
+            defs["ffn"] = moe_mod.moe_defs(cfg)
+        else:
+            defs["ffn"] = L.mlp_defs(d, cfg.d_ff, cfg)
+        return defs
+    if btype == "rglru":
+        return {
+            "ln1": L.rmsnorm_defs(d, cfg),
+            "rec": rglru_mod.rglru_defs(cfg),
+            "ln2": L.rmsnorm_defs(d, cfg),
+            "ffn": L.mlp_defs(d, cfg.d_ff, cfg),
+        }
+    if btype == "mlstm":
+        return {"cell": xlstm_mod.mlstm_defs(cfg)}
+    if btype == "slstm":
+        return {"cell": xlstm_mod.slstm_defs(cfg)}
+    raise ValueError(btype)
+
+
+def _window_for(cfg, btype: str) -> Optional[int]:
+    return cfg.window if btype == "attn" else None
+
+
+def apply_train(p: dict, btype: str, x: jax.Array, cfg, *,
+                positions: jax.Array, mesh=None, enc_out=None,
+                causal: bool = True):
+    """Full-sequence application.  Returns (x, aux_losses dict)."""
+    aux = {}
+    if btype in ATTN_TYPES:
+        h = L.apply_rmsnorm(p["ln1"], x)
+        q = attn_mod.project_q(p["attn"], h, cfg, positions)
+        k, v = attn_mod.project_kv(p["attn"], h, cfg, positions)
+        o = attn_mod.attend(q, k, v, causal=(causal and btype != "enc"),
+                            window=_window_for(cfg, btype), mesh=mesh)
+        x = x + attn_mod.apply_out(p["attn"], o, cfg).astype(x.dtype)
+        if btype == "dec_x":
+            hx = L.apply_rmsnorm(p["lnx"], x)
+            qx = attn_mod.project_q(p["xattn"], hx, cfg, positions,
+                                    use_rope=False)
+            src_pos = jnp.arange(enc_out.shape[1])
+            kx, vx = attn_mod.project_kv(p["xattn"], enc_out, cfg, src_pos,
+                                         use_rope=False)
+            ox = attn_mod.attend(qx, kx, vx, causal=False)
+            x = x + attn_mod.apply_out(p["xattn"], ox, cfg).astype(x.dtype)
+        h2 = L.apply_rmsnorm(p["ln2"], x)
+        if btype == "moe":
+            f, aux = moe_mod.apply_moe(p["ffn"], h2, cfg, mesh)
+        else:
+            f = L.apply_mlp(p["ffn"], h2, cfg)
+        x = x + f.astype(x.dtype)
+        return x, aux
+    if btype == "rglru":
+        h = L.apply_rmsnorm(p["ln1"], x)
+        x = x + rglru_mod.apply_train(p["rec"], h, cfg).astype(x.dtype)
+        h2 = L.apply_rmsnorm(p["ln2"], x)
+        x = x + L.apply_mlp(p["ffn"], h2, cfg).astype(x.dtype)
+        return x, aux
+    if btype == "mlstm":
+        return x + xlstm_mod.mlstm_apply_train(p["cell"], x, cfg
+                                               ).astype(x.dtype), aux
+    if btype == "slstm":
+        return x + xlstm_mod.slstm_apply_train(p["cell"], x, cfg
+                                               ).astype(x.dtype), aux
+    raise ValueError(btype)
+
+
+def init_cache(cfg, btype: str, batch: int, max_len: int) -> dict:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    K, hd = cfg.n_kv, cfg.hd
+    if btype in ATTN_TYPES:
+        t = max_len
+        w = _window_for(cfg, btype)
+        if w is not None:
+            t = min(t, w)
+        cache = {
+            "k": jnp.zeros((batch, t, K, hd), cdt),
+            "v": jnp.zeros((batch, t, K, hd), cdt),
+            "pos": jnp.full((t,), -1, jnp.int32),
+        }
+        return cache
+    if btype == "rglru":
+        return rglru_mod.init_cache(cfg, batch)
+    if btype == "mlstm":
+        return xlstm_mod.mlstm_init_state(cfg, batch)
+    if btype == "slstm":
+        return xlstm_mod.slstm_init_state(cfg, batch)
+    raise ValueError(btype)
+
+
+def cache_logical_axes(cfg, btype: str, tp: int = 1) -> dict:
+    """Logical axes for cache leaves.
+
+    Prefer sharding KV heads over the model axis; when the head count does
+    not divide it (extreme GQA: glm4 kv=2, llama4 kv=8 on a 16-way axis),
+    shard the cache's *sequence* dimension instead — decode attention then
+    reduces partial softmax terms across the model axis (GSPMD inserts the
+    collectives).
+    """
+    if btype in ATTN_TYPES:
+        if tp > 1 and cfg.n_kv % tp == 0:
+            kv, seq = "kv_heads", None
+        else:
+            kv, seq = None, "seq_shard"
+        return {"k": ("batch", seq, kv, "head_dim"),
+                "v": ("batch", seq, kv, "head_dim"),
+                "pos": (None,)}
+    if btype == "rglru":
+        return {"conv": ("batch", None, "rnn"), "h": ("batch", "rnn")}
+    if btype == "mlstm":
+        return {"C": ("batch", "heads", None, None),
+                "n": ("batch", "heads", None),
+                "m": ("batch", "heads"),
+                "conv": ("batch", None, "rnn")}
+    if btype == "slstm":
+        return {k: ("batch", "heads", "head_dim")
+                for k in ("c", "n", "h", "m")}
+    raise ValueError(btype)
+
+
+def apply_decode(p: dict, btype: str, x: jax.Array, cache: dict,
+                 pos: jax.Array, cfg, *, cross_cache: Optional[dict] = None):
+    """Single-token application.  x: (B, 1, D).  Returns (x, new_cache)."""
+    if btype in ATTN_TYPES:
+        h = L.apply_rmsnorm(p["ln1"], x)
+        positions = pos[None]
+        q = attn_mod.project_q(p["attn"], h, cfg, positions)
+        k, v = attn_mod.project_kv(p["attn"], h, cfg, positions)
+        w = _window_for(cfg, btype)
+        kc, vc, pc = attn_mod.cache_update(
+            cache["k"], cache["v"], cache["pos"], k, v, pos, window=w)
+        o = attn_mod.attend_decode(q, kc, vc, pc, pos, window=w)
+        x = x + attn_mod.apply_out(p["attn"], o, cfg).astype(x.dtype)
+        new_cache = {"k": kc, "v": vc, "pos": pc}
+        if btype == "dec_x":
+            hx = L.apply_rmsnorm(p["lnx"], x)
+            qx = attn_mod.project_q(p["xattn"], hx, cfg, positions,
+                                    use_rope=False)
+            src_len = cross_cache["k"].shape[1]
+            ox = attn_mod.attend_decode(
+                qx, cross_cache["k"], cross_cache["v"],
+                jnp.arange(src_len), jnp.asarray(src_len, jnp.int32))
+            x = x + attn_mod.apply_out(p["xattn"], ox, cfg).astype(x.dtype)
+        h2 = L.apply_rmsnorm(p["ln2"], x)
+        if btype == "moe":
+            f, _ = moe_mod.apply_moe(p["ffn"], h2, cfg)
+        else:
+            f = L.apply_mlp(p["ffn"], h2, cfg)
+        x = x + f.astype(x.dtype)
+        return x, new_cache
+    if btype == "rglru":
+        h = L.apply_rmsnorm(p["ln1"], x)
+        o, new_cache = rglru_mod.apply_decode(p["rec"], h, cache, cfg)
+        x = x + o.astype(x.dtype)
+        h2 = L.apply_rmsnorm(p["ln2"], x)
+        x = x + L.apply_mlp(p["ffn"], h2, cfg).astype(x.dtype)
+        return x, new_cache
+    if btype == "mlstm":
+        o, new_cache = xlstm_mod.mlstm_apply_decode(p["cell"], x, cache, cfg)
+        return x + o.astype(x.dtype), new_cache
+    if btype == "slstm":
+        o, new_cache = xlstm_mod.slstm_apply_decode(p["cell"], x, cache, cfg)
+        return x + o.astype(x.dtype), new_cache
+    raise ValueError(btype)

@@ -1,0 +1,137 @@
+"""Shared neural building blocks: norms, RoPE, GLU MLPs.
+
+Pure-functional: `*_defs(cfg)` declares parameters, `apply_*` consumes them.
+All matmuls run in cfg.compute_dtype with f32 accumulation via
+`preferred_element_type`; norms and softmax run in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+
+def cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def gather_fsdp(w: jax.Array, mesh, logical_axes) -> jax.Array:
+    """Explicit ZeRO-3 weight gather before use.
+
+    FSDP shards weights' contraction dims over the data axis for storage;
+    computing against a sharded contraction dim makes GSPMD emit partial-sum
+    all-reduces of *activations* (huge).  Constraining the weight to its
+    FSDP-free spec forces the cheap per-layer weight all-gather instead, and
+    autodiff's transpose turns it into a reduce-scatter of the weight grads
+    — the standard ZeRO-3 comm pattern.  No-op when mesh is None.
+    """
+    if mesh is None:
+        return w
+    from repro.dist import sharding as shd
+    return shd.constrain(w, mesh, logical_axes)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(d: int, cfg) -> dict:
+    return {"scale": ParamDef((d,), cfg.param_dtype, ("embed_nofsdp",),
+                              init="ones")}
+
+
+def apply_rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]  # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GLU MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d: int, ff: int, cfg) -> dict:
+    return {
+        "wi": ParamDef((d, ff), cfg.param_dtype, ("embed", "ffn")),
+        "wg": ParamDef((d, ff), cfg.param_dtype, ("embed", "ffn")),
+        "wo": ParamDef((ff, d), cfg.param_dtype, ("ffn", "embed")),
+    }
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg, mesh=None) -> jax.Array:
+    dt = cdt(cfg)
+    xd = x.astype(dt)
+    wi = gather_fsdp(p["wi"].astype(dt), mesh, (None, "ffn"))
+    wg = gather_fsdp(p["wg"].astype(dt), mesh, (None, "ffn"))
+    wo = gather_fsdp(p["wo"].astype(dt), mesh, ("ffn", None))
+    h = jnp.einsum("...d,df->...f", xd, wi,
+                   preferred_element_type=jnp.float32)
+    g = jnp.einsum("...d,df->...f", xd, wg,
+                   preferred_element_type=jnp.float32)
+    h = (_act(cfg.act)(g) * h).astype(dt)
+    out = jnp.einsum("...f,fd->...d", h, wo,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg) -> dict:
+    d = {"tok": ParamDef((cfg.vocab, cfg.d_model), cfg.param_dtype,
+                         ("vocab", "embed"), init="scaled", scale=0.02)}
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamDef((cfg.d_model, cfg.vocab), cfg.param_dtype,
+                                ("embed", "vocab"), init="scaled",
+                                scale=0.02)
+    return d
+
+
+def apply_embed(p: dict, tokens: jax.Array, cfg, mesh=None) -> jax.Array:
+    w = gather_fsdp(p["tok"].astype(cdt(cfg)), mesh, ("vocab", None))
+    return w[tokens]
+
+
+def apply_unembed(p: dict, x: jax.Array, cfg, mesh=None) -> jax.Array:
+    dt = cdt(cfg)
+    if "unembed" in p:
+        w = gather_fsdp(p["unembed"].astype(dt), mesh, (None, "vocab"))
+    else:
+        w = gather_fsdp(p["tok"].astype(dt), mesh, ("vocab", None)).T
+    return jnp.einsum("...d,dv->...v", x.astype(dt), w,
+                      preferred_element_type=jnp.float32)

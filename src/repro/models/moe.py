@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Top-k routing -> argsort token copies by expert -> capacity-bucketed
+(E, C, d) einsum -> unsort + gate-weighted combine.  Expert weights are
+sharded experts->model (EP) and d_model->data (FSDP); the (E, C, d) dispatch
+buffer is sharding-constrained onto the expert axis so GSPMD inserts the
+token all-to-all.  Dropped tokens (beyond capacity) route to a trash slot
+and contribute zeros, Switch-style.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+
+def moe_defs(cfg) -> dict:
+    m, d = cfg.moe, cfg.d_model
+    E, f = m.num_experts, m.d_expert
+    defs = {
+        "router": ParamDef((d, E), "float32", ("embed_nofsdp", "experts"),
+                           init="scaled", scale=0.02),
+        "wi": ParamDef((E, d, f), cfg.param_dtype,
+                       ("experts", "expert_in", "ffn")),
+        "wg": ParamDef((E, d, f), cfg.param_dtype,
+                       ("experts", "expert_in", "ffn")),
+        "wo": ParamDef((E, f, d), cfg.param_dtype,
+                       ("experts", "ffn", "expert_in")),
+    }
+    if m.shared_expert:
+        defs["shared"] = L.mlp_defs(d, f, cfg)
+    return defs
+
+
+def _n_groups(mesh, T: int) -> int:
+    """Routing groups = data shards: all sort/scatter index math stays
+    group-local so GSPMD keeps the dispatch batch-sharded.  A GLOBAL
+    argsort over (T*k,) forces replicated (T*k, D) dispatch buffers whose
+    f32 gradients are all-reduced — for moonshot train_4k that single
+    mistake was 6.4 GB per all-reduce and a 676 s collective term
+    (EXPERIMENTS.md §Perf iteration 4)."""
+    if mesh is None:
+        return 1
+    g = dict(getattr(mesh, "shape", {})).get("data", 1)
+    pod = dict(getattr(mesh, "shape", {})).get("pod", 1)
+    g *= pod
+    return g if T % g == 0 else 1
+
+
+def _route_group(xt, router, E, k, capacity, dt):
+    """Per-group routing: xt (Tg, D) -> dispatch buffer + combine indices."""
+    Tg, D = xt.shape
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (Tg, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_expert = expert_idx.reshape(Tg * k)
+    flat_gate = gate_vals.reshape(Tg * k)
+    order = jnp.argsort(flat_expert)                         # stable
+    sorted_expert = flat_expert[order]
+    src_token = order // k
+
+    seg_start = jnp.searchsorted(sorted_expert,
+                                 jnp.arange(E, dtype=sorted_expert.dtype))
+    pos_in_seg = jnp.arange(Tg * k) - seg_start[sorted_expert]
+    keep = pos_in_seg < capacity
+    slot = sorted_expert * capacity + jnp.minimum(pos_in_seg, capacity - 1)
+    slot = jnp.where(keep, slot, E * capacity)               # trash slot
+
+    # Dispatch as index inversion + row gather: the scatter runs on (E*C,)
+    # int32 indices only (no D width), and the D-wide data movement is a
+    # gather whose gradient is a unique-index scatter-add — GSPMD keeps
+    # both group-local.  (A D-wide scatter-set here costs ~4x in backward
+    # collectives from its duplicate/drop masking: §Perf iteration 4b.)
+    inv = jnp.full((E * capacity + 1,), Tg, jnp.int32)       # default: pad row
+    inv = inv.at[slot].set(src_token.astype(jnp.int32), mode="drop")
+    xt_ext = jnp.concatenate([xt.astype(dt), jnp.zeros((1, D), dt)], axis=0)
+    h = xt_ext[inv[:-1]].reshape(E, capacity, D)
+    return (h, slot, src_token, flat_gate, order, keep, probs, flat_expert,
+            logits)
+
+
+def _combine_group(y, slot, src_token, flat_gate, order, Tg, D, dt):
+    E_cap = y.shape[0] * y.shape[1]
+    y_flat = jnp.concatenate([y.reshape(E_cap, D),
+                              jnp.zeros((1, D), dt)], axis=0)
+    gathered = y_flat[slot]                                   # (Tg*k, D)
+    weighted = gathered * flat_gate[order][:, None].astype(dt)
+    return jnp.zeros((Tg, D), jnp.float32).at[src_token].add(
+        weighted.astype(jnp.float32))
+
+
+def apply_moe(p: dict, x: jax.Array, cfg, mesh=None):
+    """x: (B, S, D) -> (out (B, S, D), aux_losses dict)."""
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    B, S, D = x.shape
+    T = B * S
+    dt = L.cdt(cfg)
+    G = _n_groups(mesh, T)
+    Tg = T // G
+
+    capacity = int(math.ceil(Tg * k / E * m.capacity_factor))
+    capacity = max(capacity, 1)
+    if S == 1:
+        # decode: never drop a token (worst case: whole group -> one expert)
+        capacity = Tg
+
+    xg = x.reshape(G, Tg, D)
+    if mesh is not None:
+        xg = shd.constrain(xg, mesh, ("batch", None, None))
+
+    route = jax.vmap(
+        lambda xt: _route_group(xt, p["router"], E, k, capacity, dt))
+    (h, slot, src_token, flat_gate, order, keep, probs, flat_expert,
+     logits) = route(xg)
+    # h: (G, E, C, D) — group dim batch-sharded, expert dim model-sharded;
+    # the boundary reshard below IS the MoE token all-to-all.
+    if mesh is not None:
+        h = shd.constrain(h, mesh, ("batch", "experts", None, None))
+
+    # ZeRO-3: gather the FSDP (data-axis) shards of the expert weights
+    # before the einsums so GSPMD all-gathers weights rather than
+    # all-reducing (G, E, C, f) partials (see layers.gather_fsdp).
+    wi = L.gather_fsdp(p["wi"].astype(dt), mesh, ("experts", None, "ffn"))
+    wg = L.gather_fsdp(p["wg"].astype(dt), mesh, ("experts", None, "ffn"))
+    wo = L.gather_fsdp(p["wo"].astype(dt), mesh, ("experts", "ffn", None))
+    a = jnp.einsum("gecd,edf->gecf", h, wi,
+                   preferred_element_type=jnp.float32)
+    gt = jnp.einsum("gecd,edf->gecf", h, wg,
+                    preferred_element_type=jnp.float32)
+    y = jnp.einsum("gecf,efd->gecd", (jax.nn.silu(gt) * a).astype(dt), wo,
+                   preferred_element_type=jnp.float32).astype(dt)
+    if mesh is not None:
+        y = shd.constrain(y, mesh, ("batch", "experts", None, None))
+
+    combine = jax.vmap(
+        lambda yg, sl, st, fg, od: _combine_group(yg, sl, st, fg, od, Tg, D,
+                                                  dt))
+    out = combine(y, slot, src_token, flat_gate, order)       # (G, Tg, D) f32
+    if mesh is not None:
+        out = shd.constrain(out, mesh, ("batch", None, None))
+    out = out.astype(x.dtype).reshape(B, S, D)
+
+    if m.shared_expert:
+        out = out + L.apply_mlp(p["shared"], x, cfg)
+
+    # aux: Switch-style load-balance + router z-loss (group-averaged)
+    me = probs.reshape(G * Tg, E).mean(axis=0)                # (E,)
+    assign = jnp.zeros((E,), jnp.float32).at[flat_expert.reshape(-1)].add(
+        1.0) / (T * k)
+    aux = {
+        "load_balance": E * jnp.sum(me * assign),
+        "router_z": jnp.mean(
+            jax.scipy.special.logsumexp(logits, axis=-1) ** 2),
+        "dropped_fraction": 1.0 - keep.mean(),
+    }
+    return out, aux

@@ -1,0 +1,89 @@
+"""Declarative parameter definitions.
+
+Each module declares its parameters as `ParamDef`s (shape, dtype, logical
+axes, initializer).  From one definition tree we derive:
+
+  * initialized parameter pytrees (`init_params`),
+  * abstract ShapeDtypeStructs for the dry-run (`abstract_params`) — no
+    allocation,
+  * PartitionSpecs via the logical-axis rules (`spec_tree`).
+
+Layer stacks are declared once and `stacked` over a leading "layers" axis so
+the model scans over groups (one compiled layer body regardless of depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as shd
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    dtype: Any
+    logical: tuple                      # logical axis names, len == ndim
+    init: str = "normal"                # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def with_stack(self, n: int) -> "ParamDef":
+        return ParamDef(shape=(n,) + self.shape, dtype=self.dtype,
+                        logical=("layers",) + self.logical, init=self.init,
+                        scale=self.scale)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stacked(defs: PyTree, n: int) -> PyTree:
+    """Add a leading layer axis of size n to every ParamDef in the tree."""
+    return jax.tree.map(lambda d: d.with_stack(n), defs, is_leaf=_is_def)
+
+
+def abstract_params(defs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)), defs,
+        is_leaf=_is_def)
+
+
+def _init_one(d: ParamDef, key) -> jax.Array:
+    dt = jnp.dtype(d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "normal":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+        std = d.scale / math.sqrt(fan_in)
+        return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dt)
+    if d.init == "scaled":
+        return (jax.random.normal(key, d.shape, jnp.float32)
+                * d.scale).astype(dt)
+    raise ValueError(d.init)
+
+
+def init_params(defs: PyTree, key) -> PyTree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    return jax.tree.unflatten(
+        treedef, [_init_one(d, k) for d, k in zip(leaves, keys)])
+
+
+def spec_tree(defs: PyTree, mesh, rules: Optional[dict] = None) -> PyTree:
+    return jax.tree.map(
+        lambda d: shd.spec_for(mesh, d.logical, d.shape, rules), defs,
+        is_leaf=_is_def)
+
+
+def count(defs: PyTree) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(defs, is_leaf=_is_def))

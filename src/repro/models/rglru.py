@@ -1,0 +1,126 @@
+"""RecurrentGemma / Griffin recurrent block: causal conv + RG-LRU.
+
+The RG-LRU is a gated diagonal linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Lambda) * r_t),
+which trains with a parallel associative scan (log-depth on TPU) and decodes
+with an O(1) state update — this is what makes the 524k-token decode cell
+runnable for this family (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+C_FACTOR = 8.0
+CONV_WIDTH = 4
+
+
+def rglru_defs(cfg) -> dict:
+    d = cfg.d_model
+    dr = d  # recurrent width = d_model (Griffin-2B choice)
+    return {
+        "wg": ParamDef((d, dr), cfg.param_dtype, ("embed", "rnn")),
+        "wr": ParamDef((d, dr), cfg.param_dtype, ("embed", "rnn")),
+        "wo": ParamDef((dr, d), cfg.param_dtype, ("rnn", "embed")),
+        "conv_w": ParamDef((CONV_WIDTH, dr), cfg.param_dtype,
+                           ("conv", "rnn"), init="scaled", scale=0.1),
+        "conv_b": ParamDef((dr,), cfg.param_dtype, ("rnn",), init="zeros"),
+        # per-channel gate projections (diagonal+bias, Griffin block-diag
+        # simplified to channelwise)
+        "wa": ParamDef((dr,), cfg.param_dtype, ("rnn",), init="scaled",
+                       scale=0.5),
+        "ba": ParamDef((dr,), cfg.param_dtype, ("rnn",), init="zeros"),
+        "wx": ParamDef((dr,), cfg.param_dtype, ("rnn",), init="scaled",
+                       scale=0.5),
+        "bx": ParamDef((dr,), cfg.param_dtype, ("rnn",), init="zeros"),
+        "lam": ParamDef((dr,), "float32", ("rnn",), init="scaled",
+                        scale=0.2),
+    }
+
+
+def _gates(p, u):
+    """u: (..., dr) conv output -> (a, gated_input) in f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["wa"].astype(jnp.float32)
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * p["wx"].astype(jnp.float32)
+                       + p["bx"].astype(jnp.float32))
+    # softplus(lam - 4): initialized near 0.018 => a ~= exp(-0.14 r) in
+    # [0.87, 1.0), the paper's "slow decay at init" regime.
+    decay = C_FACTOR * jax.nn.softplus(p["lam"] - 4.0)
+    log_a = -decay * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def _conv_train(p, x):
+    """Causal depthwise conv, width 4.  x: (B, S, dr)."""
+    dt = x.dtype
+    w = p["conv_w"].astype(dt)
+    out = x * w[CONV_WIDTH - 1]
+    for i in range(1, CONV_WIDTH):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[CONV_WIDTH - 1 - i]
+    return out + p["conv_b"].astype(dt)
+
+
+def apply_train(p: dict, x: jax.Array, cfg, mesh=None) -> jax.Array:
+    dt = L.cdt(cfg)
+    xd = x.astype(dt)
+    wg_ = L.gather_fsdp(p["wg"].astype(dt), mesh, (None, "rnn"))
+    wr_ = L.gather_fsdp(p["wr"].astype(dt), mesh, (None, "rnn"))
+    gate = jax.nn.gelu(jnp.einsum(
+        "bsd,dr->bsr", xd, wg_,
+        preferred_element_type=jnp.float32)).astype(dt)
+    u = jnp.einsum("bsd,dr->bsr", xd, wr_,
+                   preferred_element_type=jnp.float32).astype(dt)
+    u = _conv_train(p, u)
+    a, b = _gates(p, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(dt)
+    wo_ = L.gather_fsdp(p["wo"].astype(dt), mesh, ("rnn", None))
+    out = jnp.einsum("bsr,rd->bsd", gate * h, wo_,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_cache(cfg, batch: int) -> dict:
+    dr = cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, dr), jnp.dtype(cfg.compute_dtype)),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+    }
+
+
+def apply_decode(p: dict, x: jax.Array, cache: dict, cfg, mesh=None):
+    """x: (B, 1, D) -> (out (B, 1, D), new cache).  O(1) per step."""
+    dt = L.cdt(cfg)
+    xd = x.astype(dt)
+    gate = jax.nn.gelu(jnp.einsum(
+        "bsd,dr->bsr", xd, p["wg"].astype(dt),
+        preferred_element_type=jnp.float32)).astype(dt)
+    u = jnp.einsum("bsd,dr->bsr", xd, p["wr"].astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)[:, 0]
+    # conv over [cache, u]
+    w = p["conv_w"].astype(dt)
+    hist = jnp.concatenate([cache["conv"], u[:, None]], axis=1)  # (B, 4, dr)
+    u_conv = jnp.einsum("bwr,wr->br", hist, w) + p["conv_b"].astype(dt)
+    a, b = _gates(p, u_conv)
+    h = a * cache["h"] + b
+    out = jnp.einsum("bsr,rd->bsd", (gate[:, 0] * h.astype(dt))[:, None],
+                     p["wo"].astype(dt),
+                     preferred_element_type=jnp.float32)
+    new_cache = {"conv": hist[:, 1:], "h": h}
+    return out.astype(x.dtype), new_cache

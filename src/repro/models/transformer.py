@@ -1,0 +1,393 @@
+"""Model assembly: decoder-only LMs and encoder-decoder over the block registry.
+
+Layers are grouped by the config's block pattern and *scanned*: parameters
+of each pattern position are stacked over a leading "layers" axis, so the
+compiled program contains one group body regardless of depth (48-layer
+llama4 compiles the same body as 24-layer seamless).  Remat wraps the group
+body.  Any `n_layers % len(pattern)` tail runs unrolled.
+
+Entry points (used by runtime / launch / dryrun):
+    init(key)                      -> params
+    forward(params, batch)         -> logits          (train fwd & prefill)
+    loss(params, batch)            -> (scalar, metrics)
+    init_cache(batch, max_len)     -> cache pytree
+    decode_step(params, tok, cache, pos [, cross]) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import params as prm
+
+PyTree = Any
+
+
+class Model:
+    """Decoder-only LM (also hosts the hybrid/ssm families)."""
+
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.pattern = cfg.pattern
+        self.n_groups = cfg.n_groups
+        self.tail = cfg.tail_pattern
+
+    # -- parameter definitions -------------------------------------------------
+
+    def param_defs(self) -> PyTree:
+        cfg = self.cfg
+        group = {f"b{j}_{t}": B.block_defs(cfg, t)
+                 for j, t in enumerate(self.pattern)}
+        defs = {
+            "embed": L.embed_defs(cfg),
+            "groups": prm.stacked(group, self.n_groups),
+            "final_norm": L.rmsnorm_defs(cfg.d_model, cfg),
+        }
+        for i, t in enumerate(self.tail):
+            defs[f"tail{i}_{t}"] = B.block_defs(cfg, t)
+        return defs
+
+    def abstract_params(self) -> PyTree:
+        return prm.abstract_params(self.param_defs())
+
+    def param_specs(self, mesh=None) -> PyTree:
+        return prm.spec_tree(self.param_defs(), mesh or self.mesh,
+                             self.cfg.logical_overrides)
+
+    def init(self, key) -> PyTree:
+        return prm.init_params(self.param_defs(), key)
+
+    # -- embedding of (tokens, optional multimodal stub embeds) ---------------
+
+    def _embed_inputs(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        x = L.apply_embed(params["embed"], batch["tokens"], cfg)
+        if cfg.mm_positions:
+            mm = batch["mm_embeds"].astype(x.dtype)
+            x = jnp.concatenate([mm, x], axis=1)
+        return x
+
+    # -- full-sequence forward (training fwd / serving prefill) ----------------
+
+    def hidden(self, params, batch) -> tuple:
+        """Backbone output before unembedding: (x (B,S,D), aux_total)."""
+        cfg, mesh = self.cfg, self.mesh
+        x = self._embed_inputs(params, batch)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        if mesh is not None:
+            x = shd.constrain(x, mesh, ("batch", None, None))
+
+        def group_body(x, gp):
+            aux_total = jnp.zeros((), jnp.float32)
+            for j, t in enumerate(self.pattern):
+                x, aux = B.apply_train(gp[f"b{j}_{t}"], t, x, cfg,
+                                       positions=positions, mesh=mesh)
+                for k in ("load_balance", "router_z"):
+                    if k in aux:
+                        aux_total = aux_total + aux[k]
+            if mesh is not None:
+                x = shd.constrain(x, mesh, ("batch", None, None))
+            return x, aux_total
+
+        body = jax.checkpoint(group_body) if self.n_groups > 1 else group_body
+        x, auxs = lax.scan(body, x, params["groups"])
+        aux_total = jnp.sum(auxs)
+        for i, t in enumerate(self.tail):
+            x, aux = B.apply_train(params[f"tail{i}_{t}"], t, x, cfg,
+                                   positions=positions, mesh=mesh)
+            for k in ("load_balance", "router_z"):
+                if k in aux:
+                    aux_total = aux_total + aux[k]
+        x = L.apply_rmsnorm(params["final_norm"], x)
+        return x, aux_total
+
+    def forward(self, params, batch) -> tuple:
+        cfg, mesh = self.cfg, self.mesh
+        x, aux_total = self.hidden(params, batch)
+        logits = L.apply_unembed(params["embed"], x, cfg)
+        if mesh is not None:
+            logits = shd.constrain(logits, mesh, ("batch", None, "vocab"))
+        return logits, aux_total
+
+    def _chunked_ce(self, params, x, targets, valid) -> tuple:
+        """CE over seq chunks so full-vocab logits never materialize.
+
+        x: (B, S, D) hidden; targets: (B, S) ids; valid: (B, S) bool.
+        """
+        cfg, mesh = self.cfg, self.mesh
+        B_, S, D = x.shape
+        c = min(512, S)
+        while S % c:
+            c -= 1
+        nc = S // c
+        xs = (x.reshape(B_, nc, c, D).swapaxes(0, 1),
+              targets.reshape(B_, nc, c).swapaxes(0, 1),
+              valid.reshape(B_, nc, c).swapaxes(0, 1))
+
+        def body(carry, inp):
+            ce_sum, z_sum, n = carry
+            xc, tc, vc = inp
+            lg = L.apply_unembed(params["embed"], xc, cfg).astype(jnp.float32)
+            if mesh is not None:
+                lg = shd.constrain(lg, mesh, ("batch", None, "vocab"))
+            lse = jax.scipy.special.logsumexp(lg, axis=-1)
+            ll = jnp.take_along_axis(lg, tc[..., None], axis=-1)[..., 0]
+            vf = vc.astype(jnp.float32)
+            ce_sum = ce_sum + jnp.sum((lse - ll) * vf)
+            z_sum = z_sum + jnp.sum((lse ** 2) * vf)
+            return (ce_sum, z_sum, n + jnp.sum(vf)), None
+
+        (ce_sum, z_sum, n), _ = lax.scan(
+            body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), xs)
+        n = jnp.maximum(n, 1.0)
+        return ce_sum / n, z_sum / n
+
+    def loss(self, params, batch) -> tuple:
+        cfg = self.cfg
+        x, aux = self.hidden(params, batch)
+        # next-token CE on token positions (skip the mm stub prefix)
+        x = x[:, cfg.mm_positions:, :]
+        tokens = batch["tokens"]
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        valid = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], dtype=bool),
+             jnp.zeros_like(tokens[:, :1], dtype=bool)], axis=1)
+        ce, zterm = self._chunked_ce(params, x, targets, valid)
+        z_loss = 1e-4 * zterm
+        moe_coef = 0.01 if cfg.moe is not None else 0.0
+        total = ce + z_loss + moe_coef * aux
+        return total, {"ce": ce, "z_loss": z_loss, "aux": aux}
+
+    # -- decode -----------------------------------------------------------------
+
+    def _cache_defs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        group_cache = {f"b{j}_{t}": B.init_cache(cfg, t, batch, max_len)
+                       for j, t in enumerate(self.pattern)}
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.n_groups,) + x.shape),
+            group_cache)
+        tail = {f"tail{i}_{t}": B.init_cache(cfg, t, batch, max_len)
+                for i, t in enumerate(self.tail)}
+        return {"groups": stacked, **tail}
+
+    def init_cache(self, batch: int, max_len: int) -> PyTree:
+        return self._cache_defs(batch, max_len)
+
+    def cache_specs(self, batch: int, max_len: int, mesh=None) -> PyTree:
+        cfg = self.cfg
+        mesh = mesh or self.mesh
+        rules = cfg.logical_overrides
+        tp = dict(getattr(mesh, "shape", {})).get("model", 1)
+
+        def spec_of(btype, leafname, arr, stacked):
+            axes = B.cache_logical_axes(cfg, btype, tp)[leafname]
+            if stacked:
+                axes = ("layers",) + tuple(axes)
+            return shd.spec_for(mesh, axes, arr.shape, rules)
+
+        cache = jax.eval_shape(lambda: self._cache_defs(batch, max_len))
+        specs = {}
+        for key, sub in cache.items():
+            if key == "groups":
+                specs["groups"] = {
+                    bk: {ln: spec_of(bk.split("_", 1)[1], ln, arr, True)
+                         for ln, arr in leaves.items()}
+                    for bk, leaves in sub.items()}
+            else:
+                bt = key.split("_", 1)[1]
+                specs[key] = {ln: spec_of(bt, ln, arr, False)
+                              for ln, arr in sub.items()}
+        return specs
+
+    def decode_step(self, params, token, cache, pos):
+        """token: (B,) int32; pos: scalar int32.  Returns (logits, cache)."""
+        cfg, mesh = self.cfg, self.mesh
+        x = L.apply_embed(params["embed"], token[:, None], cfg)
+
+        def group_body(x, inp):
+            gp, gc = inp
+            new_gc = {}
+            for j, t in enumerate(self.pattern):
+                key = f"b{j}_{t}"
+                x, new_gc[key] = B.apply_decode(gp[key], t, x, gc[key],
+                                                pos, cfg)
+            return x, new_gc
+
+        x, new_group_caches = lax.scan(
+            group_body, x, (params["groups"], cache["groups"]))
+        new_cache = {"groups": new_group_caches}
+        for i, t in enumerate(self.tail):
+            key = f"tail{i}_{t}"
+            x, new_cache[key] = B.apply_decode(params[key], t, x,
+                                               cache[key], pos, cfg)
+        x = L.apply_rmsnorm(params["final_norm"], x)
+        logits = L.apply_unembed(params["embed"], x, cfg)[:, 0]
+        if mesh is not None:
+            logits = shd.constrain(logits, mesh, ("batch", "vocab"))
+        return logits, new_cache
+
+
+class EncDecModel(Model):
+    """Encoder-decoder (seamless-m4t backbone): stub-embedded source ->
+    bidirectional encoder; token target -> causal decoder w/ cross-attn."""
+
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        super().__init__(cfg, mesh)
+        self.enc_pattern = ("enc",)
+        self.n_enc_groups = cfg.enc_layers
+        self.pattern = ("dec_x",)
+        self.n_groups = cfg.n_layers
+        self.tail = ()
+
+    def param_defs(self) -> PyTree:
+        cfg = self.cfg
+        enc_group = {"b0_enc": B.block_defs(cfg, "enc")}
+        dec_group = {"b0_dec_x": B.block_defs(cfg, "dec_x")}
+        return {
+            "embed": L.embed_defs(cfg),
+            "enc_groups": prm.stacked(enc_group, self.n_enc_groups),
+            "enc_norm": L.rmsnorm_defs(cfg.d_model, cfg),
+            "groups": prm.stacked(dec_group, self.n_groups),
+            "final_norm": L.rmsnorm_defs(cfg.d_model, cfg),
+        }
+
+    def encode(self, params, src_embeds) -> jax.Array:
+        cfg, mesh = self.cfg, self.mesh
+        x = src_embeds.astype(jnp.dtype(cfg.compute_dtype))
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, gp):
+            x, _ = B.apply_train(gp["b0_enc"], "enc", x, cfg,
+                                 positions=positions, mesh=mesh,
+                                 causal=False)
+            if mesh is not None:
+                x = shd.constrain(x, mesh, ("batch", None, None))
+            return x, jnp.zeros((), jnp.float32)
+
+        body = jax.checkpoint(body) if self.n_enc_groups > 1 else body
+        x, _ = lax.scan(body, x, params["enc_groups"])
+        return L.apply_rmsnorm(params["enc_norm"], x)
+
+    def hidden(self, params, batch) -> tuple:
+        cfg, mesh = self.cfg, self.mesh
+        enc_out = self.encode(params, batch["src_embeds"])
+        x = L.apply_embed(params["embed"], batch["tokens"], cfg)
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, gp):
+            x, _ = B.apply_train(gp["b0_dec_x"], "dec_x", x, cfg,
+                                 positions=positions, mesh=mesh,
+                                 enc_out=enc_out)
+            if mesh is not None:
+                x = shd.constrain(x, mesh, ("batch", None, None))
+            return x, jnp.zeros((), jnp.float32)
+
+        body = jax.checkpoint(body) if self.n_groups > 1 else body
+        x, _ = lax.scan(body, x, params["groups"])
+        x = L.apply_rmsnorm(params["final_norm"], x)
+        return x, jnp.zeros((), jnp.float32)
+
+    def forward(self, params, batch) -> tuple:
+        x, aux = self.hidden(params, batch)
+        logits = L.apply_unembed(params["embed"], x, self.cfg)
+        return logits, aux
+
+    def loss(self, params, batch) -> tuple:
+        x, aux = self.hidden(params, batch)
+        tokens = batch["tokens"]
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        valid = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], dtype=bool),
+             jnp.zeros_like(tokens[:, :1], dtype=bool)], axis=1)
+        ce, zterm = self._chunked_ce(params, x, targets, valid)
+        z_loss = 1e-4 * zterm
+        return ce + z_loss, {"ce": ce, "z_loss": z_loss, "aux": aux}
+
+    def _cache_defs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        self_cache = {"b0_dec_x": B.init_cache(cfg, "dec_x", batch, max_len)}
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.n_groups,) + x.shape),
+            self_cache)
+        # cross K/V computed once from encoder output at prefill time
+        K, hd = cfg.n_kv, cfg.hd
+        cdt = jnp.dtype(cfg.compute_dtype)
+        cross = {
+            "k": jnp.zeros((self.n_groups, batch, max_len, K, hd), cdt),
+            "v": jnp.zeros((self.n_groups, batch, max_len, K, hd), cdt),
+        }
+        return {"groups": stacked, "cross": cross}
+
+    def cache_specs(self, batch: int, max_len: int, mesh=None) -> PyTree:
+        cfg = self.cfg
+        mesh = mesh or self.mesh
+        rules = cfg.logical_overrides
+        tp = dict(getattr(mesh, "shape", {})).get("model", 1)
+        axes = B.cache_logical_axes(cfg, "dec_x", tp)
+        cache = jax.eval_shape(lambda: self._cache_defs(batch, max_len))
+        specs = {}
+        specs["groups"] = {
+            bk: {ln: shd.spec_for(mesh, ("layers",) + tuple(axes[ln]),
+                                  arr.shape, rules)
+                 for ln, arr in leaves.items()}
+            for bk, leaves in cache["groups"].items()}
+        if tp > 1 and cfg.n_kv % tp == 0:
+            xkv, xseq = "kv_heads", None
+        else:
+            xkv, xseq = None, "seq_shard"
+        specs["cross"] = {
+            ln: shd.spec_for(mesh, ("layers", "batch", xseq, xkv,
+                                    "head_dim"), arr.shape, rules)
+            for ln, arr in cache["cross"].items()}
+        return specs
+
+    def build_cross_cache(self, params, enc_out):
+        """Project encoder output to per-layer cross K/V (prefill step)."""
+        cfg = self.cfg
+        src_pos = jnp.arange(enc_out.shape[1])
+
+        def body(_, gp):
+            from repro.models import attention as attn_mod
+            k, v = attn_mod.project_kv(gp["b0_dec_x"]["xattn"], enc_out,
+                                       cfg, src_pos, use_rope=False)
+            return None, {"k": k, "v": v}
+
+        _, cross = lax.scan(body, None, params["groups"])
+        return cross
+
+    def decode_step(self, params, token, cache, pos):
+        cfg = self.cfg
+        x = L.apply_embed(params["embed"], token[:, None], cfg)
+
+        def body(x, inp):
+            gp, gc, cross = inp
+            x, new_gc = B.apply_decode(gp["b0_dec_x"], "dec_x", x,
+                                       gc["b0_dec_x"], pos, cfg,
+                                       cross_cache=cross)
+            return x, {"b0_dec_x": new_gc}
+
+        x, new_gc = lax.scan(body, x,
+                             (params["groups"], cache["groups"],
+                              cache["cross"]))
+        x = L.apply_rmsnorm(params["final_norm"], x)
+        logits = L.apply_unembed(params["embed"], x, cfg)[:, 0]
+        return logits, {"groups": new_gc, "cross": cache["cross"]}
+
+
+def build_model(cfg: ModelConfig, mesh=None) -> Model:
+    if cfg.enc_layers > 0:
+        return EncDecModel(cfg, mesh)
+    return Model(cfg, mesh)

@@ -1,0 +1,326 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM trains/prefills with a *chunkwise* algorithm — intra-chunk quadratic
+attention-like compute + an inter-chunk recurrent (C, n, m) state — giving
+O(S * c) cost instead of O(S^2); decode is an O(1) state update (this is
+what makes the 524k decode cell runnable).  Exponential gating is
+stabilized with the running max-term m as in the xLSTM paper.
+
+sLSTM has genuine state-mixing recurrence (gates depend on h_{t-1}), so its
+training path is a lax.scan over time; xlstm-1.3b uses it for 1 block in 8.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+CONV_WIDTH = 4
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg) -> dict:
+    d = cfg.d_model
+    di = 2 * d                       # projection factor 2
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "norm": L.rmsnorm_defs(d, cfg),
+        "w_up": ParamDef((d, 2 * di), cfg.param_dtype, ("embed", "rnn")),
+        "w_down": ParamDef((di, d), cfg.param_dtype, ("rnn", "embed")),
+        "conv_w": ParamDef((CONV_WIDTH, di), cfg.param_dtype,
+                           ("conv", "rnn"), init="scaled", scale=0.1),
+        "conv_b": ParamDef((di,), cfg.param_dtype, ("rnn",), init="zeros"),
+        # block-diagonal per-head q/k/v.  The v projection's OUTPUT dim
+        # carries the "mlstm_dh" logical axis: v, C (on its value dim), and
+        # h_out then shard over the model axis even though the head count
+        # (4) cannot — the q/k side stays replicated, so the chunk
+        # recurrence needs no cross-shard reduction at all (the s and den
+        # terms contract only q/k dims).  See EXPERIMENTS.md §Perf iter. 3.
+        "wq": ParamDef((h, dh, dh), cfg.param_dtype,
+                       ("heads", "head_dim", None)),
+        "wk": ParamDef((h, dh, dh), cfg.param_dtype,
+                       ("heads", "head_dim", None)),
+        "wv": ParamDef((h, dh, dh), cfg.param_dtype,
+                       ("heads", "head_dim", "mlstm_dh")),
+        "w_if": ParamDef((di, 2 * h), cfg.param_dtype, ("rnn",  None),
+                         init="scaled", scale=0.02),
+        "b_if": ParamDef((2 * h,), "float32", (None,), init="zeros"),
+        "outnorm": ParamDef((di,), cfg.param_dtype, ("rnn",), init="ones"),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg, mesh=None):
+    """x: (B, S, D) -> q,k,v (B,S,H,dh), i,f logits (B,S,H), z gate (B,S,di)."""
+    dt = L.cdt(cfg)
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.n_heads
+    dh = di // h
+    xn = L.apply_rmsnorm(p["norm"], x)
+    w_up = L.gather_fsdp(p["w_up"].astype(dt), mesh, (None, "rnn"))
+    up = jnp.einsum("bsd,de->bse", xn.astype(dt), w_up,
+                    preferred_element_type=jnp.float32).astype(dt)
+    xin, z = up[..., :di], up[..., di:]
+    # causal conv + swish on the q/k source
+    w = p["conv_w"].astype(dt)
+    conv = xin * w[CONV_WIDTH - 1]
+    for i in range(1, CONV_WIDTH):
+        shifted = jnp.pad(xin, ((0, 0), (i, 0), (0, 0)))[:, :xin.shape[1]]
+        conv = conv + shifted * w[CONV_WIDTH - 1 - i]
+    conv = jax.nn.silu(conv + p["conv_b"].astype(dt))
+    ch = conv.reshape(*conv.shape[:-1], h, dh)
+    vh = xin.reshape(*xin.shape[:-1], h, dh)
+    q = jnp.einsum("bshe,hef->bshf", ch, p["wq"].astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+    k = jnp.einsum("bshe,hef->bshf", ch, p["wk"].astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+    v = jnp.einsum("bshe,hef->bshf", vh, p["wv"].astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+    i_f = jnp.einsum("bse,ef->bsf", conv, p["w_if"].astype(dt),
+                     preferred_element_type=jnp.float32) + p["b_if"]
+    i_log, f_log = i_f[..., :h], i_f[..., h:]       # (B, S, H) f32
+    return q, k, v, i_log, f_log, z
+
+
+def _mlstm_chunk_scan(q, k, v, i_log, f_log, state):
+    """Chunkwise mLSTM over one chunk per call, scanned over chunks.
+
+    q,k,v: (B, nc, c, H, dh); i_log/f_log: (B, nc, c, H) f32.
+    state: C (B,H,dh,dh), n (B,H,dh), m (B,H) f32.
+    Returns outputs (B, nc, c, H, dh) and final state.
+    """
+    B, nc, c, H, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+
+    def body(carry, inp):
+        C_in, n_in, m_in = carry
+        qc, kc, vc, il, fl = inp      # (B,c,H,dh)... (B,c,H)
+        logf = jax.nn.log_sigmoid(fl)                    # (B,c,H)
+        lc = jnp.cumsum(logf, axis=1)                    # inclusive
+        bmax = lax.cummax(il - lc, axis=1)               # running max of i - lc
+        m_j = lc + jnp.maximum(m_in[:, None, :], bmax)   # (B,c,H)
+        # intra-chunk decay matrix:  D_js = lc_j - lc_s + i_s - m_j, s <= j
+        djs = (lc[:, :, None, :] - lc[:, None, :, :]
+               + il[:, None, :, :] - m_j[:, :, None, :])  # (B,c,c,H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(tri[None, :, :, None], jnp.exp(djs), 0.0)
+        s = jnp.einsum("bjhd,bshd->bjsh", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        w = s * dmat                                      # (B,c,c,H)
+        num_intra = jnp.einsum("bjsh,bshd->bjhd", w, vc.astype(jnp.float32))
+        den_intra = jnp.sum(w, axis=2)                    # (B,c,H)
+        # inter-chunk: factor exp(lc_j + m_in - m_j)
+        inter = jnp.exp(lc + m_in[:, None, :] - m_j)      # (B,c,H)
+        qf = qc.astype(jnp.float32) * scale
+        num_inter = jnp.einsum("bjhd,bhde->bjhe", qf, C_in) * inter[..., None]
+        den_inter = jnp.einsum("bjhd,bhd->bjh", qf, n_in) * inter
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h_out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]
+        # state update to end of chunk
+        lc_end = lc[:, -1, :]                             # (B,H)
+        m_out = lc_end + jnp.maximum(m_in, bmax[:, -1, :])
+        carry_f = jnp.exp(lc_end + m_in - m_out)          # (B,H)
+        wgt = jnp.exp(lc_end[:, None, :] - lc + il - m_out[:, None, :])
+        C_out = (C_in * carry_f[..., None, None]
+                 + jnp.einsum("bsh,bshd,bshe->bhde", wgt,
+                              kc.astype(jnp.float32), vc.astype(jnp.float32)))
+        n_out = (n_in * carry_f[..., None]
+                 + jnp.einsum("bsh,bshd->bhd", wgt, kc.astype(jnp.float32)))
+        return (C_out, n_out, m_out), h_out
+
+    elems = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_log, f_log))
+    state, outs = lax.scan(body, state, elems)
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def mlstm_init_state(cfg, batch: int) -> dict:
+    di = 2 * cfg.d_model
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, di),
+                          jnp.dtype(cfg.compute_dtype)),
+    }
+
+
+def mlstm_apply_train(p: dict, x: jax.Array, cfg, mesh=None) -> jax.Array:
+    B, S, D = x.shape
+    di = 2 * D
+    h = cfg.n_heads
+    dh = di // h
+    q, k, v, il, fl, z = _mlstm_qkvif(p, x, cfg, mesh)
+    c = min(CHUNK, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    rs = lambda t: t.reshape(B, nc, c, *t.shape[2:])
+    state = {k2: v2 for k2, v2 in mlstm_init_state(cfg, B).items()
+             if k2 != "conv"}
+    outs, _ = _mlstm_chunk_scan(rs(q), rs(k), rs(v), rs(il), rs(fl),
+                                (state["C"], state["n"], state["m"]))
+    hout = outs.reshape(B, S, h, dh).reshape(B, S, di)
+    dt = L.cdt(cfg)
+    # per-channel group norm then output gate
+    hn = (hout * jax.lax.rsqrt(
+        jnp.mean(hout * hout, axis=-1, keepdims=True) + 1e-6)
+          * p["outnorm"].astype(jnp.float32))
+    gated = hn.astype(dt) * jax.nn.silu(z)
+    w_down = L.gather_fsdp(p["w_down"].astype(dt), mesh, ("rnn", None))
+    out = jnp.einsum("bse,ed->bsd", gated, w_down,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mlstm_apply_decode(p: dict, x: jax.Array, cache: dict, cfg, mesh=None):
+    """x: (B, 1, D); exact recurrent step (O(1) in sequence length)."""
+    B, _, D = x.shape
+    di = 2 * D
+    h = cfg.n_heads
+    dh = di // h
+    dt = L.cdt(cfg)
+    xn = L.apply_rmsnorm(p["norm"], x)
+    up = jnp.einsum("bsd,de->bse", xn.astype(dt), p["w_up"].astype(dt),
+                    preferred_element_type=jnp.float32).astype(dt)
+    xin, z = up[..., :di], up[..., di:]
+    hist = jnp.concatenate([cache["conv"], xin], axis=1)     # (B, 4, di)
+    w = p["conv_w"].astype(dt)
+    conv = jax.nn.silu(jnp.einsum("bwe,we->be", hist, w)
+                       + p["conv_b"].astype(dt))
+    ch = conv.reshape(B, h, dh)
+    vh = xin[:, 0].reshape(B, h, dh)
+    q = jnp.einsum("bhe,hef->bhf", ch, p["wq"].astype(dt),
+                   preferred_element_type=jnp.float32)
+    k = jnp.einsum("bhe,hef->bhf", ch, p["wk"].astype(dt),
+                   preferred_element_type=jnp.float32)
+    v = jnp.einsum("bhe,hef->bhf", vh, p["wv"].astype(dt),
+                   preferred_element_type=jnp.float32)
+    i_f = jnp.einsum("be,ef->bf", conv, p["w_if"].astype(dt),
+                     preferred_element_type=jnp.float32) + p["b_if"]
+    il, fl = i_f[..., :h], i_f[..., h:]                      # (B, h)
+    logf = jax.nn.log_sigmoid(fl)
+    m_new = jnp.maximum(logf + cache["m"], il)
+    i_p = jnp.exp(il - m_new)
+    f_p = jnp.exp(logf + cache["m"] - m_new)
+    C = (cache["C"] * f_p[..., None, None]
+         + i_p[..., None, None] * k[..., :, None] * v[..., None, :])
+    n = cache["n"] * f_p[..., None] + i_p[..., None] * k
+    qf = q * (1.0 / math.sqrt(dh))
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.einsum("bhd,bhd->bh", qf, n)
+    hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    hflat = hout.reshape(B, di)
+    hn = (hflat * jax.lax.rsqrt(
+        jnp.mean(hflat * hflat, axis=-1, keepdims=True) + 1e-6)
+          * p["outnorm"].astype(jnp.float32))
+    gated = hn.astype(dt) * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("be,ed->bd", gated, p["w_down"].astype(dt),
+                     preferred_element_type=jnp.float32)[:, None]
+    new_cache = {"C": C, "n": n, "m": m_new, "conv": hist[:, 1:]}
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    return {
+        "norm": L.rmsnorm_defs(d, cfg),
+        "w_in": ParamDef((d, 4, h, dh), cfg.param_dtype,
+                         ("embed", None, "heads", "head_dim")),
+        "r_h": ParamDef((h, dh, 4, dh), cfg.param_dtype,
+                        ("heads", "head_dim", None, "head_dim"),
+                        init="scaled", scale=0.02),
+        "bias": ParamDef((4, h, dh), "float32", (None, "heads", "head_dim"),
+                         init="zeros"),
+        "w_out": ParamDef((d, d), cfg.param_dtype, ("embed", "ffn")),
+        "outnorm": ParamDef((d,), cfg.param_dtype, ("embed_nofsdp",),
+                            init="ones"),
+    }
+
+
+def slstm_init_state(cfg, batch: int) -> dict:
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": z - 1e30}
+
+
+def _slstm_cell(p, gates_x, state):
+    """gates_x: (B, 4, h, dh) input contribution; state mixing via r_h."""
+    c, n, hs, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhd,hdge->bghe", hs, p["r_h"].astype(jnp.float32))
+    g = gates_x.astype(jnp.float32) + rec + p["bias"]
+    zt = jnp.tanh(g[:, 0])
+    il = g[:, 1]
+    fl = jax.nn.log_sigmoid(g[:, 2])
+    ot = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(fl + m, il)
+    i_p = jnp.exp(il - m_new)
+    f_p = jnp.exp(fl + m - m_new)
+    c_new = f_p * c + i_p * zt
+    n_new = f_p * n + i_p
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply_train(p: dict, x: jax.Array, cfg, mesh=None) -> jax.Array:
+    B, S, D = x.shape
+    h = cfg.n_heads
+    dh = D // h
+    dt = L.cdt(cfg)
+    xn = L.apply_rmsnorm(p["norm"], x)
+    w_in = L.gather_fsdp(p["w_in"].astype(dt), mesh,
+                         (None, None, "heads", "head_dim"))
+    gx = jnp.einsum("bsd,dghe->bsghe", xn.astype(dt),
+                    w_in,
+                    preferred_element_type=jnp.float32)   # (B,S,4,h,dh)
+
+    def body(state, g_t):
+        state = _slstm_cell(p, g_t, state)
+        return state, state["h"]
+
+    state0 = slstm_init_state(cfg, B)
+    _, hs = lax.scan(body, state0, jnp.moveaxis(gx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, D)          # f32
+    hn = (hs * jax.lax.rsqrt(jnp.mean(hs * hs, -1, keepdims=True) + 1e-6)
+          * p["outnorm"].astype(jnp.float32))
+    w_out = L.gather_fsdp(p["w_out"].astype(dt), mesh, (None, "ffn"))
+    out = jnp.einsum("bsd,de->bse", hn.astype(dt), w_out,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def slstm_apply_decode(p: dict, x: jax.Array, cache: dict, cfg, mesh=None):
+    B, _, D = x.shape
+    h = cfg.n_heads
+    dh = D // h
+    dt = L.cdt(cfg)
+    xn = L.apply_rmsnorm(p["norm"], x)
+    gx = jnp.einsum("bsd,dghe->bsghe", xn.astype(dt), p["w_in"].astype(dt),
+                    preferred_element_type=jnp.float32)[:, 0]
+    state = _slstm_cell(p, gx, cache)
+    hs = state["h"].reshape(B, D)
+    hn = (hs * jax.lax.rsqrt(jnp.mean(hs * hs, -1, keepdims=True) + 1e-6)
+          * p["outnorm"].astype(jnp.float32))
+    out = jnp.einsum("bd,de->be", hn.astype(dt), p["w_out"].astype(dt),
+                     preferred_element_type=jnp.float32)[:, None]
+    return out.astype(x.dtype), state

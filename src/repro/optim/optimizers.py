@@ -1,0 +1,164 @@
+"""Sharded functional optimizers: AdamW and Adafactor.
+
+Moments inherit the parameter's sharding (the Protector protects them as
+ordinary zone objects).  Dtype policy: `moment_dtype` lets very large models
+(llama4-400b) hold m/v in bf16 so total optimizer state fits HBM; the update
+math always runs in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]      # (grads, opt_state, params, step) -> (new_params, new_opt_state)
+    state_specs: Callable[[PyTree], PyTree]  # param specs -> opt-state specs
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float):
+    gsq = sum(jnp.sum(g.astype(jnp.float32) ** 2)
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          moment_dtype: Optional[str] = None) -> Optimizer:
+    def init(params):
+        def zeros_like_m(p):
+            dt = jnp.dtype(moment_dtype) if moment_dtype else p.dtype
+            return jnp.zeros(p.shape, dt)
+        return {"m": jax.tree.map(zeros_like_m, params),
+                "v": jax.tree.map(zeros_like_m, params)}
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_fn(stepf)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / bc1
+            vhat = vf / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    def state_specs(param_specs):
+        return {"m": param_specs, "v": param_specs}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def adafactor(lr_fn, eps: float = 1e-30, decay: float = 0.8,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second moments: O(n+m) state for an (n, m) matrix — the
+    memory-efficient option for the 400B-class configs."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def mk(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(mk, params)
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_fn(stepf)
+        beta = 1.0 - stepf ** (-decay)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None],
+                                       eps))
+                upd_ = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd_ = gf * jax.lax.rsqrt(jnp.maximum(v, eps))
+                news = {"v": v}
+            # update clipping (RMS <= 1), Adafactor-style
+            rms = jnp.sqrt(jnp.mean(upd_ ** 2))
+            upd_ = upd_ / jnp.maximum(1.0, rms)
+            newp = (p.astype(jnp.float32) - lr *
+                    (upd_ + weight_decay * p.astype(jnp.float32)))
+            return newp.astype(p.dtype), news
+
+        out = jax.tree.map(upd, grads, state, params,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and ("v" in x or "vr" in x))
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda t: t[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_state
+
+    def state_specs(param_specs):
+        # factored moments drop the last / second-to-last axis of the spec
+        from jax.sharding import PartitionSpec as P
+
+        def mk(spec):
+            parts = tuple(spec)
+            if len(parts) >= 2:
+                return {"vr": P(*parts[:-1]),
+                        "vc": P(*(parts[:-2] + parts[-1:]))}
+            return {"v": spec}
+        return jax.tree.map(mk, param_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def build_optimizer(train_cfg, model_cfg) -> Optimizer:
+    lr_fn = cosine_schedule(train_cfg.learning_rate, train_cfg.warmup_steps,
+                            train_cfg.total_steps)
+    if train_cfg.optimizer == "adafactor":
+        return adafactor(lr_fn, weight_decay=train_cfg.weight_decay)
+    return adamw(lr_fn, b1=train_cfg.b1, b2=train_cfg.b2, eps=train_cfg.eps,
+                 weight_decay=train_cfg.weight_decay,
+                 moment_dtype=model_cfg.moment_dtype)

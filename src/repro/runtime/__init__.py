@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer  # noqa: F401
+from repro.runtime.server import Server  # noqa: F401
+from repro.runtime import failure  # noqa: F401

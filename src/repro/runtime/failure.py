@@ -1,0 +1,90 @@
+"""Failure injection (Pangolin §4.6).
+
+The paper emulates NVMM media errors with mprotect+SIGSEGV and injects
+targeted scribbles.  Here:
+
+  * `inject_rank_loss`   — garbles one data-rank's entire state shard
+    (chip/host failure, HBM UE).  The "SIGBUS" analogue is the returned
+    FailureEvent the runtime feeds to recovery.
+  * `inject_scribble`    — XORs a corruption mask into chosen words of one
+    rank's flat row (SDC / wild-store analogue), invisible until a checksum
+    verification catches it.
+  * `inject_canary_smash`— simulates a kernel overrun into a staged
+    micro-buffer's guard page (caught at commit, before state is touched).
+
+All injections are jitted shard_map ops against the protected state so they
+work at any mesh size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import layout as layout_mod
+from repro.core import microbuffer
+from repro.core.txn import ProtectedState, Protector
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    kind: str                  # "rank_loss" | "scribble" | "canary"
+    lost_rank: Optional[int] = None
+    locations: Optional[list] = None   # [(rank, page)] for scribbles
+
+
+def inject_rank_loss(protector: Protector, prot: ProtectedState,
+                     rank: int) -> tuple:
+    """Overwrite one data-rank's shards with garbage; returns (prot, event)."""
+    lo, ax = protector.layout, protector.data_axis
+
+    def _garble(state):
+        row = layout_mod.flatten_row(lo, state)
+        me = lax.axis_index(ax)
+        garbage = row ^ jnp.uint32(0xA5A5A5A5)
+        out = jnp.where(me == rank, garbage, row)
+        return layout_mod.unflatten_row(lo, out)
+
+    fn = jax.jit(shard_map(_garble, mesh=protector.mesh,
+                           in_specs=(protector.state_specs,),
+                           out_specs=protector.state_specs,
+                           check_vma=False))
+    bad_state = fn(prot.state)
+    return (dataclasses.replace(prot, state=bad_state),
+            FailureEvent("rank_loss", lost_rank=rank))
+
+
+def inject_scribble(protector: Protector, prot: ProtectedState,
+                    rank: int, word_offsets: Sequence[int],
+                    xor_mask: int = 0x00010000) -> tuple:
+    """Flip bits at given word offsets of one rank's row (silent until scrub)."""
+    lo, ax = protector.layout, protector.data_axis
+    offsets = jnp.asarray(list(word_offsets), jnp.int32)
+
+    def _scribble(state):
+        row = layout_mod.flatten_row(lo, state)
+        me = lax.axis_index(ax)
+        vals = row[offsets] ^ jnp.uint32(xor_mask)
+        scribbled = row.at[offsets].set(vals)
+        out = jnp.where(me == rank, scribbled, row)
+        return layout_mod.unflatten_row(lo, out)
+
+    fn = jax.jit(shard_map(_scribble, mesh=protector.mesh,
+                           in_specs=(protector.state_specs,),
+                           out_specs=protector.state_specs,
+                           check_vma=False))
+    bad_state = fn(prot.state)
+    pages = sorted({int(o) // lo.block_words for o in word_offsets})
+    return (dataclasses.replace(prot, state=bad_state),
+            FailureEvent("scribble", locations=[(rank, p) for p in pages]))
+
+
+def smashed_canary_buffer(n_words: int = 4096) -> jax.Array:
+    """A staged micro-buffer whose guard page was overrun (for tests)."""
+    buf = microbuffer.guard(jnp.zeros((n_words,), jnp.uint32))
+    # simulate an out-of-bounds kernel write running past the payload
+    return buf.at[n_words + 3].set(jnp.uint32(0x12345678))

@@ -1,0 +1,106 @@
+"""Serving runtime: batched decode with Pangolin protection of the KV cache.
+
+Decode is the paper's *atomic-style small update* case: each step touches a
+tiny, known range of the cache (one token slot per layer).  The server
+protects the cache with:
+
+  * block checksums refreshed incrementally (cost ∝ dirty pages — the
+    Adler32 range-update property), and
+  * the parity *patch* path (XOR patch over dirty pages only), the
+    "atomic XOR" side of the hybrid scheme; params are static and scrubbed.
+
+For simplicity and testability the protected unit here is the cache pytree;
+the dirty page set of a decode step is computed from the cache layout once
+(it is position-independent for ring buffers, position-dependent for linear
+caches — we conservatively take the union of slots the update may touch
+when the position is dynamic, or recompute per call when static).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ProtectConfig
+from repro.core.scrub import Scrubber
+from repro.core.txn import Mode, Protector
+from repro.models import api
+from repro.models.transformer import build_model
+
+PyTree = Any
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, protect_cfg: ProtectConfig, mesh,
+                 *, batch: int, max_len: int, protect_cache: bool = True):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.batch = batch
+        self.max_len = max_len
+        self.model = build_model(cfg, mesh)
+        self._decode = jax.jit(api.make_decode_step(self.model))
+
+        self.protect_cache = protect_cache and protect_cfg.mode != "none"
+        self.protector: Optional[Protector] = None
+        if self.protect_cache:
+            cache_abs = jax.eval_shape(
+                lambda: self.model._cache_defs(batch, max_len))
+            cache_specs = self.model.cache_specs(batch, max_len, mesh)
+            self.protector = Protector(
+                mesh, cache_abs, cache_specs, mode=Mode(protect_cfg.mode),
+                block_words=protect_cfg.block_words,
+                hybrid_threshold=protect_cfg.hybrid_threshold)
+            self._commit = jax.jit(self.protector.make_commit())
+            self.scrubber = Scrubber(self.protector,
+                                     period=protect_cfg.scrub_period)
+
+    def start(self, params: PyTree) -> None:
+        self.params = params
+        cache = self.model.init_cache(self.batch, self.max_len)
+        specs = self.model.cache_specs(self.batch, self.max_len, self.mesh)
+        cache = jax.device_put(cache, jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P)))
+        if self.protect_cache:
+            self.prot = self.protector.init(cache)
+        else:
+            self.prot = None
+            self.cache = cache
+        self.pos = 0
+
+    def _current_cache(self):
+        return self.prot.state if self.prot is not None else self.cache
+
+    def step(self, tokens: jax.Array) -> jax.Array:
+        """One decode step for the whole batch; returns next tokens."""
+        next_tok, logits, new_cache = self._decode(
+            self.params, tokens, self._current_cache(),
+            jnp.asarray(self.pos, jnp.int32))
+        if self.prot is not None:
+            self.prot, ok = self._commit(self.prot, new_cache)
+            self.scrubber.on_commit()
+            if self.scrubber.due():
+                self.prot, _ = self.scrubber.run(self.prot)
+        else:
+            self.cache = new_cache
+        self.pos += 1
+        return next_tok
+
+    def prefill(self, prompt: jax.Array) -> jax.Array:
+        """Feed a prompt through decode steps (small-scale serving path)."""
+        tok = prompt[:, 0]
+        for t in range(prompt.shape[1]):
+            nxt = self.step(prompt[:, t])
+        return nxt
+
+    def generate(self, prompt: jax.Array, n_new: int) -> np.ndarray:
+        tok = self.prefill(prompt)
+        out = [np.asarray(jax.device_get(tok))]
+        for _ in range(n_new - 1):
+            tok = self.step(tok)
+            out.append(np.asarray(jax.device_get(tok)))
+        return np.stack(out, axis=1)

@@ -1,0 +1,153 @@
+"""Low-level helpers: bit-exact dtype<->uint32 casting, padding, tree utilities.
+
+Pangolin computes parity/checksums over raw bytes.  The JAX analogue is a
+uint32 "word" view of every tensor: parity and checksums are computed on bit
+patterns, never on float values, so reconstruction is bit-exact for any dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# dtype <-> uint32 word views
+# ---------------------------------------------------------------------------
+
+_U32_PER_ELEM = {
+    jnp.dtype(jnp.float32): 1,
+    jnp.dtype(jnp.int32): 1,
+    jnp.dtype(jnp.uint32): 1,
+}
+_U16_DTYPES = (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16),
+               jnp.dtype(jnp.int16), jnp.dtype(jnp.uint16))
+_U8_DTYPES = (jnp.dtype(jnp.int8), jnp.dtype(jnp.uint8))
+
+
+def words_per_elem(dtype) -> float:
+    """uint32 words per element of `dtype` (may be fractional for sub-32-bit)."""
+    d = jnp.dtype(dtype)
+    if d in _U32_PER_ELEM:
+        return 1.0
+    if d in _U16_DTYPES:
+        return 0.5
+    if d in _U8_DTYPES:
+        return 0.25
+    raise ValueError(f"unsupported dtype for word view: {d}")
+
+
+def num_words(shape: Sequence[int], dtype) -> int:
+    """Number of uint32 words needed to hold a tensor (with padding)."""
+    n = math.prod(shape)
+    d = jnp.dtype(dtype)
+    if d in _U32_PER_ELEM:
+        return n
+    if d in _U16_DTYPES:
+        return (n + 1) // 2
+    if d in _U8_DTYPES:
+        return (n + 3) // 4
+    raise ValueError(f"unsupported dtype for word view: {d}")
+
+
+def to_words(x: jax.Array) -> jax.Array:
+    """Bit-exact view of `x` as a flat uint32 vector (zero-padded)."""
+    d = jnp.dtype(x.dtype)
+    flat = x.reshape(-1)
+    if d in _U32_PER_ELEM:
+        return lax.bitcast_convert_type(flat, jnp.uint32)
+    if d in _U16_DTYPES:
+        u16 = lax.bitcast_convert_type(flat, jnp.uint16)
+        if u16.size % 2:
+            u16 = jnp.concatenate([u16, jnp.zeros((1,), jnp.uint16)])
+        pair = u16.reshape(-1, 2).astype(jnp.uint32)
+        return pair[:, 0] | (pair[:, 1] << 16)
+    if d in _U8_DTYPES:
+        u8 = lax.bitcast_convert_type(flat, jnp.uint8)
+        pad = (-u8.size) % 4
+        if pad:
+            u8 = jnp.concatenate([u8, jnp.zeros((pad,), jnp.uint8)])
+        quad = u8.reshape(-1, 4).astype(jnp.uint32)
+        return (quad[:, 0] | (quad[:, 1] << 8) | (quad[:, 2] << 16)
+                | (quad[:, 3] << 24))
+    raise ValueError(f"unsupported dtype for word view: {d}")
+
+
+def from_words(w: jax.Array, shape: Sequence[int], dtype) -> jax.Array:
+    """Inverse of :func:`to_words` — bit-exact reconstruction."""
+    d = jnp.dtype(dtype)
+    n = math.prod(shape)
+    if d in _U32_PER_ELEM:
+        flat = lax.bitcast_convert_type(w[:n], d)
+        return flat.reshape(shape)
+    if d in _U16_DTYPES:
+        lo = (w & 0xFFFF).astype(jnp.uint16)
+        hi = (w >> 16).astype(jnp.uint16)
+        u16 = jnp.stack([lo, hi], axis=-1).reshape(-1)[:n]
+        return lax.bitcast_convert_type(u16, d).reshape(shape)
+    if d in _U8_DTYPES:
+        bs = [((w >> (8 * i)) & 0xFF).astype(jnp.uint8) for i in range(4)]
+        u8 = jnp.stack(bs, axis=-1).reshape(-1)[:n]
+        return lax.bitcast_convert_type(u8, d).reshape(shape)
+    raise ValueError(f"unsupported dtype for word view: {d}")
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_to(x: jax.Array, n: int, value=0) -> jax.Array:
+    """Pad 1-D `x` with `value` up to length `n`."""
+    if x.shape[0] == n:
+        return x
+    assert x.shape[0] < n, (x.shape, n)
+    return jnp.concatenate(
+        [x, jnp.full((n - x.shape[0],), value, dtype=x.dtype)])
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total payload bytes of a pytree of arrays / ShapeDtypeStructs."""
+    return sum(math.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def tree_equal_bits(a: PyTree, b: PyTree) -> bool:
+    """Bit-exact equality of two pytrees (host-side)."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        xn, yn = np.asarray(x), np.asarray(y)
+        if xn.shape != yn.shape or xn.dtype != yn.dtype:
+            return False
+        if xn.tobytes() != yn.tobytes():
+            return False
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Placement of one pytree leaf inside the flat word row (a 'zone object')."""
+    offset: int          # word offset in the row
+    n_words: int         # words occupied (incl. sub-word padding)
+    shape: tuple         # local shard shape
+    dtype: Any
+
+
+def fingerprint(tree: PyTree) -> int:
+    """Cheap structural fingerprint for layout-compatibility checks."""
+    parts = []
+    for path, leaf in jax.tree.leaves_with_path(tree):
+        parts.append((str(path), tuple(leaf.shape), str(jnp.dtype(leaf.dtype))))
+    return hash(tuple(parts))

@@ -1,0 +1,165 @@
+"""Assigned-architecture smoke tests (deliverable f).
+
+Each of the ten architectures instantiates its REDUCED config (same family,
+small dims) and runs one forward + one protected train step on CPU, asserting
+output shapes and the absence of NaNs.  The FULL configs are exercised by the
+dry-run only (launch/dryrun.py) and are shape-checked here without
+allocation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import WORKLOADS
+from repro.configs.base import TrainConfig, workload_skips
+from repro.configs.registry import get_config, list_archs
+from repro.models import api
+from repro.models.transformer import build_model
+from repro.optim import build_optimizer
+
+ARCHS = list_archs()
+
+# exact published configs (the assignment's table)
+EXPECTED = {
+    "llama4-maverick-400b-a17b": dict(n_layers=48, d_model=5120, n_heads=40,
+                                      n_kv=8, vocab=202048),
+    "moonshot-v1-16b-a3b": dict(n_layers=48, d_model=2048, n_heads=16,
+                                n_kv=16, d_ff=1408, vocab=163840),
+    "seamless-m4t-large-v2": dict(n_layers=24, d_model=1024, n_heads=16,
+                                  n_kv=16, d_ff=8192, vocab=256206),
+    "minitron-8b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv=8,
+                        d_ff=16384, vocab=256000),
+    "qwen2-0.5b": dict(n_layers=24, d_model=896, n_heads=14, n_kv=2,
+                       d_ff=4864, vocab=151936),
+    "glm4-9b": dict(n_layers=40, d_model=4096, n_heads=32, n_kv=2,
+                    d_ff=13696, vocab=151552),
+    "qwen3-0.6b": dict(n_layers=28, d_model=1024, n_heads=16, n_kv=8,
+                       d_ff=3072, vocab=151936),
+    "chameleon-34b": dict(n_layers=48, d_model=8192, n_heads=64, n_kv=8,
+                          d_ff=22016, vocab=65536),
+    "recurrentgemma-2b": dict(n_layers=26, d_model=2560, n_heads=10, n_kv=1,
+                              d_ff=7680, vocab=256000),
+    "xlstm-1.3b": dict(n_layers=48, d_model=2048, n_heads=4, n_kv=4,
+                       d_ff=0, vocab=50304),
+}
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    assert set(ARCHS) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_abstract_shapes(arch):
+    """Full config param tree builds abstractly (no allocation) and its
+    parameter count lands within 25% of the name's billion-scale claim."""
+    cfg = get_config(arch)
+    n = api.count_params(cfg)
+    claimed = {
+        "llama4-maverick-400b-a17b": 400e9,
+        # assignment pins 48L x 64e (the HF Moonlight release is 27L);
+        # at the assigned depth the analytic count is ~28B
+        "moonshot-v1-16b-a3b": 28e9,
+        "minitron-8b": 8e9, "qwen2-0.5b": 0.5e9, "glm4-9b": 9e9,
+        "qwen3-0.6b": 0.6e9, "chameleon-34b": 34e9,
+        "recurrentgemma-2b": 2e9, "xlstm-1.3b": 1.3e9,
+        "seamless-m4t-large-v2": 2.3e9,
+    }[arch]
+    assert 0.6 * claimed < n < 1.6 * claimed, (arch, n, claimed)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S - cfg.mm_positions),
+                             0, cfg.vocab)
+    batch = {"tokens": tok}
+    if cfg.mm_positions:
+        batch["mm_embeds"] = 0.01 * jnp.ones(
+            (B, cfg.mm_positions, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    if cfg.enc_layers:
+        batch["src_embeds"] = 0.01 * jnp.ones(
+            (B, S, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+
+    logits, _ = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    optimizer = build_optimizer(TrainConfig(microbatches=1), cfg)
+    state = api.init_train_state(model, optimizer, jax.random.PRNGKey(0))
+    step = jax.jit(api.make_train_step(model, optimizer,
+                                       TrainConfig(microbatches=1)))
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert int(new_state["step"]) == 1
+    # params actually moved
+    moved = any(
+        not np.array_equal(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(new_state["params"])))
+    assert moved, arch
+    for leaf in jax.tree.leaves(new_state["params"]):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_decode_step(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 8
+    cache = model.init_cache(B, T)
+    if cfg.enc_layers:
+        src = 0.01 * jnp.ones((B, T, cfg.d_model),
+                              jnp.dtype(cfg.compute_dtype))
+        cache["cross"] = model.build_cross_cache(
+            params, model.encode(params, src))
+    tok = jnp.zeros((B,), jnp.int32)
+    logits, cache2 = jax.jit(model.decode_step)(
+        params, tok, cache, jnp.asarray(0, jnp.int32))
+    assert logits.shape == (B, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_workload_skip_policy(arch):
+    """long_500k runs iff the architecture is sub-quadratic (DESIGN.md §4)."""
+    cfg = get_config(arch)
+    skip = workload_skips(cfg, WORKLOADS["long_500k"])
+    if arch in ("recurrentgemma-2b", "xlstm-1.3b"):
+        assert skip is None
+    else:
+        assert skip is not None
+    for wl in ("train_4k", "prefill_32k", "decode_32k"):
+        assert workload_skips(cfg, WORKLOADS[wl]) is None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_abstract(arch):
+    """input_specs stand-ins exist for every workload cell (dry-run contract)."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    for wl_name, wl in WORKLOADS.items():
+        if workload_skips(cfg, wl):
+            continue
+        if wl.kind in ("train", "prefill"):
+            ab = api.batch_abstract(cfg, wl)
+            assert ab["tokens"].shape == (wl.global_batch,
+                                          wl.seq_len - cfg.mm_positions)
+        else:
+            ab = api.decode_abstract(cfg, wl, model)
+            assert ab["token"].shape == (wl.global_batch,)
+            assert all(hasattr(l, "shape")
+                       for l in jax.tree.leaves(ab["cache"]))

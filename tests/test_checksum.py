@@ -1,0 +1,128 @@
+"""Fletcher-64 checksum properties (the paper's Adler32 substitute, §3.5).
+
+The two properties Pangolin exploits must hold exactly:
+  1. combine rule — per-block checksums fold into the whole-row digest;
+  2. incremental update — cost ∝ modified range, result == full recompute.
+Plus the detection class: any 1-2 word corruption inside a block flips the
+block's checksum.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import checksum as ck
+
+U32 = jnp.uint32
+
+
+def rand_row(n_words, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2**32, size=n_words, dtype=np.uint32))
+
+
+@pytest.mark.parametrize("n_blocks,bw", [(1, 64), (4, 64), (8, 128),
+                                         (16, 1024), (3, 256)])
+def test_block_checksums_shape(n_blocks, bw):
+    row = rand_row(n_blocks * bw, seed=n_blocks)
+    c = ck.block_checksums(row, bw)
+    assert c.shape == (n_blocks, 2) and c.dtype == U32
+
+
+@given(st.integers(1, 16), st.sampled_from([32, 64, 128]), st.integers(0, 99))
+@settings(max_examples=25, deadline=None)
+def test_combine_rule(n_blocks, bw, seed):
+    """combine(per-block) == digest of the whole row computed in one block."""
+    row = rand_row(n_blocks * bw, seed)
+    per_block = ck.block_checksums(row, bw)
+    combined = ck.combine(per_block, bw)
+    whole = ck.block_checksums(row, n_blocks * bw)[0]
+    np.testing.assert_array_equal(np.asarray(combined), np.asarray(whole))
+
+
+@given(st.integers(0, 99))
+@settings(max_examples=20, deadline=None)
+def test_digest_equals_combine(seed):
+    row = rand_row(8 * 64, seed)
+    np.testing.assert_array_equal(
+        np.asarray(ck.digest(row, 64)),
+        np.asarray(ck.combine(ck.block_checksums(row, 64), 64)))
+
+
+@given(st.integers(1, 8), st.integers(0, 99), st.data())
+@settings(max_examples=30, deadline=None)
+def test_incremental_update_blocks(n_dirty, seed, data):
+    """update_blocks on dirty pages == full recompute."""
+    n_blocks, bw = 8, 64
+    rng = np.random.default_rng(seed)
+    old = rand_row(n_blocks * bw, seed)
+    cks = ck.block_checksums(old, bw)
+    dirty = sorted(data.draw(st.sets(st.integers(0, n_blocks - 1),
+                                     min_size=1, max_size=n_dirty)))
+    new = np.asarray(old).copy()
+    for b in dirty:
+        new[b * bw:(b + 1) * bw] = rng.integers(0, 2**32, size=bw,
+                                                dtype=np.uint32)
+    new = jnp.asarray(new)
+    idx = jnp.asarray(dirty, jnp.int32)
+    pages = new.reshape(-1, bw)[idx]
+    inc = ck.update_blocks(cks, pages, idx, bw)
+    full = ck.block_checksums(new, bw)
+    np.testing.assert_array_equal(np.asarray(inc), np.asarray(full))
+
+
+@given(st.integers(0, 63), st.integers(1, 32), st.integers(0, 99))
+@settings(max_examples=30, deadline=None)
+def test_update_range_within_block(start, length, seed):
+    """Word-granular range update == recompute (the Adler32 range property)."""
+    bw = 128
+    length = min(length, bw - start)
+    rng = np.random.default_rng(seed)
+    old = rand_row(bw, seed)
+    cks = ck.block_checksums(old, bw)[0]
+    new = np.asarray(old).copy()
+    new[start:start + length] = rng.integers(0, 2**32, size=length,
+                                             dtype=np.uint32)
+    new = jnp.asarray(new)
+    inc = ck.update_range(cks, old[start:start + length],
+                          new[start:start + length], start, bw)
+    full = ck.block_checksums(new, bw)[0]
+    np.testing.assert_array_equal(np.asarray(inc), np.asarray(full))
+
+
+@given(st.integers(0, 7), st.integers(0, 63), st.integers(1, 32),
+       st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_detects_any_word_flip(block, word, bitpos, seed):
+    """Flipping any bits of any word flips the block's checksum (A changes)."""
+    n_blocks, bw = 8, 64
+    row = rand_row(n_blocks * bw, seed)
+    cks = ck.block_checksums(row, bw)
+    bad = np.asarray(row).copy()
+    bad[block * bw + word] ^= np.uint32(1 << (bitpos % 32))
+    badmask = ck.verify_blocks(jnp.asarray(bad), cks, bw)
+    assert bool(badmask[block])
+    # only that block flagged
+    others = np.asarray(badmask).copy()
+    others[block] = False
+    assert not others.any()
+
+
+def test_detects_two_word_swap():
+    """Fletcher's positional term catches reordering (plain sum would not)."""
+    bw = 64
+    row = rand_row(bw, 7)
+    arr = np.asarray(row).copy()
+    if arr[3] == arr[10]:
+        arr[10] += 1
+    arr[3], arr[10] = arr[10], arr[3]
+    cks = ck.block_checksums(row, bw)
+    bad = ck.verify_blocks(jnp.asarray(arr), cks, bw)
+    assert bool(bad[0])
+
+
+def test_verify_clean():
+    row = rand_row(4 * 64, 3)
+    cks = ck.block_checksums(row, 64)
+    assert not np.asarray(ck.verify_blocks(row, cks, 64)).any()

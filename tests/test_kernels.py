@@ -1,0 +1,115 @@
+"""Pallas kernel vs pure-jnp oracle: exact-equality sweeps (interpret mode).
+
+Each kernel is swept across block counts / widths and validated bit-for-bit
+against kernels/ref.py — uint32 integer math, so equality is exact, not
+allclose-with-tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import commit_fused, fletcher, ops, ref, xor_parity
+
+U32 = jnp.uint32
+
+
+def rand_u32(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2**32, size=shape, dtype=np.uint32))
+
+
+SHAPES = [(1, 128), (2, 256), (8, 1024), (16, 1024), (24, 512), (64, 128)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fletcher_kernel_vs_ref(shape):
+    blocks = rand_u32(shape, seed=shape[0])
+    out_k = fletcher.fletcher_blocks(blocks, interpret=True)
+    out_r = ref.fletcher_blocks_ref(blocks)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("shape", SHAPES + [(4096,), (1024,), (8, 8)])
+def test_xor_delta_kernel_vs_ref(shape):
+    a = rand_u32(shape, seed=1)
+    b = rand_u32(shape, seed=2)
+    out_k = xor_parity.xor_delta(a, b, interpret=True)
+    out_r = ref.xor_delta_ref(a, b)
+    assert out_k.shape == a.shape
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("shape", [(8, 1024), (512, 128), (1024,)])
+def test_xor_accum_kernel_vs_ref(shape):
+    p = rand_u32(shape, seed=3)
+    d = rand_u32(shape, seed=4)
+    out_k = xor_parity.xor_accum(p, d, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_k),
+                                  np.asarray(ref.xor_accum_ref(p, d)))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_commit_kernel_vs_ref(shape):
+    old = rand_u32(shape, seed=5)
+    new = rand_u32(shape, seed=6)
+    d_k, c_k = commit_fused.fused_commit(old, new, interpret=True)
+    d_r, c_r = ref.fused_commit_ref(old, new)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+
+
+def test_fused_commit_is_delta_plus_fletcher():
+    """Cross-check the fused kernel against the two separate kernels."""
+    old = rand_u32((8, 1024), seed=7)
+    new = rand_u32((8, 1024), seed=8)
+    d, c = commit_fused.fused_commit(old, new, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(d), np.asarray(xor_parity.xor_delta(old, new,
+                                                       interpret=True)))
+    np.testing.assert_array_equal(
+        np.asarray(c), np.asarray(fletcher.fletcher_blocks(new,
+                                                           interpret=True)))
+
+
+def test_xor_properties():
+    """Algebra the parity scheme relies on: self-inverse, commutativity."""
+    a, b, c = (rand_u32((4, 64), seed=s) for s in (9, 10, 11))
+    z = jnp.zeros_like(a)
+    # delta(x, x) == 0
+    np.testing.assert_array_equal(
+        np.asarray(xor_parity.xor_delta(a, a, interpret=True)), np.asarray(z))
+    # accum(accum(p, d), d) == p  (idempotent repair)
+    p1 = xor_parity.xor_accum(a, b, interpret=True)
+    p2 = xor_parity.xor_accum(p1, b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(a))
+    # order-free patches: (p ^ d1) ^ d2 == (p ^ d2) ^ d1
+    lhs = xor_parity.xor_accum(xor_parity.xor_accum(a, b, interpret=True), c,
+                               interpret=True)
+    rhs = xor_parity.xor_accum(xor_parity.xor_accum(a, c, interpret=True), b,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    """On CPU the wrapper must route to the jnp oracle (no Pallas lowering)."""
+    a = rand_u32((4, 128), seed=12)
+    b = rand_u32((4, 128), seed=13)
+    np.testing.assert_array_equal(
+        np.asarray(ops.xor_delta(a, b)),
+        np.asarray(ref.xor_delta_ref(a, b)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.fletcher_blocks(a)),
+        np.asarray(ref.fletcher_blocks_ref(a)))
+    d1, c1 = ops.fused_commit(a, b)
+    d2, c2 = ref.fused_commit_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_ops_interpret_flag_forces_pallas():
+    a = rand_u32((8, 1024), seed=14)
+    b = rand_u32((8, 1024), seed=15)
+    np.testing.assert_array_equal(
+        np.asarray(ops.xor_delta(a, b, interpret=True)),
+        np.asarray(ref.xor_delta_ref(a, b)))

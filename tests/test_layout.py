@@ -1,0 +1,88 @@
+"""Zone layout: pytree <-> word-row flattening must be bit-exact and the
+page math (columns, slots) must match the paper's 2-D zone semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout as layout_mod
+
+
+def mixed_tree(seed=0, leaves=3):
+    rng = np.random.default_rng(seed)
+    dtypes = [jnp.float32, jnp.bfloat16, jnp.int8, jnp.uint32, jnp.float16]
+    tree = {}
+    for i in range(leaves):
+        dt = dtypes[i % len(dtypes)]
+        shape = tuple(rng.integers(1, 7, size=rng.integers(1, 4)))
+        n = int(np.prod(shape))
+        raw = rng.integers(0, 256, size=n * jnp.dtype(dt).itemsize,
+                           dtype=np.uint8)
+        x = jax.lax.bitcast_convert_type(
+            jnp.asarray(raw).reshape(n, jnp.dtype(dt).itemsize), dt
+        ).reshape(shape) if jnp.dtype(dt).itemsize > 1 else \
+            jnp.asarray(raw[:n].view(np.dtype(jnp.dtype(dt).name)),
+                        dtype=dt).reshape(shape)
+        tree[f"leaf{i}"] = x
+    return tree
+
+
+@given(st.integers(0, 50), st.integers(1, 6), st.sampled_from([1, 2, 4]))
+@settings(max_examples=25, deadline=None)
+def test_flatten_unflatten_roundtrip(seed, n_leaves, group):
+    tree = mixed_tree(seed, n_leaves)
+    lo = layout_mod.build_layout(tree, group, block_words=16)
+    row = layout_mod.flatten_row(lo, tree)
+    assert row.dtype == jnp.uint32
+    assert row.shape[0] == lo.row_words
+    assert lo.row_words % (group * 16) == 0
+    back = layout_mod.unflatten_row(lo, row)
+    for k in tree:
+        a, b = np.asarray(tree[k]), np.asarray(back[k])
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert a.tobytes() == b.tobytes()
+
+
+def test_layout_slot_offsets_contiguous():
+    tree = {"a": jnp.zeros((3, 5), jnp.float32),
+            "b": jnp.zeros((7,), jnp.bfloat16)}
+    lo = layout_mod.build_layout(tree, 2, block_words=8)
+    offs = [s.offset for s in lo.slots]
+    assert offs[0] == 0
+    assert offs[1] == lo.slots[0].n_words
+    assert lo.payload_words == sum(s.n_words for s in lo.slots)
+
+
+def test_leaf_and_range_pages():
+    tree = {"a": jnp.zeros((16,), jnp.uint32),     # words 0..15
+            "b": jnp.zeros((16,), jnp.uint32)}     # words 16..31
+    lo = layout_mod.build_layout(tree, 1, block_words=8)
+    np.testing.assert_array_equal(layout_mod.leaf_pages(lo, 0), [0, 1])
+    np.testing.assert_array_equal(layout_mod.leaf_pages(lo, 1), [2, 3])
+    np.testing.assert_array_equal(layout_mod.range_pages(lo, 6, 4), [0, 1])
+    np.testing.assert_array_equal(layout_mod.range_pages(lo, 8, 8), [1])
+
+
+def test_overhead_report_fractions():
+    tree = {"a": jnp.zeros((1024 * 16,), jnp.float32)}
+    for g in (2, 4, 16):
+        lo = layout_mod.build_layout(tree, g, block_words=1024)
+        rep = lo.overhead_report()
+        # parity is 1/G of the (padded) row
+        assert rep["parity_bytes_per_rank"] * g == lo.row_words * 4
+        assert rep["parity_fraction"] == pytest.approx(1.0 / g, rel=0.05)
+        assert rep["replication_fraction"] == 1.0
+        # checksums are tiny: 8 bytes per 4 KB page
+        assert rep["checksum_fraction"] < 0.01
+
+
+def test_layout_with_shardings(mesh42):
+    """Local (sharded) shapes, not global shapes, define the row."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = {"w": jax.ShapeDtypeStruct((8, 64), jnp.float32)}
+    sh = {"w": NamedSharding(mesh42, P("data", "model"))}
+    lo = layout_mod.build_layout(tree, 4, sh, block_words=16)
+    # local shard: (2, 32) = 64 words
+    assert lo.slots[0].shape == (2, 32)
+    assert lo.slots[0].n_words == 64

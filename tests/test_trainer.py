@@ -1,0 +1,152 @@
+"""End-to-end fault-tolerant training: the Trainer must survive rank loss,
+scribbles, and crashes (checkpoint + redo-log replay) without losing a step.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, ProtectConfig, TrainConfig
+from repro.runtime import failure
+from repro.runtime.trainer import Trainer
+
+
+@pytest.fixture(scope="module")
+def trainer_factory(mesh42):
+    cfg = ModelConfig(
+        name="t_train", family="dense", n_layers=2, d_model=32, n_heads=4,
+        n_kv=2, d_ff=64, vocab=128, param_dtype="float32",
+        compute_dtype="float32")
+
+    def make(protect_mode="mlpc", scrub_period=0, checkpoint_dir=None,
+             seed=0):
+        t = Trainer(cfg, TrainConfig(learning_rate=1e-3, warmup_steps=2,
+                                     total_steps=100),
+                    ProtectConfig(mode=protect_mode, block_words=64,
+                                  scrub_period=scrub_period),
+                    mesh42, seq_len=32, global_batch=8,
+                    checkpoint_dir=checkpoint_dir, seed=seed)
+        t.initialize()
+        return t
+
+    return make
+
+
+def test_training_loss_decreases(trainer_factory):
+    t = trainer_factory()
+    outs = t.run(12)
+    assert all(o["committed"] for o in outs)
+    assert outs[-1]["step"] == 12
+    first = np.mean([o["loss"] for o in outs[:4]])
+    last = np.mean([o["loss"] for o in outs[-4:]])
+    assert last < first, (first, last)
+
+
+def test_training_survives_rank_loss(trainer_factory):
+    t = trainer_factory()
+    t.run(3)
+    w_before = np.asarray(jax.tree.leaves(t.prot.state["params"])[0]).copy()
+    bad_prot, event = failure.inject_rank_loss(t.protector, t.prot, rank=1)
+    t.prot = bad_prot
+    report = t.on_failure(event)
+    assert report["verified"]
+    w_after = np.asarray(jax.tree.leaves(t.prot.state["params"])[0])
+    np.testing.assert_array_equal(w_after, w_before)
+    out = t.step()                    # training continues
+    assert out["committed"]
+
+
+def test_training_survives_scribble(trainer_factory):
+    t = trainer_factory()
+    t.run(2)
+    w_before = np.asarray(jax.tree.leaves(t.prot.state["params"])[0]).copy()
+    bad_prot, event = failure.inject_scribble(t.protector, t.prot, rank=0,
+                                              word_offsets=[3, 70])
+    t.prot = bad_prot
+    report = t.on_failure(event)
+    assert report["verified"]
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(t.prot.state["params"])[0]), w_before)
+
+
+def test_canary_abort_blocks_commit(trainer_factory):
+    t = trainer_factory()
+    t.run(2)
+    before = int(jax.device_get(t.prot.step))
+    out = t.step(canary_ok=False)
+    assert not out["committed"]
+    assert int(jax.device_get(t.prot.step)) == before
+
+
+def test_periodic_scrub_runs(trainer_factory):
+    t = trainer_factory(scrub_period=3)
+    outs = t.run(3)
+    assert "scrub" in outs[-1], "scrub must fire on the period boundary"
+    assert outs[-1]["scrub"]["checked"]
+    assert not outs[-1]["scrub"]["bad_locations"]
+
+
+def test_checkpoint_restore_and_replay(trainer_factory, tmp_path):
+    ck = str(tmp_path / "ckpt")
+    t = trainer_factory(checkpoint_dir=ck, seed=3)
+    t.run(4)
+    t.save_checkpoint(wait=True)
+    t.run(3)                               # steps 5..7 live only in the log
+    digest_before = np.asarray(jax.device_get(t.prot.digest)).copy()
+    step_before = int(jax.device_get(t.prot.step))
+
+    # "crash": new trainer, same config/seed, restore + replay
+    t2 = trainer_factory(checkpoint_dir=ck, seed=3)
+    # replaying needs the redo log from the crashed run (in production the
+    # log is replicated in peer HBM / host RAM; here we hand it over)
+    t2._ckpt_mgr = t._ckpt_mgr
+    info = t2.restore_from_checkpoint(replay=False)
+    assert info["restored_step"] == 4
+    # manual replay: run the same number of steps; determinism must hold
+    for _ in range(step_before - 4):
+        t2.step()
+    digest_after = np.asarray(jax.device_get(t2.prot.digest))
+    np.testing.assert_array_equal(digest_after, digest_before)
+
+
+def test_replica_mode_trains(trainer_factory):
+    t = trainer_factory(protect_mode="replica")
+    outs = t.run(3)
+    assert outs[-1]["step"] == 3
+    # replica mirrors the state
+    a = jax.tree.leaves(t.prot.state["params"])[0]
+    b = jax.tree.leaves(t.prot.replica["params"])[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_none_mode_trains(trainer_factory):
+    t = trainer_factory(protect_mode="none")
+    outs = t.run(3)
+    assert outs[-1]["step"] == 3
+    assert t.prot.parity is None and t.prot.cksums is None
+
+
+def test_restore_replay_from_serialized_log(trainer_factory, tmp_path):
+    """Crash recovery must work from the DISK round-trip of the redo log
+    (manifest serializes RedoLog as a jsonable dict), not only from a live
+    in-memory handover — regression test for the dict-form restore path."""
+    ck = str(tmp_path / "ckpt2")
+    t = trainer_factory(checkpoint_dir=ck, seed=5)
+    t.run(3)
+    t.save_checkpoint(wait=True)
+    t.run(2)                         # steps 4..5 live only in the log
+    t.save_checkpoint(wait=True)     # persists log alongside step 5
+    digest_before = np.asarray(jax.device_get(t.prot.digest)).copy()
+
+    t2 = trainer_factory(checkpoint_dir=ck, seed=5)
+    info = t2.restore_from_checkpoint(replay=True)
+    assert info["restored_step"] == 5
+    # same protected digest after restore+replay path
+    t2.run(1)
+    t.run(1)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(t2.prot.digest)),
+        np.asarray(jax.device_get(t.prot.digest)))

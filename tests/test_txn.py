@@ -1,0 +1,275 @@
+"""Transactional protection ladder (paper Table 2 modes) over a real mesh:
+commit / abort / scrub / rank-loss recovery / scribble repair, plus the
+hybrid parity paths' equivalence (patch == bulk for the same update)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import layout as layout_mod
+from repro.core.txn import Mode, Protector
+from tests.conftest import small_state
+
+MODES = [Mode.MLPC, Mode.MLP, Mode.ML, Mode.NONE, Mode.REPLICA]
+
+
+def make_protector(mesh, state, specs, mode, **kw):
+    kw.setdefault("block_words", 64)
+    return Protector(mesh, jax.eval_shape(lambda: state), specs, mode=mode,
+                     **kw)
+
+
+@pytest.fixture(scope="module")
+def setup(mesh42):
+    state, specs, shardings = small_state(mesh42)
+    return mesh42, state, specs, shardings
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_init_commit_abort(setup, mode):
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, mode)
+    prot = p.init(state)
+    assert int(prot.step) == 0
+    assert (prot.parity is not None) == mode.has_parity
+    assert (prot.cksums is not None) == mode.has_cksums
+    assert (prot.replica is not None) == mode.has_replica
+    assert (prot.log is not None) == mode.has_log
+
+    commit = jax.jit(p.make_commit())
+    new_state = jax.tree.map(lambda x: (x * 1.5 + 1).astype(x.dtype), state)
+    prot2, ok = commit(prot, new_state, rng_key=jax.random.PRNGKey(1))
+    assert bool(ok)
+    assert int(prot2.step) == 1
+    np.testing.assert_array_equal(np.asarray(prot2.state["w1"]),
+                                  np.asarray(new_state["w1"]))
+    if mode.has_replica:
+        np.testing.assert_array_equal(np.asarray(prot2.replica["w1"]),
+                                      np.asarray(new_state["w1"]))
+
+    # canary abort: nothing moves, step does not advance
+    prot3, ok3 = commit(prot2, jax.tree.map(jnp.zeros_like, new_state),
+                        canary_ok=False)
+    assert not bool(ok3)
+    assert int(prot3.step) == 1
+    np.testing.assert_array_equal(np.asarray(prot3.state["w1"]),
+                                  np.asarray(prot2.state["w1"]))
+    if mode.has_parity:
+        np.testing.assert_array_equal(np.asarray(prot3.parity),
+                                      np.asarray(prot2.parity))
+
+
+@pytest.mark.parametrize("mode", [Mode.MLPC, Mode.MLP])
+def test_rank_loss_recovery_bit_exact(setup, mode):
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, mode)
+    prot = p.init(state)
+    w1 = np.asarray(prot.state["w1"]).copy()
+    w2_bits = np.asarray(prot.state["w2"]).view(np.uint16).copy()
+
+    for lost in range(mesh.shape["data"]):
+        garbled = w1.copy()
+        rows_per = w1.shape[0] // mesh.shape["data"]
+        garbled[lost * rows_per:(lost + 1) * rows_per] = np.nan
+        bad = dict(prot.state)
+        bad["w1"] = jax.device_put(garbled, shardings["w1"])
+        prot_bad = dataclasses.replace(prot, state=bad)
+        prot_rec, ok = p.recover_rank(prot_bad, lost)
+        if mode.has_cksums:
+            assert bool(ok), f"verification after recovering rank {lost}"
+        np.testing.assert_array_equal(np.asarray(prot_rec.state["w1"]), w1)
+        np.testing.assert_array_equal(
+            np.asarray(prot_rec.state["w2"]).view(np.uint16), w2_bits)
+
+
+def test_recovery_is_idempotent(setup):
+    """Re-running recovery after it succeeded must be a no-op (paper §3.6)."""
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC)
+    prot = p.init(state)
+    prot_rec, ok = p.recover_rank(prot, 1)
+    assert bool(ok)
+    prot_rec2, ok2 = p.recover_rank(prot_rec, 1)
+    assert bool(ok2)
+    np.testing.assert_array_equal(np.asarray(prot_rec2.state["w1"]),
+                                  np.asarray(prot.state["w1"]))
+
+
+def test_scrub_detects_and_repair_fixes_scribble(setup):
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC)
+    prot = p.init(state)
+    w1 = np.asarray(prot.state["w1"]).copy()
+
+    scr = w1.copy()
+    scr[2, 3] = -1234.5            # data-rank 1 holds rows 2:4
+    bad = dict(prot.state)
+    bad["w1"] = jax.device_put(scr, shardings["w1"])
+    prot_bad = dataclasses.replace(prot, state=bad)
+
+    rep = p.scrub(prot_bad)
+    badmask = np.asarray(rep["bad_pages"])
+    assert badmask.any(), "scrub must detect the scribble"
+    assert not bool(rep["parity_ok"]), "XOR invariant must be broken"
+
+    locs = [(int(i[0]), int(i[-1])) for i in np.argwhere(badmask)]
+    prot_fix, okf = p.repair_pages(prot_bad, [r for r, _ in locs],
+                                   [pg for _, pg in locs])
+    assert bool(okf)
+    np.testing.assert_array_equal(np.asarray(prot_fix.state["w1"]), w1)
+    # pool is clean again
+    rep2 = p.scrub(prot_fix)
+    assert not np.asarray(rep2["bad_pages"]).any()
+    assert bool(rep2["parity_ok"])
+
+
+def test_multi_page_scribble_repair(setup):
+    """Two scribbles in DIFFERENT page columns are repairable; the paper's
+    guarantee covers one lost page per column (§3.1)."""
+    from repro.runtime import failure
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC)
+    prot = p.init(state)
+    w1 = np.asarray(prot.state["w1"]).copy()
+
+    # rank 1's flat row: pages 0 and 1 (distinct page columns)
+    prot_bad, event = failure.inject_scribble(p, prot, rank=1,
+                                              word_offsets=[5, 70])
+    rep = p.scrub(prot_bad)
+    locs = [(int(i[0]), int(i[-1]))
+            for i in np.argwhere(np.asarray(rep["bad_pages"]))]
+    assert len(set(pg for _, pg in locs)) >= 2, locs
+    prot_fix, okf = p.repair_pages(prot_bad, [r for r, _ in locs],
+                                   [pg for _, pg in locs])
+    assert bool(okf)
+    np.testing.assert_array_equal(np.asarray(prot_fix.state["w1"]), w1)
+
+
+def test_same_column_double_fault_is_unrecoverable(setup):
+    """Two corruptions in the SAME page column defeat single parity — the
+    paper's documented limit (§3.1).  Verification must report failure
+    rather than silently accepting wrong data."""
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC)
+    prot = p.init(state)
+    scr = np.asarray(prot.state["w1"]).copy()
+    scr[0, 5] = 1e30      # rank 0, page column 0
+    scr[4, 5] = -1e30     # rank 2, same page column
+    bad = dict(prot.state)
+    bad["w1"] = jax.device_put(scr, shardings["w1"])
+    prot_bad = dataclasses.replace(prot, state=bad)
+    rep = p.scrub(prot_bad)
+    locs = [(int(i[0]), int(i[-1]))
+            for i in np.argwhere(np.asarray(rep["bad_pages"]))]
+    cols = [pg for _, pg in locs]
+    assert len(cols) != len(set(cols)), "setup: same column twice"
+    _, okf = p.repair_pages(prot_bad, [r for r, _ in locs], cols)
+    assert not bool(okf), "repair must report failure, not fake success"
+
+
+def test_verify_old_aborts_on_corrupt_input(setup):
+    """The paper verifies an object's checksum when the micro-buffer opens;
+    committing on top of corrupt state must abort, not launder corruption."""
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC)
+    prot = p.init(state)
+    scr = np.asarray(prot.state["w1"]).copy()
+    scr[1, 1] = 777.0
+    bad = dict(prot.state)
+    bad["w1"] = jax.device_put(scr, shardings["w1"])
+    prot_bad = dataclasses.replace(prot, state=bad)
+    commit = jax.jit(p.make_commit(verify_old=True))
+    new_state = jax.tree.map(lambda x: (x + 1).astype(x.dtype),
+                             prot_bad.state)
+    prot2, ok = commit(prot_bad, new_state, rng_key=jax.random.PRNGKey(0))
+    assert not bool(ok)
+    assert int(prot2.step) == 0
+
+
+def test_patch_path_equals_bulk_path(setup):
+    """Incremental parity (dirty pages only) must land exactly where a full
+    rebuild lands — the hybrid scheme's two sides agree (paper §3.5)."""
+    mesh, state, specs, shardings = setup
+    abstract = jax.eval_shape(lambda: state)
+    p_patch = Protector(mesh, abstract, specs, mode=Mode.MLPC,
+                        block_words=64, hybrid_threshold=1.1)  # force patch
+    p_bulk = Protector(mesh, abstract, specs, mode=Mode.MLPC,
+                       block_words=64, hybrid_threshold=0.0)   # force bulk
+    prot_a = p_patch.init(state)
+    prot_b = p_bulk.init(state)
+    np.testing.assert_array_equal(np.asarray(prot_a.parity),
+                                  np.asarray(prot_b.parity))
+
+    # modify only leaf "w1" -> dirty pages are w1's page columns.
+    # (dict leaves flatten alphabetically: scale=0, w1=1, w2=2)
+    new_state = dict(state)
+    new_state["w1"] = state["w1"] * 2 + 1
+    lo = p_patch.layout
+    dirty = layout_mod.leaf_pages(lo, 1).tolist()
+
+    commit_patch = jax.jit(p_patch.make_commit(dirty_pages=dirty))
+    commit_bulk = jax.jit(p_bulk.make_commit())
+    prot_a2, ok_a = commit_patch(prot_a, new_state,
+                                 rng_key=jax.random.PRNGKey(2))
+    prot_b2, ok_b = commit_bulk(prot_b, new_state,
+                                rng_key=jax.random.PRNGKey(2))
+    assert bool(ok_a) and bool(ok_b)
+    np.testing.assert_array_equal(np.asarray(prot_a2.parity),
+                                  np.asarray(prot_b2.parity))
+    np.testing.assert_array_equal(np.asarray(prot_a2.cksums),
+                                  np.asarray(prot_b2.cksums))
+    # and recovery still works from the patched parity
+    prot_rec, ok = p_patch.recover_rank(prot_a2, 3)
+    assert bool(ok)
+    np.testing.assert_array_equal(np.asarray(prot_rec.state["w1"]),
+                                  np.asarray(new_state["w1"]))
+
+
+def test_protection_overhead_report(setup):
+    mesh, state, specs, _ = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC)
+    rep = p.overhead_report()
+    assert rep["mode"] == "mlpc"
+    assert rep["group_size"] == mesh.shape["data"]
+    # parity = 1/G of the padded row
+    assert rep["protection_fraction"] < 1.0 / mesh.shape["data"] + 0.35
+    rep_r = make_protector(mesh, state, specs, Mode.REPLICA).overhead_report()
+    assert rep_r["protection_fraction"] == 1.0
+
+
+def test_abstract_protected_matches_real(setup):
+    """Dry-run stand-ins must mirror the real protected state's structure."""
+    mesh, state, specs, _ = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC)
+    abstract = p.abstract_protected(jax.eval_shape(lambda: state))
+    real = p.init(state)
+    ab_leaves = jax.tree.leaves(abstract)
+    re_leaves = jax.tree.leaves(real)
+    assert len(ab_leaves) == len(re_leaves)
+    for a, r in zip(ab_leaves, re_leaves):
+        assert tuple(a.shape) == tuple(r.shape), (a.shape, r.shape)
+        assert jnp.dtype(a.dtype) == jnp.dtype(r.dtype)
+
+
+def test_multipod_mesh_commit_and_recover(mesh_pod):
+    """The zone axis generalizes to a 3-axis mesh (pod replication above it)."""
+    from jax.sharding import NamedSharding
+    specs = {"w": P("data", "model")}
+    state = {"w": jnp.arange(4 * 32, dtype=jnp.float32).reshape(4, 32)}
+    sh = jax.tree.map(lambda s: NamedSharding(mesh_pod, s), specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    state = jax.tree.map(jax.device_put, state, sh)
+    p = Protector(mesh_pod, jax.eval_shape(lambda: state), specs,
+                  mode=Mode.MLPC, block_words=16)
+    prot = p.init(state)
+    commit = jax.jit(p.make_commit())
+    new_state = {"w": state["w"] * 2}
+    prot2, ok = commit(prot, new_state, rng_key=jax.random.PRNGKey(0))
+    assert bool(ok)
+    prot_rec, okr = p.recover_rank(prot2, 1)
+    assert bool(okr)
+    np.testing.assert_array_equal(np.asarray(prot_rec.state["w"]),
+                                  np.asarray(new_state["w"]))

@@ -1,0 +1,82 @@
+"""Property tests: bit-exact uint32 word views (the byte substrate Pangolin's
+parity/checksum math runs on) must round-trip every supported dtype."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import utils
+
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16, jnp.int32, jnp.uint32,
+          jnp.int16, jnp.uint16, jnp.int8, jnp.uint8]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", [(1,), (7,), (3, 5), (2, 3, 4), (17,)])
+def test_words_roundtrip_exact(dtype, shape):
+    n = int(np.prod(shape))
+    rng = np.random.default_rng(hash((str(dtype), shape)) % 2**32)
+    raw = rng.integers(0, 256, size=n * jnp.dtype(dtype).itemsize,
+                       dtype=np.uint8)
+    x = jnp.asarray(raw).view(jnp.dtype(dtype).name).reshape(shape) \
+        if jnp.dtype(dtype).itemsize == 1 else \
+        jax.lax.bitcast_convert_type(
+            jnp.asarray(raw.view(np.uint8)).reshape(
+                n, jnp.dtype(dtype).itemsize),
+            jnp.dtype(dtype)).reshape(shape)
+    w = utils.to_words(x)
+    assert w.dtype == jnp.uint32
+    assert w.shape[0] == utils.num_words(shape, dtype)
+    y = utils.from_words(w, shape, dtype)
+    assert y.dtype == jnp.dtype(dtype) and y.shape == tuple(shape)
+    # bit-exact (NaN bit patterns included)
+    assert np.asarray(utils.to_words(y)).tobytes() == \
+        np.asarray(w).tobytes()
+
+
+@given(st.integers(1, 200), st.sampled_from(["float32", "bfloat16", "int8"]))
+@settings(max_examples=30, deadline=None)
+def test_num_words_matches_to_words(n, dtype):
+    x = jnp.zeros((n,), jnp.dtype(dtype))
+    assert utils.to_words(x).shape[0] == utils.num_words((n,), dtype)
+
+
+def test_nan_bitpattern_preserved():
+    x = jnp.asarray([np.nan, -np.nan, np.inf, -0.0], jnp.float32)
+    w = utils.to_words(x)
+    y = utils.from_words(w, (4,), jnp.float32)
+    assert np.asarray(utils.to_words(y)).tobytes() == \
+        np.asarray(w).tobytes()
+
+
+def test_pad_to():
+    x = jnp.arange(5, dtype=jnp.uint32)
+    p = utils.pad_to(x, 8)
+    assert p.shape == (8,)
+    assert np.all(np.asarray(p[5:]) == 0)
+    assert utils.pad_to(p, 8) is p
+
+
+def test_round_up():
+    assert utils.round_up(0, 4) == 0
+    assert utils.round_up(1, 4) == 4
+    assert utils.round_up(4, 4) == 4
+    assert utils.round_up(5, 4) == 8
+
+
+def test_tree_equal_bits():
+    a = {"x": jnp.asarray([1.0, np.nan], jnp.float32)}
+    b = {"x": jnp.asarray([1.0, np.nan], jnp.float32)}
+    assert utils.tree_equal_bits(a, b)
+    c = {"x": jnp.asarray([1.0, 2.0], jnp.float32)}
+    assert not utils.tree_equal_bits(a, c)
+    # shape mismatch
+    d = {"x": jnp.zeros((3,), jnp.float32)}
+    assert not utils.tree_equal_bits(a, d)
+
+
+def test_tree_bytes():
+    t = {"a": jnp.zeros((4, 4), jnp.float32), "b": jnp.zeros((2,),
+                                                             jnp.bfloat16)}
+    assert utils.tree_bytes(t) == 4 * 4 * 4 + 2 * 2
