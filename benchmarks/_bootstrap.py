@@ -1,0 +1,26 @@
+"""Pre-jax environment setup shared by directly-executable benchmarks.
+
+Import this before anything that imports jax:
+
+    try:
+        from benchmarks import _bootstrap  # noqa: F401  (run as a module)
+    except ImportError:
+        import _bootstrap                  # noqa: F401  (run as a script)
+
+Direct execution (`python benchmarks/foo.py`) puts only `benchmarks/` on
+sys.path, so the fallback import resolves; this module then adds the repo
+root (making `from benchmarks import common` work) and forces the 8-way
+host-device mesh the zone collectives need — which must happen before
+jax's first import locks the device count.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")

@@ -1,0 +1,237 @@
+"""Unfused vs fused commit engine — interleaved A/B on the same process.
+
+This benchmark reconstructs the *seed* engine — re-flatten old and new
+state, then separate verify / parity / checksum / digest sweeps — from
+the same primitives, and compares it with the single-sweep engine
+(core/txn.py) three ways:
+
+  * wall time with interleaved repetitions, so ambient machine noise hits
+    both sides equally (cross-run comparisons on a contended CPU box
+    swing 3x; see EXPERIMENTS.md §Perf for the recorded numbers);
+  * XLA's compiled "bytes accessed" — a deterministic, machine-state-free
+    proxy for the HBM traffic the fusion targets;
+  * bit-equality of the resulting protection (both engines must land the
+    same parity / checksums / digest).
+
+Three scenarios: `overwrite` (full-state commit, the train hot path),
+`verify` (verify-at-open + commit), `decode` (dirty-page commit, the
+serving hot path — the seed engine re-flattens the full state and, for
+MLP, re-checksums the full row for its digest; the fused engine splices
+the cached row and sweeps only the dirty pages).
+"""
+from __future__ import annotations
+
+import sys
+
+try:
+    from benchmarks import _bootstrap  # noqa: F401  (run as a module)
+except ImportError:
+    import _bootstrap                  # noqa: F401  (run as a script)
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from benchmarks import common
+from repro.core import checksum as ck
+from repro.core import layout as layout_mod
+from repro.core import parity as parity_mod
+from repro.core import redolog
+from repro.core.txn import Mode, Protector, ProtectedState, tree_select
+
+U32 = jnp.uint32
+
+SIZES = [256 * 1024, 1024 * 1024, 4 * 1024 * 1024]
+MODES = [Mode.MLP, Mode.MLPC]
+
+
+def make_unfused_commit(p: Protector, dirty_pages=None,
+                        verify_old: bool = False):
+    """The seed commit pipeline: independent sweeps, no row cache."""
+    lo, ax, mode = p.layout, p.data_axis, p.mode
+
+    def _protect(state_old, parity, cksums, state_new, canary_ok):
+        parity_l = p._unpack(parity) if parity is not None else None
+        cksums_l = p._unpack(cksums) if cksums is not None else None
+        row_new = layout_mod.flatten_row(lo, state_new)
+        ok = canary_ok
+        row_old = None
+        if mode.has_parity or verify_old:
+            row_old = layout_mod.flatten_row(lo, state_old)
+        if verify_old and cksums_l is not None:
+            bad = ck.verify_blocks(row_old, cksums_l, lo.block_words)
+            ok = jnp.logical_and(ok, jnp.logical_not(jnp.any(bad)))
+            ok = lax.pmin(ok.astype(jnp.int32), ax) > 0
+        outs = {"ok": ok}
+        if mode.has_parity:
+            new_parity = parity_mod.hybrid_update(
+                row_old, row_new, parity_l, lo, ax,
+                dirty_page_idx=dirty_pages,
+                threshold_fraction=p.hybrid_threshold)
+            outs["parity"] = p._pack(jnp.where(ok, new_parity, parity_l))
+        if mode.has_cksums:
+            if dirty_pages is not None and len(dirty_pages) < lo.n_blocks:
+                idx = jnp.asarray(np.asarray(dirty_pages), jnp.int32)
+                pages = parity_mod.gather_pages(row_new, idx,
+                                                lo.block_words)
+                new_ck = ck.update_blocks(cksums_l, pages, idx,
+                                          lo.block_words)
+            else:
+                new_ck = ck.block_checksums(row_new, lo.block_words)
+            outs["cksums"] = p._pack(jnp.where(ok, new_ck, cksums_l))
+            outs["digest"] = p._pack(ck.combine(new_ck, lo.block_words))
+        elif mode.has_parity:
+            outs["digest"] = p._pack(ck.digest(row_new, lo.block_words))
+        return outs
+
+    out_specs = {"ok": P()}
+    if mode.has_parity:
+        out_specs["parity"] = p._zone_spec
+        out_specs["digest"] = p._zone_spec
+    if mode.has_cksums:
+        out_specs["cksums"] = p._zone_spec
+        out_specs["digest"] = p._zone_spec
+    protect = p._smap(
+        _protect,
+        in_specs=(p.state_specs, p._zone_spec, p._zone_spec,
+                  p.state_specs, P()),
+        out_specs=out_specs)
+
+    def commit(prot: ProtectedState, state_new, *, rng_key=None,
+               canary_ok=True):
+        step = prot.step + U32(1)
+        canary_ok = jnp.asarray(canary_ok, bool)
+        outs = protect(prot.state, prot.parity, prot.cksums, state_new,
+                       canary_ok)
+        ok = outs["ok"]
+        new_digest = outs.get("digest", prot.digest)
+        log = prot.log
+        if mode.has_log:
+            if rng_key is None:
+                rng_key = jax.random.PRNGKey(0)
+            log = redolog.append(prot.log, step, 0, rng_key,
+                                 new_digest.reshape(-1, 2)[0])
+            log = tree_select(ok, redolog.commit_mark(log, step), log)
+        new_state = tree_select(ok, state_new, prot.state)
+        return ProtectedState(
+            state=new_state, parity=outs.get("parity", prot.parity),
+            cksums=outs.get("cksums", prot.cksums), digest=new_digest,
+            replica=prot.replica, log=log,
+            step=jnp.where(ok, step, prot.step), row=prot.row), ok
+
+    return commit
+
+
+def _interleaved(fns: dict, warmup: int = 2, reps: int = 10) -> dict:
+    """Median wall time per engine, reps interleaved A/B/A/B."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    times = {name: [] for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times[name].append(time.perf_counter() - t0)
+    return {name: float(np.median(ts)) for name, ts in times.items()}
+
+
+def _xla_bytes(fn, *args, **kw) -> float:
+    """XLA 'bytes accessed' of the compiled program (deterministic)."""
+    cost = jax.jit(fn).lower(*args, **kw).compile().cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return float(cost.get("bytes accessed", 0.0))
+
+
+def _leafy_state(n_bytes: int, mesh, n_leaves: int = 16):
+    """Multi-leaf state (params/moments/cache-like) for the decode case."""
+    from jax.sharding import NamedSharding
+    g = mesh.shape["data"]
+    per = max(n_bytes // 4 // n_leaves, g)
+    per = (per + g - 1) // g * g
+    specs = {f"l{i:02d}": P("data") for i in range(n_leaves)}
+    state = {f"l{i:02d}": (jnp.arange(per, dtype=jnp.uint32) % 997
+                           + i).astype(jnp.float32)
+             for i in range(n_leaves)}
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(jax.device_put, state, sh), specs
+
+
+def _check_equal(pr_u, pr_f):
+    np.testing.assert_array_equal(np.asarray(pr_u.parity),
+                                  np.asarray(pr_f.parity))
+    np.testing.assert_array_equal(np.asarray(pr_u.digest),
+                                  np.asarray(pr_f.digest))
+    if pr_u.cksums is not None:
+        np.testing.assert_array_equal(np.asarray(pr_u.cksums),
+                                      np.asarray(pr_f.cksums))
+
+
+def run(quick: bool = False) -> dict:
+    mesh = common.get_mesh()
+    sizes = SIZES[:2] if quick else SIZES
+    reps = 10 if quick else 25
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for size in sizes:
+        for mode in MODES:
+            scen = {}
+            # -- overwrite / verify: full-state commit ----------------------
+            state, specs = common.state_of_bytes(size, mesh)
+            abstract = jax.eval_shape(lambda: state)
+            new_state = jax.tree.map(lambda x: x * 1.01, state)
+            p = Protector(mesh, abstract, specs, mode=mode, block_words=64)
+            prot = p.init(state)
+            for name, vo in (("overwrite", False), ("verify", True)):
+                fused = jax.jit(p.make_commit(verify_old=vo))
+                unfused = jax.jit(make_unfused_commit(p, verify_old=vo))
+                scen[name] = (fused, unfused, prot, new_state)
+            # -- decode: dirty-page commit on a leafy state -----------------
+            lstate, lspecs = _leafy_state(size, mesh)
+            labstract = jax.eval_shape(lambda: lstate)
+            pl_ = Protector(mesh, labstract, lspecs, mode=mode,
+                            block_words=64, hybrid_threshold=0.5)
+            lprot = pl_.init(lstate)
+            dirty = layout_mod.leaf_pages(pl_.layout, 3).tolist()
+            lnew = dict(lstate)
+            lnew["l03"] = lstate["l03"] * 1.01
+            scen["decode"] = (
+                jax.jit(pl_.make_commit(dirty_pages=dirty)),
+                jax.jit(make_unfused_commit(pl_, dirty_pages=dirty)),
+                lprot, lnew)
+            for name, (fused, unfused, pr, ns) in scen.items():
+                med = _interleaved(
+                    {"unfused": lambda: unfused(pr, ns, rng_key=key),
+                     "fused": lambda: fused(pr, ns, rng_key=key)},
+                    reps=reps)
+                pr_u, ok_u = unfused(pr, ns, rng_key=key)
+                pr_f, ok_f = fused(pr, ns, rng_key=key)
+                assert bool(ok_u) and bool(ok_f), (name, mode)
+                _check_equal(pr_u, pr_f)    # identical protection bits
+                rows.append({
+                    "size_B": size, "mode": mode.value, "scenario": name,
+                    "unfused_us": round(med["unfused"] * 1e6, 1),
+                    "fused_us": round(med["fused"] * 1e6, 1),
+                    "speedup": round(med["unfused"] / med["fused"], 2),
+                    "unfused_MB": round(_xla_bytes(
+                        unfused, pr, ns, rng_key=key) / 2**20, 2),
+                    "fused_MB": round(_xla_bytes(
+                        fused, pr, ns, rng_key=key) / 2**20, 2),
+                })
+    common.print_table(
+        "commit engine A/B (interleaved reps; MB = XLA bytes accessed)",
+        rows, ["size_B", "mode", "scenario", "unfused_us", "fused_us",
+               "speedup", "unfused_MB", "fused_MB"])
+    out = {"rows": rows, "reps": reps}
+    common.save_result("commit_sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

@@ -19,11 +19,40 @@ if "--xla_force_host_platform_device_count" not in os.environ.get(
 
 import argparse
 import importlib
+import json
 import time
 import traceback
 
-BENCHES = ["storage_overhead", "txn_latency", "scalability", "app_kv",
-           "scrub_freq", "recovery", "roofline"]
+BENCHES = ["storage_overhead", "txn_latency", "commit_sweep", "scalability",
+           "app_kv", "scrub_freq", "recovery", "roofline"]
+
+
+def emit_commit_json(txn_result: dict, quick: bool, path: str,
+                     ab_result: dict = None) -> None:
+    """Write the per-PR commit-latency record (BENCH_commit.json).
+
+    Distills txn_latency down to the commit hot path (overwrite latency
+    per mode/size), plus the interleaved unfused-vs-fused A/B when
+    commit_sweep ran, so perf regressions on the fused commit engine are
+    visible as one small diffable file; EXPERIMENTS.md §Perf records the
+    unfused-vs-fused history.
+    """
+    overwrite = {}
+    for r in txn_result["rows"]:
+        overwrite.setdefault(str(r["size_B"]), {})[r["mode"]] = \
+            r["overwrite_us"]
+    payload = {
+        "bench": "txn_latency",
+        "quick": quick,
+        "commit_engine": "fused-single-sweep",   # see kernels/commit_fused.py
+        "overwrite_us": overwrite,
+        "summary": {str(k): v for k, v in txn_result["summary"].items()},
+    }
+    if ab_result:
+        payload["ab_interleaved"] = ab_result["rows"]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"commit benchmark record -> {path}")
 
 
 def main():
@@ -32,20 +61,28 @@ def main():
                     help="comma-separated benchmark names")
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes/reps for CI")
+    ap.add_argument("--commit-json", default="BENCH_commit.json",
+                    help="where to write the commit-latency record "
+                         "(written whenever txn_latency runs)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else BENCHES
 
     status = {}
+    results = {}
     for name in names:
         print(f"\n{'=' * 70}\nBENCH {name}\n{'=' * 70}", flush=True)
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            mod.run(quick=args.quick)
+            results[name] = mod.run(quick=args.quick)
             status[name] = f"ok ({time.time() - t0:.1f}s)"
         except Exception as e:  # noqa: BLE001 — report all failures at the end
             traceback.print_exc()
             status[name] = f"FAILED: {type(e).__name__}: {e}"
+    if isinstance(results.get("txn_latency"), dict):
+        emit_commit_json(results["txn_latency"], args.quick,
+                         args.commit_json,
+                         ab_result=results.get("commit_sweep"))
     print("\n" + "=" * 70)
     for name, s in status.items():
         print(f"{name:20s} {s}")

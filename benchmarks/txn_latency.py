@@ -14,6 +14,11 @@ MLP within ~±40% of REPLICA while protecting against strictly more.
 """
 from __future__ import annotations
 
+try:
+    from benchmarks import _bootstrap  # noqa: F401  (run as a module)
+except ImportError:
+    import _bootstrap                  # noqa: F401  (run as a script)
+
 import jax
 import jax.numpy as jnp
 
@@ -78,4 +83,5 @@ def run(quick: bool = False) -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Repo smoke: the tier-1 correctness gate plus the commit-latency record.
+#
+#   scripts/smoke.sh            # full tier-1 suite + quick commit bench
+#   scripts/smoke.sh --no-bench # tests only
+#
+# Leaves BENCH_commit.json at the repo root (see benchmarks/run.py) so a
+# PR diff shows commit-path perf movement alongside test status.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "== perf: commit latency (quick) =="
+    python -m benchmarks.run --quick --only txn_latency,commit_sweep
+fi
+
+echo "smoke OK"

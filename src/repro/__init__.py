@@ -6,3 +6,5 @@ NVMM -> multi-pod-HBM mapping.
 """
 
 __version__ = "0.1.0"
+
+from repro import compat as _compat  # noqa: E402,F401  (jax API shims)

@@ -1,0 +1,40 @@
+"""Version-compatibility shims for the pinned container toolchain.
+
+The codebase targets the current jax API (`jax.shard_map` with a
+`check_vma` flag).  The container pins jax 0.4.x, where shard_map still
+lives in `jax.experimental.shard_map` and the flag is named `check_rep`.
+Everything routes through this one wrapper so call sites stay written
+against the modern API and the shim is deleted wholesale when the pin
+moves.
+"""
+from __future__ import annotations
+
+import jax
+
+# jax.tree.*_with_path landed after 0.4.x; alias the tree_util spellings so
+# call sites can use the modern namespace on either version.
+if not hasattr(jax.tree, "leaves_with_path"):
+    jax.tree.leaves_with_path = jax.tree_util.tree_leaves_with_path
+    jax.tree.map_with_path = jax.tree_util.tree_map_with_path
+    jax.tree.flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+# lax.axis_size(name) is the modern spelling of the static axis-size query;
+# psum of a literal folds to the same static value on 0.4.x.
+if not hasattr(jax.lax, "axis_size"):
+    def _axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+    jax.lax.axis_size = _axis_size
+
+try:  # jax >= 0.6: public API, replication checking via check_vma
+    from jax import shard_map as _shard_map_new
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map_new(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=check_vma)
+
+except ImportError:  # jax 0.4.x: experimental API, flag named check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)

@@ -83,6 +83,17 @@ def verify_blocks(row: jax.Array, cksums: jax.Array,
     return jnp.any(fresh != cksums, axis=1)
 
 
+def set_blocks(cksums: jax.Array, fresh: jax.Array,
+               block_idx: jax.Array) -> jax.Array:
+    """Scatter precomputed per-block terms into the checksum table.
+
+    The fused commit sweep emits fresh (k, 2) Fletcher terms for the dirty
+    blocks as a by-product of its delta pass; this applies them without
+    re-reading the block contents.
+    """
+    return cksums.at[block_idx].set(fresh)
+
+
 def update_blocks(cksums: jax.Array, new_blocks: jax.Array,
                   block_idx: jax.Array,
                   block_words: int = DEFAULT_BLOCK_WORDS) -> jax.Array:
@@ -96,7 +107,7 @@ def update_blocks(cksums: jax.Array, new_blocks: jax.Array,
     a = jnp.sum(new_blocks, axis=1, dtype=U32)
     b = jnp.sum(new_blocks * w[None, :], axis=1, dtype=U32)
     fresh = jnp.stack([a, b], axis=1)
-    return cksums.at[block_idx].set(fresh)
+    return set_blocks(cksums, fresh, block_idx)
 
 
 def update_range(cksum: jax.Array, old: jax.Array, new: jax.Array,
@@ -111,6 +122,28 @@ def update_range(cksum: jax.Array, old: jax.Array, new: jax.Array,
     idx = jnp.asarray(start, U32) + jnp.arange(d.shape[0], dtype=U32)
     db = jnp.sum((U32(n_words) - idx) * d, dtype=U32)
     return jnp.stack([cksum[0] + da, cksum[1] + db])
+
+
+def update_digest(dig: jax.Array, old_ck: jax.Array, new_ck: jax.Array,
+                  block_idx: jax.Array, n_blocks: int,
+                  block_words: int = DEFAULT_BLOCK_WORDS) -> jax.Array:
+    """Incremental whole-row digest from per-block term changes.
+
+    `dig`: (2,) current digest; `old_ck`/`new_ck`: (k, 2) Fletcher terms of
+    the dirty blocks before/after; `block_idx`: (k,) their positions.  The
+    combine rule is linear in the per-block terms, so the digest shifts by
+    the term deltas weighted by each block's tail length — cost ∝ dirty
+    blocks, and bit-identical (mod-2^32 arithmetic is exact) to a full
+    recompute.  This is what lets parity-only (MLP) commits keep a row
+    digest without a second sweep over the new row.
+    """
+    da_blocks = new_ck[:, 0] - old_ck[:, 0]
+    db_blocks = new_ck[:, 1] - old_ck[:, 1]
+    after = ((U32(n_blocks) - U32(1) - block_idx.astype(U32))
+             * U32(block_words))
+    da = jnp.sum(da_blocks, dtype=U32)
+    db = jnp.sum(db_blocks + after * da_blocks, dtype=U32)
+    return jnp.stack([dig[0] + da, dig[1] + db])
 
 
 def digest(row: jax.Array, block_words: int = DEFAULT_BLOCK_WORDS

@@ -126,6 +126,39 @@ def unflatten_row(layout: ZoneLayout, row: jax.Array) -> PyTree:
     return jax.tree.unflatten(layout.treedef, leaves)
 
 
+def update_row(layout: ZoneLayout, row: jax.Array, new_state: PyTree,
+               dirty_leaf_idx: Sequence[int]) -> jax.Array:
+    """Splice only the dirty leaves' words into a cached row.
+
+    The commit hot path keeps the previous flattened row alongside the
+    pytree (ProtectedState.row); when the update's footprint is known,
+    re-flattening the entire state per commit is replaced by word-splicing
+    just the changed leaves — cost ∝ modified range, like the paper's
+    incremental checksum updates.  `row` must equal flatten_row(old state)
+    and leaves outside `dirty_leaf_idx` must be unchanged.
+    """
+    leaves = jax.tree.leaves(new_state)
+    assert len(leaves) == len(layout.slots)
+    for i in dirty_leaf_idx:
+        slot = layout.slots[i]
+        w = utils.to_words(leaves[i])
+        assert w.shape[0] == slot.n_words, (w.shape, slot)
+        row = jax.lax.dynamic_update_slice_in_dim(row, w, slot.offset, 0)
+    return row
+
+
+def leaves_for_pages(layout: ZoneLayout, pages: Sequence[int]) -> list:
+    """Leaf indices whose slots overlap any of the given page columns."""
+    wanted = {int(p) for p in pages}
+    out = []
+    for i, slot in enumerate(layout.slots):
+        first = slot.offset // layout.block_words
+        last = (slot.offset + max(slot.n_words, 1) - 1) // layout.block_words
+        if any(first <= p <= last for p in wanted):   # O(k), not O(row pages)
+            out.append(i)
+    return out
+
+
 def leaf_pages(layout: ZoneLayout, leaf_index: int) -> np.ndarray:
     """Page-column indices overlapping a given leaf (for targeted patches)."""
     slot = layout.slots[leaf_index]

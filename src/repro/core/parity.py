@@ -36,6 +36,18 @@ def build_parity(row: jax.Array, axis_name: str) -> jax.Array:
     return coll.xor_reduce_scatter(row, axis_name)
 
 
+def apply_delta(parity_seg: jax.Array, delta_row: jax.Array,
+                axis_name: str) -> jax.Array:
+    """Bulk delta path: parity ^= XOR-reduce-scatter(old ^ new).
+
+    Algebraically identical to `build_parity(row_new)` whenever the XOR
+    invariant held before the commit (rs distributes over XOR), but it
+    consumes the delta the fused commit kernel already produced — so the
+    commit never re-reads the rows to rebuild parity.
+    """
+    return parity_seg ^ coll.xor_reduce_scatter(delta_row, axis_name)
+
+
 # ---------------------------------------------------------------------------
 # incremental patch path
 # ---------------------------------------------------------------------------
@@ -60,10 +72,22 @@ def patch_parity(parity_seg: jax.Array, old_pages: jax.Array,
     global page indices within the row.  Communicates only k pages (XOR
     all-reduce), then each owner XORs the patch into its parity segment.
     """
-    bw = layout.block_words
     from repro.kernels import ops as kops
     delta = kops.xor_delta(old_pages, new_pages)         # (k, bw)
-    patch = coll.xor_all_reduce(delta, axis_name)        # (k, bw) on all ranks
+    return patch_parity_delta(parity_seg, delta, page_idx, layout, axis_name)
+
+
+def patch_parity_delta(parity_seg: jax.Array, delta_pages: jax.Array,
+                       page_idx: jax.Array, layout: ZoneLayout,
+                       axis_name: str) -> jax.Array:
+    """`patch_parity` for callers that already hold the delta.
+
+    The fused commit sweep emits delta pages as a by-product of its single
+    pass over (old, new); this entry point applies them without re-reading
+    either operand.
+    """
+    bw = layout.block_words
+    patch = coll.xor_all_reduce(delta_pages, axis_name)  # (k, bw) on all ranks
     # Page p lives in parity segment of rank p // pages_per_seg.
     pages_per_seg = layout.seg_words // bw
     me = lax.axis_index(axis_name)

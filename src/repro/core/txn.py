@@ -36,13 +36,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.core import checksum as ck
 from repro.core import layout as layout_mod
 from repro.core import parity as parity_mod
 from repro.core import redolog
 from repro.dist import collectives as coll
+from repro.kernels import ops as kops
 
 PyTree = Any
 U32 = jnp.uint32
@@ -82,10 +84,15 @@ class ProtectedState:
     replica: Optional[PyTree]
     log: Optional[redolog.RedoLog]
     step: jax.Array                  # scalar u32, replicated
+    # Cached flattened word row, (*mesh_dims, row_words) u32.  Invariant:
+    # row == flatten_row(layout, state) whenever protection is active, so
+    # commits diff rows directly instead of re-flattening the whole state
+    # every step.  Rebuilt (never trusted) by recovery and repair.
+    row: Optional[jax.Array] = None
 
     def tree_flatten(self):
         return ((self.state, self.parity, self.cksums, self.digest,
-                 self.replica, self.log, self.step), None)
+                 self.replica, self.log, self.step, self.row), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -94,6 +101,12 @@ class ProtectedState:
 
 def tree_select(pred, on_true: PyTree, on_false: PyTree) -> PyTree:
     return jax.tree.map(lambda t, f: jnp.where(pred, t, f), on_true, on_false)
+
+
+def _zone_clean(ok, bad, axis_name):
+    """AND `no block is bad` into ok, agreed across the zone (pmin)."""
+    ok = jnp.logical_and(ok, jnp.logical_not(jnp.any(bad)))
+    return lax.pmin(ok.astype(jnp.int32), axis_name) > 0
 
 
 def _spec_leaf(x):
@@ -145,6 +158,8 @@ class Protector:
         cksums = sds(zdims + (lo.n_blocks, 2)) if mode.has_cksums else None
         dig = (sds(zdims + (2,))
                if (mode.has_parity or mode.has_cksums) else None)
+        row = (sds(zdims + (lo.row_words,))
+               if (mode.has_parity or mode.has_cksums) else None)
         replica = (jax.tree.map(
             lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), abstract_state)
             if mode.has_replica else None)
@@ -152,7 +167,7 @@ class Protector:
                if mode.has_log else None)
         return ProtectedState(state=abstract_state, parity=parity,
                               cksums=cksums, digest=dig, replica=replica,
-                              log=log, step=sds((), U32))
+                              log=log, step=sds((), U32), row=row)
 
     def protected_specs(self) -> ProtectedState:
         """PartitionSpec tree matching ProtectedState."""
@@ -168,7 +183,8 @@ class Protector:
             cksums=z if mode.has_cksums else None,
             digest=z if (mode.has_parity or mode.has_cksums) else None,
             replica=self.state_specs if mode.has_replica else None,
-            log=log, step=P())
+            log=log, step=P(),
+            row=z if (mode.has_parity or mode.has_cksums) else None)
 
     def _pack(self, x: jax.Array) -> jax.Array:
         """Local per-rank value -> shard_map output layout (leading 1s)."""
@@ -193,20 +209,23 @@ class Protector:
             if mode.has_parity:
                 outs["parity"] = self._pack(parity_mod.build_parity(row, ax))
             if mode.has_cksums:
-                outs["cksums"] = self._pack(
-                    ck.block_checksums(row, lo.block_words))
-            if mode.has_parity or mode.has_cksums:
+                cks = ck.block_checksums(row, lo.block_words)
+                outs["cksums"] = self._pack(cks)
+                outs["digest"] = self._pack(ck.combine(cks, lo.block_words))
+            elif mode.has_parity:
                 outs["digest"] = self._pack(ck.digest(row, lo.block_words))
+            if mode.has_parity or mode.has_cksums:
+                outs["row"] = self._pack(row)
             return outs
 
         out_specs = {}
-        probe = {}
         if mode.has_parity:
             out_specs["parity"] = self._zone_spec
         if mode.has_cksums:
             out_specs["cksums"] = self._zone_spec
         if mode.has_parity or mode.has_cksums:
             out_specs["digest"] = self._zone_spec
+            out_specs["row"] = self._zone_spec
         fn = self._smap(_init, in_specs=(self.state_specs,),
                         out_specs=out_specs)
         if jit:
@@ -217,70 +236,136 @@ class Protector:
         return ProtectedState(
             state=state, parity=outs.get("parity"), cksums=outs.get("cksums"),
             digest=outs.get("digest"), replica=replica, log=log,
-            step=jnp.zeros((), U32))
+            step=jnp.zeros((), U32), row=outs.get("row"))
 
     # -- commit ------------------------------------------------------------------
 
     def make_commit(self, dirty_pages: Optional[Sequence[int]] = None,
                     verify_old: bool = False):
-        """Build the jitted commit function.
+        """Build the jitted commit function (single-sweep engine).
 
         `dirty_pages`: static page-index list when the update's footprint is
         known (decode-time KV appends); None = whole state dirty (train).
         `verify_old`: verify the old row's checksums before committing (the
         paper's verify-at-micro-buffer-open), abort on mismatch.
+
+        The engine touches HBM once per operand.  The cached row
+        (`ProtectedState.row`) stands in for the old state, so the old
+        pytree is never re-flattened; the digest folds from per-block
+        Fletcher terms instead of re-reading the row.  Per path:
+
+          bulk, no verify   — old is not read at all: one fused checksum
+            sweep over new + the parity reduce-scatter of new.
+          bulk, verify      — old must be swept once anyway, so the fused
+            kernel emits verify + parity delta + new checksums from one
+            pass over (old, new) and parity consumes the delta
+            (parity ^ rs(delta) == rs(new) under the XOR invariant).
+          patch (dirty set) — the new row is word-spliced from the cache
+            (no full re-flatten) and one fused sweep over the dirty pages
+            yields [verify +] delta + checksums; the delta feeds the
+            owner-scatter parity patch.  Cost ∝ modified range.
+
+        With `verify_old` the old row is re-flattened from the live state
+        (a scribble lives in the state; a clean cache would launder it);
+        verification covers the full row on the bulk path and the opened
+        (dirty) pages on the patch path.
         """
         lo, ax, mode = self.layout, self.data_axis, self.mode
         thresh = self.hybrid_threshold
+        bw = lo.block_words
+        # static path choice, the paper's atomic-XOR/plain-XOR crossover
+        meta_only = dirty_pages is not None and len(dirty_pages) == 0
+        patch = (dirty_pages is not None and not meta_only
+                 and len(dirty_pages) / lo.n_blocks < thresh)
+        dirty_leaves = (layout_mod.leaves_for_pages(lo, dirty_pages)
+                        if (meta_only or patch) else None)
+        dirty_idx = (np.asarray(list(dirty_pages), np.int32)
+                     if patch else None)
 
-        def _protect(state_old, parity, cksums, state_new, canary_ok):
+        def _protect(state_old, row_cache, parity, cksums, digest,
+                     state_new, canary_ok):
             parity_l = self._unpack(parity) if parity is not None else None
             cksums_l = self._unpack(cksums) if cksums is not None else None
-            row_new = layout_mod.flatten_row(lo, state_new)
+            digest_l = self._unpack(digest)
+            row_old = (layout_mod.flatten_row(lo, state_old) if verify_old
+                       else self._unpack(row_cache))
+            if meta_only or patch:
+                row_new = layout_mod.update_row(lo, row_old, state_new,
+                                                dirty_leaves)
+            else:
+                row_new = layout_mod.flatten_row(lo, state_new)
             ok = canary_ok
-            row_old = None
-            if mode.has_parity or verify_old:
-                row_old = layout_mod.flatten_row(lo, state_old)
-            if verify_old and cksums_l is not None:
-                bad = ck.verify_blocks(row_old, cksums_l, lo.block_words)
-                ok = jnp.logical_and(ok, jnp.logical_not(jnp.any(bad)))
-                ok = lax.pmin(ok.astype(jnp.int32), ax) > 0
-            outs = {"ok": ok}
+            new_parity, new_cksums, new_digest = parity_l, cksums_l, digest_l
+            if meta_only:
+                pass          # the paper's "free" metadata-only transaction
+            elif patch:
+                idx = jnp.asarray(dirty_idx)
+                old_pages = parity_mod.gather_pages(row_old, idx, bw)
+                new_pages = parity_mod.gather_pages(row_new, idx, bw)
+                if mode.has_cksums:
+                    if verify_old:
+                        delta_p, fresh, bad = kops.fused_verify_commit(
+                            old_pages, new_pages, cksums_l[idx])
+                        ok = _zone_clean(ok, bad, ax)
+                    else:
+                        delta_p, fresh = kops.fused_commit(old_pages,
+                                                           new_pages)
+                    new_cksums = ck.set_blocks(cksums_l, fresh, idx)
+                    new_digest = ck.combine(new_cksums, bw)
+                else:
+                    delta_p, fresh, old_ck = kops.fused_commit_old_terms(
+                        old_pages, new_pages)
+                    new_digest = ck.update_digest(digest_l, old_ck, fresh,
+                                                  idx, lo.n_blocks, bw)
+                if mode.has_parity:
+                    new_parity = parity_mod.patch_parity_delta(
+                        parity_l, delta_p, idx, lo, ax)
+            else:
+                pages_new = parity_mod.page_view(row_new, bw)
+                if verify_old and mode.has_cksums:
+                    # old must be swept for verify anyway: the fused kernel
+                    # shares that read with the parity delta, and parity
+                    # consumes the delta (parity ^ rs(delta) == rs(new))
+                    pages_old = parity_mod.page_view(row_old, bw)
+                    delta, fresh, bad = kops.fused_verify_commit(
+                        pages_old, pages_new, cksums_l)
+                    ok = _zone_clean(ok, bad, ax)
+                    if mode.has_parity:
+                        new_parity = parity_mod.apply_delta(
+                            parity_l, delta.reshape(-1), ax)
+                else:
+                    # without verify the old row is not read at all: a
+                    # delta here would cost a write+read of a row-sized
+                    # buffer for nothing — reduce-scatter the new row
+                    fresh = kops.fletcher_blocks(pages_new)
+                    if mode.has_parity:
+                        new_parity = parity_mod.build_parity(row_new, ax)
+                if mode.has_cksums:
+                    new_cksums = fresh
+                new_digest = ck.combine(fresh, bw)
+            outs = {"ok": ok,
+                    "row": self._pack(jnp.where(ok, row_new, row_old)),
+                    "digest": self._pack(jnp.where(ok, new_digest,
+                                                   digest_l))}
             if mode.has_parity:
-                new_parity = parity_mod.hybrid_update(
-                    row_old, row_new, parity_l, lo, ax,
-                    dirty_page_idx=dirty_pages,
-                    threshold_fraction=thresh)
                 outs["parity"] = self._pack(
                     jnp.where(ok, new_parity, parity_l))
             if mode.has_cksums:
-                if dirty_pages is not None and (
-                        len(dirty_pages) < lo.n_blocks):
-                    idx = jnp.asarray(np.asarray(dirty_pages), jnp.int32)
-                    pages = parity_mod.gather_pages(row_new, idx,
-                                                    lo.block_words)
-                    new_ck = ck.update_blocks(cksums_l, pages, idx,
-                                              lo.block_words)
-                else:
-                    new_ck = ck.block_checksums(row_new, lo.block_words)
-                outs["cksums"] = self._pack(jnp.where(ok, new_ck, cksums_l))
-                outs["digest"] = self._pack(
-                    ck.combine(new_ck, lo.block_words))
-            elif mode.has_parity:
-                outs["digest"] = self._pack(ck.digest(row_new, lo.block_words))
+                outs["cksums"] = self._pack(
+                    jnp.where(ok, new_cksums, cksums_l))
             return outs
 
-        out_specs = {"ok": P()}
+        out_specs = {"ok": P(), "row": self._zone_spec,
+                     "digest": self._zone_spec}
         if mode.has_parity:
             out_specs["parity"] = self._zone_spec
-            out_specs["digest"] = self._zone_spec
         if mode.has_cksums:
             out_specs["cksums"] = self._zone_spec
-            out_specs["digest"] = self._zone_spec
         protect = self._smap(
             _protect,
             in_specs=(self.state_specs, self._zone_spec, self._zone_spec,
-                      self.state_specs, P()),
+                      self._zone_spec, self._zone_spec, self.state_specs,
+                      P()),
             out_specs=out_specs)
 
         def commit(prot: ProtectedState, state_new: PyTree, *,
@@ -289,15 +374,17 @@ class Protector:
             canary_ok = jnp.asarray(canary_ok, bool)
             log = prot.log
             digest_for_log = jnp.zeros((2,), U32)
+            new_row = prot.row
             if mode.has_parity or mode.has_cksums:
-                outs = protect(prot.state, prot.parity, prot.cksums,
-                               state_new, canary_ok)
+                outs = protect(prot.state, prot.row, prot.parity,
+                               prot.cksums, prot.digest, state_new,
+                               canary_ok)
                 ok = outs["ok"]
+                new_row = outs["row"]
                 new_parity = outs.get("parity", prot.parity)
                 new_cksums = outs.get("cksums", prot.cksums)
-                new_digest = outs.get("digest", prot.digest)
-                if new_digest is not None:
-                    digest_for_log = new_digest.reshape(-1, 2)[0]
+                new_digest = outs["digest"]
+                digest_for_log = new_digest.reshape(-1, 2)[0]
             else:
                 ok = canary_ok
                 new_parity, new_cksums, new_digest = (prot.parity,
@@ -319,14 +406,26 @@ class Protector:
             return ProtectedState(
                 state=new_state, parity=new_parity, cksums=new_cksums,
                 digest=new_digest, replica=replica, log=log,
-                step=jnp.where(ok, step, prot.step)), ok
+                step=jnp.where(ok, step, prot.step), row=new_row), ok
 
         return commit
 
-    def commit(self, prot, state_new, **kw):
-        key = ("commit", kw.pop("_dirty_key", None))
+    def commit(self, prot, state_new, *, dirty_pages=None, verify_old=False,
+               **kw):
+        """Cached-jit commit entry point.
+
+        Distinct dirty-page sets (and the verify flag) key distinct
+        compiled commits — a previous version folded `_dirty_key` into the
+        cache key but always built the no-dirty-pages commit, silently
+        sharing one stale program across different footprints.
+        """
+        key = ("commit",
+               tuple(int(p) for p in dirty_pages)
+               if dirty_pages is not None else None,
+               bool(verify_old))
         if key not in self._jit_cache:
-            self._jit_cache[key] = self.make_commit()
+            self._jit_cache[key] = jax.jit(self.make_commit(
+                dirty_pages=dirty_pages, verify_old=verify_old))
         return self._jit_cache[key](prot, state_new, **kw)
 
     # -- scrub -------------------------------------------------------------------
@@ -374,12 +473,15 @@ class Protector:
         mode = self.mode
 
         def _recover(state, parity, cksums, lost):
+            # flatten the live (damaged) state — the row cache is rebuilt,
+            # never trusted, across recovery
             row = layout_mod.flatten_row(lo, state)
             rebuilt = parity_mod.reconstruct_row(
                 row, self._unpack(parity), lost, ax)
             me = lax.axis_index(ax)
             row_out = jnp.where(me == lost, rebuilt, row)
-            out = {"state": layout_mod.unflatten_row(lo, row_out)}
+            out = {"state": layout_mod.unflatten_row(lo, row_out),
+                   "row": self._pack(row_out)}
             if mode.has_cksums:
                 bad = ck.verify_blocks(row_out, self._unpack(cksums),
                                        lo.block_words)
@@ -389,7 +491,8 @@ class Protector:
                 out["ok"] = jnp.asarray(True)
             return out
 
-        out_specs = {"state": self.state_specs, "ok": P()}
+        out_specs = {"state": self.state_specs, "ok": P(),
+                     "row": self._zone_spec}
         fn = self._smap(_recover,
                         in_specs=(self.state_specs, self._zone_spec,
                                   self._zone_spec, P()),
@@ -398,7 +501,8 @@ class Protector:
         def recover(prot: ProtectedState, lost_rank):
             out = fn(prot.state, prot.parity, prot.cksums,
                      jnp.asarray(lost_rank, jnp.int32))
-            return dataclasses.replace(prot, state=out["state"]), out["ok"]
+            return dataclasses.replace(prot, state=out["state"],
+                                       row=out["row"]), out["ok"]
 
         return recover
 
@@ -433,7 +537,8 @@ class Protector:
             fixed = others ^ par_pages
             new_pages = jnp.where(mine_bad[:, None], fixed, contents)
             row_out = pages.at[bad_page].set(new_pages).reshape(-1)
-            out = {"state": layout_mod.unflatten_row(lo, row_out)}
+            out = {"state": layout_mod.unflatten_row(lo, row_out),
+                   "row": self._pack(row_out)}
             if mode.has_cksums:
                 bad = ck.verify_blocks(row_out, self._unpack(cksums), bw)
                 any_bad = lax.pmax(jnp.any(bad).astype(jnp.int32), ax)
@@ -445,13 +550,15 @@ class Protector:
         fn = self._smap(_repair,
                         in_specs=(self.state_specs, self._zone_spec,
                                   self._zone_spec, P(), P()),
-                        out_specs={"state": self.state_specs, "ok": P()})
+                        out_specs={"state": self.state_specs, "ok": P(),
+                                   "row": self._zone_spec})
 
         def repair(prot: ProtectedState, bad_rank, bad_page):
             bad_rank = jnp.asarray(bad_rank, jnp.int32).reshape(n_pages)
             bad_page = jnp.asarray(bad_page, jnp.int32).reshape(n_pages)
             out = fn(prot.state, prot.parity, prot.cksums, bad_rank, bad_page)
-            return dataclasses.replace(prot, state=out["state"]), out["ok"]
+            return dataclasses.replace(prot, state=out["state"],
+                                       row=out["row"]), out["ok"]
 
         return repair
 

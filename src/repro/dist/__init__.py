@@ -1,0 +1,10 @@
+"""Distributed substrate: XOR collectives, sharding rules, elasticity.
+
+  collectives — the XOR algebra Pangolin's parity scheme runs on, realized
+                as mesh collectives (reduce-scatter / all-reduce / gather).
+  sharding    — logical-axis -> PartitionSpec rules with divisibility
+                fallback, shared by models, optimizer state and caches.
+  elastic     — cross-mesh resharding + protection rebuild (zone geometry
+                depends on the data-axis size G).
+  straggler   — replica drop policy for synchronous data parallelism.
+"""

@@ -1,0 +1,83 @@
+"""XOR collectives over the zone (data) axis.
+
+Pangolin's parity algebra is XOR end-to-end: building parity is an XOR
+reduction of chunk rows, patches are XOR deltas, reconstruction is XOR of
+survivors with parity (§3.1, §3.5-3.6).  XOR is associative and commutative
+but is not one of XLA's native collective reductions, so the collectives
+here compose it from data movement (all-to-all / all-gather / ppermute)
+plus local folds — bandwidth-equivalent to their psum counterparts.
+
+All functions run *inside* a shard_map; `axis_name` names the zone axis of
+size G.  Operands are uint32 word buffers (bit patterns, never floats).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def xor_fold(x: jax.Array, axis: int = 0) -> jax.Array:
+    """Local XOR reduction along one axis (no communication)."""
+    return lax.reduce(x, jnp.asarray(0, x.dtype), lax.bitwise_xor, (axis,))
+
+
+def xor_reduce_scatter(row: jax.Array, axis_name: str) -> jax.Array:
+    """XOR-reduce rows across the zone; rank i keeps segment i.
+
+    row: (n,) with n divisible by G.  Returns (n // G,): the i-th length-n/G
+    segment of the XOR of all G rows, on rank i.  One all-to-all moves each
+    rank's G-1 foreign segments (same wire bytes as a ring reduce-scatter);
+    the XOR combine is a local fold.
+    """
+    g = lax.psum(1, axis_name)
+    n = row.shape[0]
+    assert n % g == 0, (n, g)
+    segs = row.reshape(g, n // g)
+    # Non-tiled all-to-all swaps the leading positional axis with the mesh
+    # axis: afterwards rank i holds segment i of every rank's row.
+    gathered = lax.all_to_all(segs, axis_name, split_axis=0, concat_axis=0)
+    return xor_fold(gathered, axis=0)
+
+
+def all_gather_row(seg: jax.Array, axis_name: str) -> jax.Array:
+    """Concatenate per-rank segments back into the full row (rank order)."""
+    return lax.all_gather(seg, axis_name, axis=0, tiled=True)
+
+
+def xor_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """XOR of x across the zone, delivered to every rank (any shape).
+
+    Implemented as reduce-scatter + all-gather (the standard bandwidth-
+    optimal decomposition); the flat payload is padded up to a multiple of
+    G for the scatter and sliced back afterwards.
+    """
+    g = lax.psum(1, axis_name)
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % g
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    seg = xor_reduce_scatter(flat, axis_name)
+    full = all_gather_row(seg, axis_name)
+    return full[:n].reshape(shape)
+
+
+def xor_tree_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """Recursive-doubling XOR all-reduce (power-of-two zones).
+
+    log2(G) butterfly rounds of pairwise exchange; each round XORs the
+    partner's buffer in.  Latency-optimal for small payloads (parity
+    patches of a few dirty pages), where the reduce-scatter pipeline of
+    `xor_all_reduce` is all fixed cost.
+    """
+    g = lax.psum(1, axis_name)
+    assert g & (g - 1) == 0, f"tree reduce needs power-of-two zone, got {g}"
+    out = x
+    d = 1
+    while d < g:
+        perm = [(i, i ^ d) for i in range(g)]
+        out = out ^ lax.ppermute(out, axis_name, perm)
+        d *= 2
+    return out

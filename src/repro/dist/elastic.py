@@ -1,0 +1,53 @@
+"""Elastic rescale: move protected state between meshes.
+
+Zone geometry is a function of the data-axis size G (row padding, parity
+segment length, page->owner mapping), so protection cannot move with the
+state — exactly as Pangolin rebuilds parity when chunk-row geometry
+changes.  The flow is:
+
+    state' = reshard_state(prot.state, new_mesh, new_specs)   # bit-exact
+    prot'  = new_protector.init(state')                       # rebuild
+
+`reshard_state` round-trips through host memory, which works across
+arbitrary mesh shape changes (including device-count changes that XLA's
+device-to-device resharding cannot express).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def reshard_state(state: PyTree, new_mesh, new_specs: PyTree) -> PyTree:
+    """Re-shard a state pytree onto a new mesh (bit-exact, via host)."""
+    def _move(x, spec):
+        host = np.asarray(jax.device_get(x))
+        return jax.device_put(host, NamedSharding(new_mesh, spec))
+    return jax.tree.map(_move, state, new_specs, is_leaf=_is_spec)
+
+
+def rescale(protector, prot, make_protector: Callable, new_mesh):
+    """Move a protected job to `new_mesh`; returns (protector', prot').
+
+    `make_protector(new_mesh)` builds the Protector for the new geometry
+    (same abstract state / mode, new mesh).  Parity, checksums, digest and
+    the cached row are rebuilt from the resharded state; the step counter
+    carries over as a host value so no device array leaks across meshes.
+    """
+    p_new = make_protector(new_mesh)
+    state = reshard_state(prot.state, new_mesh, p_new.state_specs)
+    prot_new = p_new.init(state)
+    step = int(jax.device_get(prot.step))
+    return p_new, dataclasses.replace(
+        prot_new, step=jnp.asarray(step, jnp.uint32))

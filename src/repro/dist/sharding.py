@@ -1,0 +1,99 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Model / optimizer / cache code names tensor dimensions logically ("embed",
+"heads", "batch", ...); this module maps logical names onto mesh axes:
+
+  * each logical name carries an ordered list of *candidates* (tuples of
+    mesh axes, so "batch" can span ("pod", "data") on multi-pod meshes);
+  * a candidate is taken only if every mesh axis exists, the dimension is
+    divisible by the candidate's total size, and no axis in it is already
+    used by an earlier dimension of the same spec (no double-booking);
+  * otherwise the next candidate is tried, and with none left the
+    dimension replicates.
+
+The fallback is what makes one model definition valid on every mesh the
+elastic-rescale path moves it across: a head count that does not divide
+the model axis silently degrades to replication instead of erroring.
+Per-config overrides (`ModelConfig.logical_overrides`) merge over the
+defaults, with the same candidate format.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# FSDP + TP defaults: batch/embed spread over the data dimension(s), the
+# contraction-heavy weight dims over the tensor-parallel model axis.
+DEFAULT_RULES = {
+    "batch": (("pod", "data"), ("data",)),
+    "embed": (("data",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "vocab": (("model",),),
+    "ffn": (("model",),),
+    "experts": (("model",),),
+    "seq_shard": (("model",),),
+}
+
+
+def _candidates(rule) -> list:
+    """Normalize a rule value into a list of mesh-axis tuples."""
+    if rule is None:
+        return []
+    if isinstance(rule, str):
+        return [(rule,)]
+    out = []
+    for cand in rule:
+        out.append((cand,) if isinstance(cand, str) else tuple(cand))
+    return out
+
+
+def spec_for(mesh, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None,
+             rules: Optional[dict] = None) -> P:
+    """PartitionSpec for a tensor with the given logical axes.
+
+    `shape` enables the divisibility check (omit it to trust the caller);
+    `rules` are per-call overrides merged over DEFAULT_RULES.
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+        if hasattr(mesh, "devices") else dict(mesh.shape)
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    used: set = set()
+    entries = []
+    for i, name in enumerate(logical):
+        dim = None if shape is None else int(shape[i])
+        chosen = None
+        if name is not None:
+            for cand in _candidates(merged.get(name)):
+                if not all(a in mesh_shape for a in cand):
+                    continue
+                if any(a in used for a in cand):
+                    continue
+                size = math.prod(mesh_shape[a] for a in cand)
+                if dim is not None and (size == 0 or dim % size != 0):
+                    continue
+                chosen = cand
+                break
+        if chosen is None:
+            entries.append(None)
+        else:
+            used.update(chosen)
+            entries.append(chosen if len(chosen) > 1 else chosen[0])
+    while entries and entries[-1] is None:   # trailing dims replicate anyway
+        entries.pop()
+    return P(*entries)
+
+
+def constrain(x: jax.Array, mesh, logical: Sequence[Optional[str]],
+              rules: Optional[dict] = None) -> jax.Array:
+    """with_sharding_constraint via the logical rules (no-op off-mesh)."""
+    if mesh is None:
+        return x
+    spec = spec_for(mesh, tuple(logical), tuple(x.shape), rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

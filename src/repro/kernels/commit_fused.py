@@ -1,14 +1,25 @@
-"""Pallas TPU kernel: fused commit sweep (beyond-paper optimization).
+"""Pallas TPU kernels: fused commit sweeps (beyond-paper optimization).
 
-Pangolin's commit makes three passes over the modified ranges: compute the
-checksum of the new data, compute the parity patch old ^ new, and write the
-data back (§3.4-3.5).  All three are memory-bound, so on TPU the win is to
-touch HBM once: this kernel streams (old, new) tiles through VMEM a single
-time and emits both the parity delta and the per-page Fletcher terms.
+Pangolin's commit makes separate passes over the modified ranges: verify
+the old data's checksums at micro-buffer open, compute the checksum of the
+new data, compute the parity patch old ^ new (§3.4-3.5).  All of them are
+memory-bound, so on TPU the win is to touch HBM once per operand:
 
-HBM traffic per page:  unfused = read old + 2x read new + write delta
-                       fused   = read old + 1x read new + write delta
-=> 25% less traffic on the commit hot path (see EXPERIMENTS.md §Perf).
+  * `fused_commit`         streams (old, new) tiles through VMEM once and
+    emits the parity delta plus the new per-page Fletcher terms.
+  * `fused_verify_commit`  additionally folds the verify-at-open into the
+    same sweep: the old tile — already in VMEM for the delta — also
+    produces its Fletcher terms, compared against the stored checksums.
+
+HBM traffic per page (r = read, w = write, bad = 2-word compare):
+
+  unfused verify+commit = r old (verify) + r old + r new (delta)
+                          + r new (checksum) + w delta         = 4 reads
+  fused                 = r old + r new + w delta              = 2 reads
+
+=> half the read traffic on the commit hot path; with the Protector's row
+cache eliminating the old-state re-flatten as well, the whole MLPC commit
+is one sweep over each operand (see EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
@@ -22,6 +33,14 @@ U32 = jnp.uint32
 TILE_BLOCKS = 8
 
 
+def _pick_tb(n: int) -> int:
+    """Largest tile height <= TILE_BLOCKS that divides the block count."""
+    t = min(TILE_BLOCKS, n)
+    while n % t:
+        t -= 1
+    return t
+
+
 def _fused_kernel(old_ref, new_ref, delta_ref, ck_ref):
     old = old_ref[...]
     new = new_ref[...]
@@ -33,13 +52,29 @@ def _fused_kernel(old_ref, new_ref, delta_ref, ck_ref):
     ck_ref[...] = jnp.stack([a, b], axis=-1)
 
 
+def _fused_verify_kernel(old_ref, new_ref, stored_ref, delta_ref, ck_ref,
+                         mism_ref):
+    old = old_ref[...]
+    new = new_ref[...]
+    delta_ref[...] = old ^ new
+    bw = new.shape[-1]
+    w = U32(bw) - jax.lax.broadcasted_iota(U32, (1, bw), 1)
+    # old tile is in VMEM for the delta anyway: its Fletcher terms are free
+    a_old = jnp.sum(old, axis=-1, dtype=U32)
+    b_old = jnp.sum(old * w, axis=-1, dtype=U32)
+    # XOR difference vs stored terms: all-zero == block verifies clean
+    mism_ref[...] = jnp.stack([a_old, b_old], axis=-1) ^ stored_ref[...]
+    a = jnp.sum(new, axis=-1, dtype=U32)
+    b = jnp.sum(new * w, axis=-1, dtype=U32)
+    ck_ref[...] = jnp.stack([a, b], axis=-1)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fused_commit(old: jax.Array, new: jax.Array, *, interpret: bool = False):
     """old/new: (n_blocks, block_words) u32 -> (delta, cksums)."""
     assert old.shape == new.shape and old.dtype == U32 == new.dtype
     n, bw = old.shape
-    tb = min(TILE_BLOCKS, n)
-    assert n % tb == 0, (n, tb)
+    tb = _pick_tb(n)
     return pl.pallas_call(
         _fused_kernel,
         grid=(n // tb,),
@@ -51,3 +86,54 @@ def fused_commit(old: jax.Array, new: jax.Array, *, interpret: bool = False):
                    jax.ShapeDtypeStruct((n, 2), U32)],
         interpret=interpret,
     )(old, new)
+
+
+def _verify_call(old: jax.Array, new: jax.Array, stored: jax.Array,
+                 interpret: bool):
+    """Shared sweep: (delta, new terms, old terms XOR stored)."""
+    assert old.shape == new.shape and old.dtype == U32 == new.dtype
+    n, bw = old.shape
+    assert stored.shape == (n, 2) and stored.dtype == U32, stored.shape
+    tb = _pick_tb(n)
+    return pl.pallas_call(
+        _fused_verify_kernel,
+        grid=(n // tb,),
+        in_specs=[pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                  pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                  pl.BlockSpec((tb, 2), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                   pl.BlockSpec((tb, 2), lambda i: (i, 0)),
+                   pl.BlockSpec((tb, 2), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, bw), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32)],
+        interpret=interpret,
+    )(old, new, stored)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_verify_commit(old: jax.Array, new: jax.Array, stored: jax.Array,
+                        *, interpret: bool = False):
+    """Single sweep: verify old vs `stored` + delta + new checksums.
+
+    old/new: (n_blocks, block_words) u32; stored: (n_blocks, 2) u32 Fletcher
+    terms the old blocks must still match.  Returns (delta, new_cksums,
+    bad) with bad: (n_blocks,) bool, True where the old block fails
+    verification (the paper's verify-at-micro-buffer-open).
+    """
+    delta, ck, mism = _verify_call(old, new, stored, interpret)
+    return delta, ck, jnp.any(mism != 0, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_commit_old_terms(old: jax.Array, new: jax.Array, *,
+                           interpret: bool = False):
+    """Single sweep: (delta, new checksums, old checksums).
+
+    The verify kernel's mismatch output is `old_terms XOR stored`; with
+    stored = 0 it is the raw old terms — so the parity-only (MLP) patch
+    path gets the old-page Fletcher terms its incremental digest needs
+    from the same pass that produced the delta, not a second sweep.
+    """
+    zeros = jnp.zeros((old.shape[0], 2), U32)
+    return _verify_call(old, new, zeros, interpret)

@@ -58,3 +58,19 @@ def fused_commit(old: jax.Array, new: jax.Array, *,
     if p is None:
         return _ref.fused_commit_ref(old, new)
     return _fused.fused_commit(old, new, interpret=p)
+
+
+def fused_verify_commit(old: jax.Array, new: jax.Array, stored: jax.Array,
+                        *, interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_verify_commit_ref(old, new, stored)
+    return _fused.fused_verify_commit(old, new, stored, interpret=p)
+
+
+def fused_commit_old_terms(old: jax.Array, new: jax.Array, *,
+                           interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_commit_old_terms_ref(old, new)
+    return _fused.fused_commit_old_terms(old, new, interpret=p)

@@ -43,3 +43,22 @@ def fused_commit_ref(old: jax.Array, new: jax.Array):
     checksums); the fused kernel reads old+new exactly once.
     """
     return xor_delta_ref(old, new), fletcher_blocks_ref(new)
+
+
+def fused_verify_commit_ref(old: jax.Array, new: jax.Array,
+                            stored: jax.Array):
+    """Verify + delta + new checksums, semantics of the fused sweep.
+
+    old/new: (n, bw) u32; stored: (n, 2) u32.  Returns (delta, new cksums,
+    bad (n,) bool) where bad marks old blocks whose recomputed Fletcher
+    terms no longer match `stored` (verify-at-micro-buffer-open).
+    """
+    assert stored.shape == (old.shape[0], 2) and stored.dtype == U32
+    bad = jnp.any(fletcher_blocks_ref(old) != stored, axis=-1)
+    return xor_delta_ref(old, new), fletcher_blocks_ref(new), bad
+
+
+def fused_commit_old_terms_ref(old: jax.Array, new: jax.Array):
+    """(delta, new cksums, old cksums) — one logical sweep per operand."""
+    return (xor_delta_ref(old, new), fletcher_blocks_ref(new),
+            fletcher_blocks_ref(old))

@@ -22,7 +22,9 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
+
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import layout as layout_mod

@@ -1,0 +1,86 @@
+"""Minimal deterministic stand-in for `hypothesis` (not installed here).
+
+The container image does not ship hypothesis and installing packages is
+off-limits, so conftest registers this module under ``sys.modules
+["hypothesis"]`` when the real library is missing.  It implements exactly
+the surface the test-suite uses — ``given``, ``settings`` and the
+``integers`` / ``sampled_from`` / ``sets`` / ``data`` strategies — as a
+deterministic example sweep: each ``@given`` test runs ``max_examples``
+times with examples drawn from per-iteration seeded numpy generators, so
+failures reproduce exactly.  No shrinking, no database; if the real
+hypothesis is present it is always preferred.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def example(self, rng) -> object:
+        return self._draw_fn(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def sets(elements: Strategy, min_size: int = 0, max_size: int = 10
+         ) -> Strategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        out = set()
+        attempts = 0
+        while len(out) < size and attempts < 1000:
+            out.add(elements.example(rng))
+            attempts += 1
+        return out
+    return Strategy(draw)
+
+
+class _Data:
+    """Interactive draw object handed to tests that request st.data()."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy):
+        return strategy.example(self._rng)
+
+
+def data() -> Strategy:
+    return Strategy(lambda rng: _Data(rng))
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: Strategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            # read lazily so @settings composes in either decorator order
+            n_examples = getattr(wrapper, "_max_examples",
+                                 getattr(fn, "_max_examples", 20))
+            for i in range(n_examples):
+                rng = np.random.default_rng(7919 * i + 13)
+                drawn = tuple(s.example(rng) for s in strategies)
+                fn(*args, *drawn, **kwargs)
+        # deliberately NOT functools.wraps: pytest must see the zero-arg
+        # signature, not the wrapped test's strategy parameters (it would
+        # try to resolve them as fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -10,6 +10,16 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+import sys
+
+try:                             # the container image may not ship hypothesis
+    import hypothesis            # noqa: F401
+except ImportError:
+    from tests import _hypothesis_stub
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub
+    _hypothesis_stub.strategies = _hypothesis_stub
+
 import dataclasses
 
 import jax

@@ -95,7 +95,7 @@ def test_roofline_terms_bound_selection():
 def test_collective_parsing_shard_map(mesh42):
     """psum inside shard_map must be seen as an all-reduce with wire bytes
     2 (G-1)/G * payload."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     n = 1024
@@ -115,7 +115,7 @@ def test_collective_parsing_shard_map(mesh42):
 
 
 def test_collective_parsing_all_gather(mesh42):
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     def f(x):

@@ -72,6 +72,94 @@ def test_fused_commit_is_delta_plus_fletcher():
                                                            interpret=True)))
 
 
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_verify_commit_kernel_vs_ref(shape):
+    old = rand_u32(shape, seed=20)
+    new = rand_u32(shape, seed=21)
+    stored = ref.fletcher_blocks_ref(old)
+    d_k, c_k, b_k = commit_fused.fused_verify_commit(old, new, stored,
+                                                     interpret=True)
+    d_r, c_r, b_r = ref.fused_verify_commit_ref(old, new, stored)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    np.testing.assert_array_equal(np.asarray(b_k), np.asarray(b_r))
+
+
+def test_fused_verify_commit_is_composition():
+    """One sweep == verify(old) + delta + fletcher(new) composed."""
+    old = rand_u32((16, 512), seed=22)
+    new = rand_u32((16, 512), seed=23)
+    stored = fletcher.fletcher_blocks(old, interpret=True)
+    d, c, bad = commit_fused.fused_verify_commit(old, new, stored,
+                                                 interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(d),
+        np.asarray(xor_parity.xor_delta(old, new, interpret=True)))
+    np.testing.assert_array_equal(
+        np.asarray(c),
+        np.asarray(fletcher.fletcher_blocks(new, interpret=True)))
+    assert not np.asarray(bad).any(), "clean old row must verify clean"
+
+
+@pytest.mark.parametrize("bitpos", [0, 13, 31])
+def test_fused_verify_commit_flags_corrupt_old(bitpos):
+    """A corrupted old row must flip exactly its block's verify bit."""
+    n, bw = 8, 256
+    old = rand_u32((n, bw), seed=24)
+    new = rand_u32((n, bw), seed=25)
+    stored = ref.fletcher_blocks_ref(old)
+    scribbled = np.asarray(old).copy()
+    scribbled[3, 17] ^= np.uint32(1 << bitpos)
+    _, _, bad = commit_fused.fused_verify_commit(
+        jnp.asarray(scribbled), new, stored, interpret=True)
+    bad = np.asarray(bad)
+    assert bad[3], "scribbled block must fail verification"
+    assert bad.sum() == 1, "only the scribbled block may be flagged"
+    # the jnp oracle agrees
+    _, _, bad_r = ref.fused_verify_commit_ref(jnp.asarray(scribbled), new,
+                                              stored)
+    np.testing.assert_array_equal(bad, np.asarray(bad_r))
+
+
+def test_fused_verify_commit_ops_dispatch():
+    """CPU wrapper routes to the oracle; interpret flag forces Pallas."""
+    old = rand_u32((4, 128), seed=26)
+    new = rand_u32((4, 128), seed=27)
+    stored = ref.fletcher_blocks_ref(old)
+    for kw in ({}, {"interpret": True}):
+        d, c, b = ops.fused_verify_commit(old, new, stored, **kw)
+        d_r, c_r, b_r = ref.fused_verify_commit_ref(old, new, stored)
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(d_r))
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(c_r))
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(b_r))
+
+
+def test_fused_commit_old_terms_kernel_vs_ref():
+    """Zero stored terms turn the verify sweep into raw old-term output."""
+    old = rand_u32((8, 256), seed=30)
+    new = rand_u32((8, 256), seed=31)
+    d_k, c_k, o_k = commit_fused.fused_commit_old_terms(old, new,
+                                                        interpret=True)
+    d_r, c_r, o_r = ref.fused_commit_old_terms_ref(old, new)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    np.testing.assert_array_equal(np.asarray(o_k), np.asarray(o_r))
+    np.testing.assert_array_equal(
+        np.asarray(ops.fused_commit_old_terms(old, new)[2]),
+        np.asarray(ref.fletcher_blocks_ref(old)))
+
+
+def test_fused_kernels_odd_block_counts():
+    """Tile picking must handle block counts not divisible by TILE_BLOCKS."""
+    for n in (3, 12, 17):
+        old = rand_u32((n, 128), seed=n)
+        new = rand_u32((n, 128), seed=n + 1)
+        d, c = commit_fused.fused_commit(old, new, interpret=True)
+        d_r, c_r = ref.fused_commit_ref(old, new)
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(d_r))
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(c_r))
+
+
 def test_xor_properties():
     """Algebra the parity scheme relies on: self-inverse, commutativity."""
     a, b, c = (rand_u32((4, 64), seed=s) for s in (9, 10, 11))

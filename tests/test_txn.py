@@ -228,6 +228,122 @@ def test_patch_path_equals_bulk_path(setup):
                                   np.asarray(new_state["w1"]))
 
 
+def test_row_cache_tracks_state(setup):
+    """ProtectedState.row must stay bit-identical to flatten(state) across
+    init -> commit -> abort -> recovery (the single-sweep engine trusts it
+    as the old operand)."""
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC)
+    prot = p.init(state)
+
+    def row_of(pr):
+        """Reference row: rebuilt from the live state by a fresh init."""
+        return np.asarray(p.init(pr.state).row)
+
+    np.testing.assert_array_equal(np.asarray(prot.row), row_of(prot))
+    commit = jax.jit(p.make_commit())
+    new_state = jax.tree.map(lambda x: (x * 2 + 1).astype(x.dtype), state)
+    prot2, ok = commit(prot, new_state, rng_key=jax.random.PRNGKey(0))
+    assert bool(ok)
+    np.testing.assert_array_equal(np.asarray(prot2.row), row_of(prot2))
+    # abort: the cache must stay on the old row
+    prot3, ok3 = commit(prot2, jax.tree.map(jnp.zeros_like, state),
+                        canary_ok=False)
+    assert not bool(ok3)
+    np.testing.assert_array_equal(np.asarray(prot3.row),
+                                  np.asarray(prot2.row))
+    # recovery rebuilds (never trusts) the cache
+    prot4, ok4 = p.recover_rank(prot2, 2)
+    assert bool(ok4)
+    np.testing.assert_array_equal(np.asarray(prot4.row), row_of(prot4))
+
+
+def test_commit_cache_keys_distinct_dirty_sets(setup):
+    """Protector.commit must compile one program per (dirty set, verify)
+    — the old cache keyed on _dirty_key but always built the bulk commit,
+    so a metadata-only commit would wrongly re-sweep everything (and a
+    dirty-page commit would wrongly share the empty-set program)."""
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC)
+    prot = p.init(state)
+    lo = p.layout
+    dirty = layout_mod.leaf_pages(lo, 1).tolist()       # w1's pages
+
+    new_state = dict(state)
+    new_state["w1"] = state["w1"] * 2 + 1
+    prot_a, ok_a = p.commit(prot, new_state, dirty_pages=dirty,
+                            rng_key=jax.random.PRNGKey(1))
+    assert bool(ok_a)
+    # metadata-only commit: same state back, zero dirty pages => parity,
+    # checksums and digest unchanged
+    prot_b, ok_b = p.commit(prot_a, prot_a.state, dirty_pages=[],
+                            rng_key=jax.random.PRNGKey(2))
+    assert bool(ok_b)
+    np.testing.assert_array_equal(np.asarray(prot_b.parity),
+                                  np.asarray(prot_a.parity))
+    np.testing.assert_array_equal(np.asarray(prot_b.cksums),
+                                  np.asarray(prot_a.cksums))
+    np.testing.assert_array_equal(np.asarray(prot_b.digest),
+                                  np.asarray(prot_a.digest))
+    # the dirty-page commit really updated protection (distinct program)
+    assert not np.array_equal(np.asarray(prot_a.parity),
+                              np.asarray(prot.parity))
+    keys = [k for k in p._jit_cache if k[0] == "commit"]
+    assert len(keys) == 2, keys
+    # and the patched protection still recovers a lost rank bit-exactly
+    prot_rec, okr = p.recover_rank(prot_b, 1)
+    assert bool(okr)
+    np.testing.assert_array_equal(np.asarray(prot_rec.state["w1"]),
+                                  np.asarray(new_state["w1"]))
+
+
+def test_verify_old_patch_path_aborts_on_corrupt_dirty_page(setup):
+    """The patch path verifies the pages being opened: committing on top
+    of a corrupted dirty page must abort."""
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC,
+                       hybrid_threshold=1.1)              # force patch
+    prot = p.init(state)
+    lo = p.layout
+    dirty = layout_mod.leaf_pages(lo, 1).tolist()
+    scr = np.asarray(prot.state["w1"]).copy()
+    scr[1, 1] = 777.0                                     # inside w1's pages
+    bad = dict(prot.state)
+    bad["w1"] = jax.device_put(scr, shardings["w1"])
+    prot_bad = dataclasses.replace(prot, state=bad)
+    new_state = dict(prot_bad.state)
+    new_state["w1"] = prot_bad.state["w1"] + 1
+    prot2, ok = p.commit(prot_bad, new_state, dirty_pages=dirty,
+                         verify_old=True, rng_key=jax.random.PRNGKey(3))
+    assert not bool(ok)
+    assert int(prot2.step) == 0
+
+
+def test_mlp_digest_matches_full_recompute_on_patch(setup):
+    """MLP (no stored checksums) keeps its row digest incrementally on the
+    patch path; it must equal the bulk path's digest bit-for-bit."""
+    mesh, state, specs, shardings = setup
+    p_patch = make_protector(mesh, state, specs, Mode.MLP,
+                             hybrid_threshold=1.1)
+    p_bulk = make_protector(mesh, state, specs, Mode.MLP,
+                            hybrid_threshold=0.0)
+    prot_a = p_patch.init(state)
+    prot_b = p_bulk.init(state)
+    lo = p_patch.layout
+    dirty = layout_mod.leaf_pages(lo, 1).tolist()
+    new_state = dict(state)
+    new_state["w1"] = state["w1"] * 3 - 2
+    prot_a2, ok_a = p_patch.commit(prot_a, new_state, dirty_pages=dirty,
+                                   rng_key=jax.random.PRNGKey(4))
+    prot_b2, ok_b = p_bulk.commit(prot_b, new_state,
+                                  rng_key=jax.random.PRNGKey(4))
+    assert bool(ok_a) and bool(ok_b)
+    np.testing.assert_array_equal(np.asarray(prot_a2.digest),
+                                  np.asarray(prot_b2.digest))
+    np.testing.assert_array_equal(np.asarray(prot_a2.parity),
+                                  np.asarray(prot_b2.parity))
+
+
 def test_protection_overhead_report(setup):
     mesh, state, specs, _ = setup
     p = make_protector(mesh, state, specs, Mode.MLPC)
