@@ -141,8 +141,13 @@ def _interleaved(fns: dict, warmup: int = 2, reps: int = 10) -> dict:
 
 
 def _xla_bytes(fn, *args, **kw) -> float:
-    """XLA 'bytes accessed' of the compiled program (deterministic)."""
-    cost = jax.jit(fn).lower(*args, **kw).compile().cost_analysis()
+    """XLA 'bytes accessed' of the compiled program (deterministic).
+
+    Already-jitted callables (which may carry static/donated argnums)
+    are lowered as-is rather than re-wrapped.
+    """
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    cost = jitted.lower(*args, **kw).compile().cost_analysis()
     if isinstance(cost, (list, tuple)):
         cost = cost[0]
     return float(cost.get("bytes accessed", 0.0))

@@ -1,0 +1,142 @@
+"""Deferred-epoch vs synchronous commit engine — interleaved A/B.
+
+The acceptance comparison for the deferred-epoch engine (core/epoch.py):
+the decode scenario (leafy state, one leaf dirty per step — the serving
+hot path) run with window W in {1, 4, 16}, where W=1 is the synchronous
+single-sweep engine (`Protector.make_commit(dirty_pages=...)`) and W>1
+the DeferredProtector.  Three measurements per cell:
+
+  * amortized wall time per step, interleaved across engines rep by rep
+    so ambient machine noise hits every engine equally (each rep runs a
+    full window: W-1 in-window commits + the flush);
+  * amortized XLA "bytes accessed" per step, ((W-1)*step + step+flush)/W
+    — deterministic, machine-state-free;
+  * bit-identity: at every epoch boundary the deferred engine's parity /
+    cksums / digest / row must equal the synchronous engine's exactly.
+
+Both engines run with the static (host-known) canary, so the A/B
+isolates the deferral itself, not abort-gating differences.
+"""
+from __future__ import annotations
+
+import sys
+
+try:
+    from benchmarks import _bootstrap  # noqa: F401  (run as a module)
+except ImportError:
+    import _bootstrap                  # noqa: F401  (run as a script)
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.commit_sweep import _leafy_state, _xla_bytes
+from repro.core import layout as layout_mod
+from repro.core.epoch import DeferredProtector
+from repro.core.txn import Mode, Protector
+
+SIZES = [256 * 1024, 1024 * 1024]
+WINDOWS = [1, 4, 16]
+MODES = [Mode.MLPC, Mode.MLP]
+
+
+def _check_boundary_equal(pr_sync, est, mode):
+    np.testing.assert_array_equal(np.asarray(pr_sync.parity),
+                                  np.asarray(est.prot.parity))
+    np.testing.assert_array_equal(np.asarray(pr_sync.digest),
+                                  np.asarray(est.prot.digest))
+    np.testing.assert_array_equal(np.asarray(pr_sync.row),
+                                  np.asarray(est.prot.row))
+    if mode.has_cksums:
+        np.testing.assert_array_equal(np.asarray(pr_sync.cksums),
+                                      np.asarray(est.prot.cksums))
+
+
+def run(quick: bool = False) -> dict:
+    mesh = common.get_mesh()
+    reps = 12 if quick else 25
+    span = 16                      # steps per timed rep, every engine
+    rows = []
+    for size in SIZES:
+        for mode in MODES:
+            state, specs = _leafy_state(size, mesh)
+            abstract = jax.eval_shape(lambda: state)
+            p = Protector(mesh, abstract, specs, mode=mode, block_words=64)
+            lo = p.layout
+            dirty = layout_mod.leaf_pages(lo, 3).tolist()
+            new = dict(state)
+            new["l03"] = state["l03"] * 1.01
+            sync = jax.jit(p.make_commit(dirty_pages=dirty),
+                           static_argnames=("canary_ok",))
+
+            engines = {}
+            for w in WINDOWS:
+                if w == 1:
+                    prot = p.init(state)
+
+                    def run_sync(prot=prot):
+                        pr = prot
+                        for _ in range(span):
+                            pr, ok = sync(pr, new)
+                        return pr
+
+                    engines[w] = run_sync
+                    bytes_step = _xla_bytes(sync, prot, new)
+                else:
+                    eng = DeferredProtector(p, window=w,
+                                            dirty_leaf_idx=[3],
+                                            donate=False)
+                    est0 = eng.init(state)
+                    est0, _ = eng.commit(est0, new)     # compile both
+                    eng._since = 0
+
+                    def run_def(eng=eng, est0=est0):
+                        est = est0
+                        eng._since = 0
+                        for _ in range(span):
+                            est, ok = eng.commit(est, new)
+                        return est
+
+                    engines[w] = run_def
+                    step_b = _xla_bytes(
+                        eng._jit["step"], est0.prot, est0.dirty,
+                        est0.pending, new, None, 0, None, True)
+                    flush_b = _xla_bytes(
+                        eng._jitted("flush", eng.make_flush), est0)
+                    bytes_step = (step_b * w + flush_b) / w
+                rows.append({"size_B": size, "mode": mode.value,
+                             "window": w,
+                             "bytes_per_step_MB": round(bytes_step / 2**20,
+                                                        3)})
+
+            # interleaved wall: rep r runs every engine back to back
+            for fn in engines.values():
+                for _ in range(2):
+                    jax.block_until_ready(jax.tree.leaves(fn())[0])
+            times = {w: [] for w in engines}
+            for _ in range(reps):
+                for w, fn in engines.items():
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(jax.tree.leaves(fn())[0])
+                    times[w].append(time.perf_counter() - t0)
+            for row in rows[-len(engines):]:
+                med = float(np.median(times[row["window"]]))
+                row["wall_us_per_step"] = round(med / span * 1e6, 1)
+
+            # bit-identity at the epoch boundary (16 commits everywhere)
+            pr_sync = engines[1]()
+            for w in WINDOWS[1:]:
+                _check_boundary_equal(pr_sync, engines[w](), mode)
+    common.print_table(
+        "deferred-epoch A/B (interleaved reps; W=1 == synchronous)",
+        rows, ["size_B", "mode", "window", "wall_us_per_step",
+               "bytes_per_step_MB"])
+    out = {"rows": rows, "reps": reps, "span": span}
+    common.save_result("deferred", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv)

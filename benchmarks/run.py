@@ -23,19 +23,21 @@ import json
 import time
 import traceback
 
-BENCHES = ["storage_overhead", "txn_latency", "commit_sweep", "scalability",
-           "app_kv", "scrub_freq", "recovery", "roofline"]
+BENCHES = ["storage_overhead", "txn_latency", "commit_sweep", "deferred",
+           "scalability", "app_kv", "scrub_freq", "recovery", "roofline"]
 
 
 def emit_commit_json(txn_result: dict, quick: bool, path: str,
-                     ab_result: dict = None) -> None:
+                     ab_result: dict = None,
+                     deferred_result: dict = None) -> None:
     """Write the per-PR commit-latency record (BENCH_commit.json).
 
     Distills txn_latency down to the commit hot path (overwrite latency
     per mode/size), plus the interleaved unfused-vs-fused A/B when
-    commit_sweep ran, so perf regressions on the fused commit engine are
-    visible as one small diffable file; EXPERIMENTS.md §Perf records the
-    unfused-vs-fused history.
+    commit_sweep ran and the deferred-epoch W-sweep when `deferred` ran,
+    so perf regressions on the commit engines are visible as one small
+    diffable file (scripts/bench_gate.py diffs it against the committed
+    baseline); EXPERIMENTS.md §Perf records the history.
     """
     overwrite = {}
     for r in txn_result["rows"]:
@@ -44,12 +46,14 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
     payload = {
         "bench": "txn_latency",
         "quick": quick,
-        "commit_engine": "fused-single-sweep",   # see kernels/commit_fused.py
+        "commit_engine": "fused-single-sweep+deferred-epoch",
         "overwrite_us": overwrite,
         "summary": {str(k): v for k, v in txn_result["summary"].items()},
     }
     if ab_result:
         payload["ab_interleaved"] = ab_result["rows"]
+    if deferred_result:
+        payload["deferred"] = deferred_result["rows"]
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"commit benchmark record -> {path}")
@@ -82,7 +86,8 @@ def main():
     if isinstance(results.get("txn_latency"), dict):
         emit_commit_json(results["txn_latency"], args.quick,
                          args.commit_json,
-                         ab_result=results.get("commit_sweep"))
+                         ab_result=results.get("commit_sweep"),
+                         deferred_result=results.get("deferred"))
     print("\n" + "=" * 70)
     for name, s in status.items():
         print(f"{name:20s} {s}")

@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""Commit-path perf gate: diff a fresh BENCH_commit.json against the
+committed baseline and fail on regression.
+
+Two classes of signal, gated differently:
+
+  * compiled "bytes accessed" cells are deterministic, so they gate
+    tightly (--bytes-tol, default 0.02 = 2% compiler drift) AND the
+    deferred section must keep its structural invariant: W=16 amortized
+    bytes per step strictly below the W=1 synchronous engine for every
+    (size, mode) — the acceptance property that must never regress.
+    These are the perf gate.
+  * wall-clock cells (overwrite_us, deferred wall_us_per_step) swing
+    with ambient load far beyond any useful tolerance between runs
+    (EXPERIMENTS.md §Perf measured >10x on this box; its standing rule
+    is "never compare two separate runs"), so by default they only trip
+    a pathology catch-all (--wall-tol 9.0 = fail past 10x — a hang or
+    accidental O(n) blowup, not a perf comparison).  Tighten --wall-tol
+    on a quiet, pinned box if wall gating is wanted.
+
+Usage:  python scripts/bench_gate.py [--fresh PATH] [--baseline PATH]
+Exit 0 = no regression; exit 1 = regression (each violation printed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _index(rows, keys):
+    out = {}
+    for r in rows:
+        out[tuple(r[k] for k in keys)] = r
+    return out
+
+
+def check(fresh: dict, base: dict, wall_tol: float,
+          bytes_tol: float) -> list:
+    bad = []
+
+    # -- wall: overwrite ladder ------------------------------------------------
+    for size, modes in fresh.get("overwrite_us", {}).items():
+        for mode, us in modes.items():
+            ref = base.get("overwrite_us", {}).get(size, {}).get(mode)
+            if ref and us > ref * (1 + wall_tol):
+                bad.append(f"overwrite_us[{size}][{mode}]: {us} vs "
+                           f"baseline {ref} (> {1 + wall_tol:.1f}x)")
+
+    # -- bytes: fused A/B ------------------------------------------------------
+    fab = _index(fresh.get("ab_interleaved", []),
+                 ("size_B", "mode", "scenario"))
+    bab = _index(base.get("ab_interleaved", []),
+                 ("size_B", "mode", "scenario"))
+    for key, row in fab.items():
+        ref = bab.get(key)
+        if ref and row["fused_MB"] > ref["fused_MB"] * (1 + bytes_tol):
+            bad.append(f"ab_interleaved{key}: fused_MB {row['fused_MB']} "
+                       f"vs baseline {ref['fused_MB']}")
+
+    # -- deferred section ------------------------------------------------------
+    fd = _index(fresh.get("deferred", []), ("size_B", "mode", "window"))
+    bd = _index(base.get("deferred", []), ("size_B", "mode", "window"))
+    for key, row in fd.items():
+        ref = bd.get(key)
+        if ref and (row["bytes_per_step_MB"]
+                    > ref["bytes_per_step_MB"] * (1 + bytes_tol)):
+            bad.append(f"deferred{key}: bytes_per_step_MB "
+                       f"{row['bytes_per_step_MB']} vs baseline "
+                       f"{ref['bytes_per_step_MB']}")
+        if ref and (row["wall_us_per_step"]
+                    > ref["wall_us_per_step"] * (1 + wall_tol)):
+            bad.append(f"deferred{key}: wall_us_per_step "
+                       f"{row['wall_us_per_step']} vs baseline "
+                       f"{ref['wall_us_per_step']} (> {1 + wall_tol:.1f}x)")
+    # structural invariant: deferred W=16 strictly under synchronous W=1
+    for (size, mode, w), row in fd.items():
+        if w == 16:
+            sync = fd.get((size, mode, 1))
+            if sync and not (row["bytes_per_step_MB"]
+                             < sync["bytes_per_step_MB"]):
+                bad.append(
+                    f"deferred[{size},{mode}]: W=16 bytes/step "
+                    f"{row['bytes_per_step_MB']} not below W=1 "
+                    f"{sync['bytes_per_step_MB']} — deferral win lost")
+    return bad
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh",
+                    default=os.path.join(REPO, "BENCH_commit.fresh.json"))
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO, "BENCH_commit.json"))
+    ap.add_argument("--wall-tol", type=float, default=9.0,
+                    help="wall cells fail past (1+tol)x baseline "
+                         "(pathology catch-all; see module docstring)")
+    ap.add_argument("--bytes-tol", type=float, default=0.02,
+                    help="deterministic byte cells fail past (1+tol)x")
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    bad = check(fresh, base, args.wall_tol, args.bytes_tol)
+    if bad:
+        print("bench gate: REGRESSION")
+        for b in bad:
+            print("  -", b)
+        return 1
+    print("bench gate: ok "
+          f"({len(fresh.get('deferred', []))} deferred cells, "
+          f"{len(fresh.get('ab_interleaved', []))} A/B cells, "
+          f"wall tol {args.wall_tol}, bytes tol {args.bytes_tol})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

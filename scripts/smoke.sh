@@ -1,11 +1,16 @@
 #!/usr/bin/env bash
-# Repo smoke: the tier-1 correctness gate plus the commit-latency record.
+# Repo smoke: the tier-1 correctness gate plus the commit-latency record
+# and the commit-path perf gate.
 #
 #   scripts/smoke.sh            # full tier-1 suite + quick commit bench
 #   scripts/smoke.sh --no-bench # tests only
 #
-# Leaves BENCH_commit.json at the repo root (see benchmarks/run.py) so a
-# PR diff shows commit-path perf movement alongside test status.
+# The quick bench writes BENCH_commit.fresh.json; scripts/bench_gate.py
+# diffs it against the committed BENCH_commit.json baseline (noise-aware
+# wall tolerance, tight deterministic-bytes tolerance, and the deferred
+# W=16-below-W=1 structural invariant).  Only when the gate passes is
+# the fresh record promoted to BENCH_commit.json, so a PR diff shows
+# commit-path perf movement alongside test status.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,7 +21,11 @@ python -m pytest -x -q
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== perf: commit latency (quick) =="
-    python -m benchmarks.run --quick --only txn_latency,commit_sweep
+    python -m benchmarks.run --quick --only txn_latency,commit_sweep,deferred \
+        --commit-json BENCH_commit.fresh.json
+    echo "== perf: bench gate =="
+    python scripts/bench_gate.py
+    mv BENCH_commit.fresh.json BENCH_commit.json
 fi
 
 echo "smoke OK"

@@ -127,7 +127,10 @@ class ProtectConfig:
     hybrid_threshold: float = 0.5
     scrub_period: int = 0             # transactions between scrubs; 0 = off
     log_capacity: int = 64
-    overlap_commit: bool = False      # fuse parity RS into the next step (perf)
+    overlap_commit: bool = False      # dispatch step t+1 before awaiting
+                                      # epoch t's protection program
+    window: int = 1                   # deferred-epoch window W; 1 = the
+                                      # synchronous per-commit engine
 
 
 def workload_skips(cfg: ModelConfig, wl: Workload) -> Optional[str]:

@@ -146,6 +146,28 @@ def update_digest(dig: jax.Array, old_ck: jax.Array, new_ck: jax.Array,
     return jnp.stack([dig[0] + da, dig[1] + db])
 
 
+def update_digest_words(dig: jax.Array, old_w: jax.Array, new_w: jax.Array,
+                        row_offsets: jax.Array, row_words: int) -> jax.Array:
+    """Word-granular incremental whole-row digest.
+
+    Unfolding `combine` over `block_checksums` shows the row digest is
+    linear in word position: A = sum_j w_j, B = sum_j (row_words - j) * w_j
+    (word j in block b at offset i has combine weight
+    (bw - i) + (n_blocks - 1 - b) * bw == row_words - j).  So a commit
+    that changes only the words at `row_offsets` shifts the digest by
+    the word deltas alone — one sweep over the *modified words*, no
+    pages, no row, and bit-identical (mod-2^32 exact) to a full
+    recompute.  Unmodified (or out-of-bounds fill-gathered) entries have
+    delta zero and may appear any number of times; modified words must
+    appear exactly once.
+    """
+    d = new_w - old_w                       # u32 wraparound == mod 2^32
+    da = jnp.sum(d, dtype=U32)
+    w = U32(row_words) - row_offsets.astype(U32)
+    db = jnp.sum(w * d, dtype=U32)
+    return jnp.stack([dig[0] + da, dig[1] + db])
+
+
 def digest(row: jax.Array, block_words: int = DEFAULT_BLOCK_WORDS
            ) -> jax.Array:
     """(A, B) digest of a full row."""

@@ -1,0 +1,461 @@
+"""Deferred-epoch redundancy engine (beyond-paper: Vilamb-style batching).
+
+Pangolin updates parity and checksums on every transaction.  Vilamb
+(PAPERS.md) shows that for persistent-memory workloads most of that cost
+can be deferred: redundancy is refreshed asynchronously over a *window* of
+writes, and the redo log — which still persists per transaction — covers
+the unprotected interval for crash replay.  This module is that scheme on
+top of the zone layout:
+
+  * In-window commit (`DeferredProtector.commit`): the dirty-page set is
+    unioned on-device and the redo record is appended + commit-marked.
+    Parity, the checksum table AND the cached row are NOT touched — the
+    row stays pinned at the epoch-start value, which makes it the XOR
+    accumulator for free (deltas telescope: d_1 ^ ... ^ d_W ==
+    row_start ^ row_now, so pinning the base *is* accumulating; an
+    explicit delta buffer would pay a row-sized scatter per commit, and
+    an eager row splice a row-sized select — measured, either one erases
+    the deferral win).  The whole-row digest IS kept current from one
+    sweep over the step's *modified words*, gathered straight from the
+    old/new state leaves (the digest is linear in word position — see
+    `checksum.update_digest_words`), so every log record carries a
+    replay-verifiable digest bit-identical to the synchronous engine's
+    at every step.  Per-step protection cost is therefore proportional
+    to the words actually written — the paper's incremental ideal.
+  * Epoch flush (`flush`, automatic every `window` commits): the current
+    state is spliced into the cached row once, and one fused sweep over
+    (epoch-start row, current row) on the unioned dirty pages yields the
+    whole window's parity delta plus fresh checksums
+    (`kernels.fused_commit`); parity consumes the delta (patch-scatter,
+    or a bulk reduce-scatter past the hybrid threshold).  At every epoch
+    boundary parity / cksums / digest / row are bit-identical to the
+    synchronous engine's after the same commits.
+
+kernels/commit_fused.py also carries `fused_accum_commit`, the
+explicit-accumulator form of the in-window sweep, for platforms whose
+accumulator can live in VMEM across steps; under XLA's memory model the
+pinned-row form above is strictly cheaper.
+
+Window-loss semantics: between flushes the parity and checksum table
+describe the epoch-start state, and the cached row deliberately lags the
+live state.  A crash loses no committed data (redo records persist per
+step; replay from the last checkpoint reproduces the window
+deterministically and verifies each step's digest), but *online* media
+recovery and scrubbing need current redundancy — runtimes must `flush()`
+before scrub/recovery.  The flush reads old values from the cached row
+and new values from the live state leaves it splices, so corruption that
+lands in an *unmodified* region mid-window is still detected by the
+first post-flush scrub; corruption inside the window's own write
+footprint is indistinguishable from the writes themselves until replay
+verifies digests — deferral trades detection latency on exactly the
+bytes the log already covers.  A full machine loss falls back to
+checkpoint + redo-log replay, the Vilamb trade.  See EXPERIMENTS.md
+§Perf.
+
+Steady-state commits are allocation-free: the jitted step and flush
+programs donate the previous protected state (digest, log, dirty mask,
+state, and at flushes row/parity/cksums), so buffers are reused in place
+instead of reallocated each step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import utils
+from repro.core import checksum as ck
+from repro.core import layout as layout_mod
+from repro.core import parity as parity_mod
+from repro.core import redolog
+from repro.core.txn import ProtectedState, Protector
+from repro.kernels import ops as kops
+
+PyTree = Any
+U32 = jnp.uint32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EpochState:
+    """A ProtectedState plus the deferred window's bookkeeping.
+
+    Mid-window invariant (patch engine): `prot.row` holds the
+    *epoch-start* row — the implicit XOR accumulator — while
+    `prot.state` runs ahead of it; `flush` re-synchronizes.  `dirty` is
+    the unioned dirty-page mask ((*mesh_dims, n_blocks) bool; None for
+    the bulk engine, whose row tracks the state every step).  `pending`
+    counts successful commits since the last flush (scalar u32,
+    replicated — introspection; the engine's host counter drives the
+    cadence).
+    """
+    prot: ProtectedState
+    dirty: Optional[jax.Array]
+    pending: jax.Array
+
+    def tree_flatten(self):
+        return ((self.prot, self.dirty, self.pending), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class EngineHost:
+    """Engine-or-sync protected-state plumbing shared by the runtimes.
+
+    Hosts assign `_engine` (a DeferredProtector, or None for the
+    synchronous cadence) and then track their protected state through
+    the `prot` property.  The setter WRAPS the value into a fresh
+    window, which discards in-window bookkeeping — legal only for
+    states whose parity/cksums/row are current (right after
+    Protector.init, a flush, or recovery).  `flush()` brings deferred
+    redundancy current and is a no-op for the synchronous cadence.
+    """
+    _engine = None        # Optional[DeferredProtector]
+    _est = None           # Optional[EpochState]   (engine cadence)
+    _prot = None          # Optional[ProtectedState] (sync cadence)
+
+    @property
+    def prot(self) -> Optional[ProtectedState]:
+        if self._engine is not None:
+            return self._est.prot if self._est is not None else None
+        return self._prot
+
+    @prot.setter
+    def prot(self, value):
+        if self._engine is not None:
+            self._est = (self._engine.wrap(value)
+                         if value is not None else None)
+        else:
+            self._prot = value
+
+    def flush(self) -> None:
+        """Bring deferred redundancy current (no-op when synchronous)."""
+        if self._engine is not None and self._est is not None:
+            self._est = self._engine.flush_if_pending(self._est)
+
+
+class DeferredProtector:
+    """Windowed protection over a Protector's zone layout.
+
+    Two flavors:
+
+      * bulk (`dirty_leaf_idx=None`) — every commit dirties the whole
+        row (training).  Per-step: flatten + digest sweep; flush:
+        parity rebuild + full checksum refresh.
+      * patch (`dirty_leaf_idx` = static leaf list) — commits touch a
+        known leaf subset (decode).  Per-step commits take
+        `dirty_words`, a tuple aligned with `dirty_leaf_idx` of per-leaf
+        *word-index* arrays (or None = whole leaf), e.g. from
+        `layout.time_slice_words`: position-independent shapes, so one
+        compiled program serves every decode position.  `dirty_capacity`
+        bounds the pages one step may touch; the flush footprint is
+        bounded by window * capacity (past the hybrid threshold the
+        flush goes bulk).
+
+    `window` commits trigger an automatic flush; `donate=True` donates
+    the old state into its successor for allocation-free steady state —
+    callers must then drop the old EpochState and keep only the returned
+    one.
+    """
+
+    def __init__(self, protector: Protector, *, window: int = 16,
+                 dirty_capacity: Optional[int] = None,
+                 dirty_leaf_idx: Optional[Sequence[int]] = None,
+                 donate: bool = True):
+        mode = protector.mode
+        assert mode.has_parity or mode.has_cksums, (
+            "deferred epochs batch parity/checksum work; mode "
+            f"{mode.value} has neither — use Protector.commit directly")
+        assert window >= 1, window
+        self.p = protector
+        self.window = window
+        self.donate = donate
+        lo = protector.layout
+        self.patch = dirty_leaf_idx is not None
+        self.dirty_leaf_idx = (tuple(int(i) for i in dirty_leaf_idx)
+                               if self.patch else None)
+        if self.patch:
+            # every dirty word lives inside a dirty leaf (+1 page of
+            # word-overhang spill each), so the epoch's footprint can
+            # never exceed the leaves' own page span — and when the
+            # caller knows a tighter per-step page capacity (sliding
+            # decode slots), W x that bounds it too; take the min
+            leaf_bound = sum(len(layout_mod.leaf_pages(lo, i)) + 1
+                             for i in self.dirty_leaf_idx)
+            if dirty_capacity is not None:
+                per_step = int(dirty_capacity) + len(self.dirty_leaf_idx)
+            else:
+                per_step = leaf_bound
+            self.dirty_capacity = min(lo.n_blocks, per_step)
+            self.flush_capacity = min(lo.n_blocks, leaf_bound,
+                                      per_step * window)
+        else:
+            assert dirty_capacity is None, \
+                "dirty_capacity implies a patch engine: pass dirty_leaf_idx"
+            self.dirty_capacity = None
+            self.flush_capacity = lo.n_blocks
+        self.flush_patch = (self.patch
+                            and self.flush_capacity / lo.n_blocks
+                            < protector.hybrid_threshold)
+        self._since = 0
+        self._jit: dict = {}
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def _zone_zeros(self, tail_shape, dtype):
+        p = self.p
+        arr = jnp.zeros(p._mesh_dims + tail_shape, dtype)
+        return jax.device_put(arr, NamedSharding(p.mesh, p._zone_spec))
+
+    def wrap(self, prot: ProtectedState) -> EpochState:
+        """Wrap a freshly-protected state (parity/cksums/row must be
+        current — i.e. right after Protector.init, a flush, or recovery)
+        with an empty window."""
+        self._since = 0
+        lo = self.p.layout
+        return EpochState(
+            prot=prot,
+            dirty=(self._zone_zeros((lo.n_blocks,), jnp.bool_)
+                   if self.patch else None),
+            pending=jnp.zeros((), U32))
+
+    def init(self, state: PyTree) -> EpochState:
+        return self.wrap(self.p.init(state))
+
+    @property
+    def needs_flush(self) -> bool:
+        return self._since > 0
+
+    # -- in-window commit -------------------------------------------------------
+
+    def make_step_commit(self):
+        """Build the in-window commit: digest-over-modified-words + dirty
+        union + log.  Parity, checksum table and cached row untouched."""
+        p, lo = self.p, self.p.layout
+        mode, bw = self.p.mode, self.p.layout.block_words
+        nb, rw = lo.n_blocks, lo.row_words
+        patch = self.patch
+        dirty_leaves = self.dirty_leaf_idx
+
+        def _step(digest, dirty, state_old, state_new, widx):
+            digest_l = p._unpack(digest)
+            outs = {}
+            if patch:
+                dirty_l = p._unpack(dirty)
+                old_leaves = jax.tree.leaves(state_old)
+                new_leaves = jax.tree.leaves(state_new)
+                new_digest = digest_l
+                for k, li in enumerate(dirty_leaves):
+                    slot = lo.slots[li]
+                    ow = utils.to_words(old_leaves[li])
+                    nw = utils.to_words(new_leaves[li])
+                    wi = widx[k] if widx is not None else None
+                    if wi is None:          # whole leaf dirty (static)
+                        off = (U32(slot.offset)
+                               + jnp.arange(slot.n_words, dtype=U32))
+                        o_g, n_g = ow, nw
+                        pg = jnp.asarray(layout_mod.leaf_pages(lo, li),
+                                         jnp.int32)
+                    else:                   # dynamic word-index array
+                        # overhang/OOB entries read 0 from both sides ->
+                        # delta zero (see layout.time_slice_words)
+                        o_g = ow.at[wi].get(mode="fill", fill_value=0)
+                        n_g = nw.at[wi].get(mode="fill", fill_value=0)
+                        off = U32(slot.offset) + wi.astype(U32)
+                        pg = (jnp.int32(slot.offset) + wi) // bw
+                    new_digest = ck.update_digest_words(
+                        new_digest, o_g, n_g, off, rw)
+                    # spill pages past the row end are dropped
+                    dirty_l = dirty_l.at[pg].set(True, mode="drop")
+                outs["dirty"] = p._pack(dirty_l)
+            else:
+                row_new = layout_mod.flatten_row(lo, state_new)
+                new_ck = kops.fletcher_blocks(
+                    parity_mod.page_view(row_new, bw))
+                new_digest = ck.combine(new_ck, bw)
+                outs["row"] = p._pack(row_new)
+            outs["digest"] = p._pack(new_digest)
+            return outs
+
+        z = p._zone_spec
+        out_specs = {"digest": z}
+        if patch:
+            out_specs["dirty"] = z
+        else:
+            out_specs["row"] = z
+        protect = p._smap(
+            _step,
+            in_specs=(z, z, p.state_specs, p.state_specs, P()),
+            out_specs=out_specs)
+
+        def commit(prot: ProtectedState, dirty, pending, state_new,
+                   dirty_words, data_cursor, rng_key, canary_ok):
+            # canary_ok is STATIC (host-known before dispatch): the
+            # all-clear program carries no abort gating at all, and an
+            # abort compiles once into this pure no-op
+            if not canary_ok:
+                return prot, dirty, pending, jnp.zeros((), bool)
+            step = prot.step + U32(1)
+            outs = protect(prot.digest, dirty, prot.state, state_new,
+                           dirty_words)
+            # paper ordering preserved: the redo record (replicated)
+            # persists per step and carries the post-step digest; only
+            # the parity/checksum refresh is deferred to the flush.
+            log = prot.log
+            if mode.has_log:
+                if rng_key is None:
+                    rng_key = jax.random.PRNGKey(0)
+                log = redolog.append(prot.log, step, data_cursor, rng_key,
+                                     outs["digest"].reshape(-1, 2)[0])
+                log = redolog.commit_mark(log, step)
+            new_prot = ProtectedState(
+                state=state_new, parity=prot.parity, cksums=prot.cksums,
+                digest=outs["digest"], replica=prot.replica, log=log,
+                step=step,
+                row=prot.row if patch else outs["row"])
+            return (new_prot, outs.get("dirty", dirty),
+                    pending + U32(1), jnp.ones((), bool))
+
+        return commit
+
+    # -- epoch flush ------------------------------------------------------------
+
+    def make_flush(self):
+        """Build the once-per-epoch redundancy refresh.
+
+        The current state is spliced into the (epoch-start) cached row;
+        one fused sweep over both row versions on the unioned dirty
+        pages yields the window's parity delta plus fresh checksums
+        (patch), or parity is rebuilt from the row wholesale past the
+        hybrid threshold — algebraically identical under the XOR
+        invariant.  The digest is already current.
+        """
+        p, lo = self.p, self.p.layout
+        mode, ax, bw = self.p.mode, self.p.data_axis, self.p.layout.block_words
+        nb = lo.n_blocks
+        kf = self.flush_capacity
+        fpatch = self.flush_patch
+        patch = self.patch
+        dirty_leaves = self.dirty_leaf_idx
+
+        def _flush(row_cache, parity, cksums, state, dirty):
+            base = p._unpack(row_cache)
+            parity_l = p._unpack(parity) if parity is not None else None
+            cksums_l = p._unpack(cksums) if cksums is not None else None
+            outs = {}
+            if patch:
+                row = layout_mod.update_row(lo, base, state, dirty_leaves)
+                outs["row"] = p._pack(row)
+            else:
+                row = base                  # bulk rows track every step
+            if fpatch:
+                dirty_l = p._unpack(dirty)
+                idx = jnp.nonzero(dirty_l, size=kf, fill_value=nb)[0]
+                valid = idx < nb
+                g = jnp.minimum(idx, nb - 1)
+                old_p = parity_mod.gather_pages(base, g, bw)
+                new_p = parity_mod.gather_pages(row, g, bw)
+                if mode.has_cksums:
+                    delta_p, fresh = kops.fused_commit(old_p, new_p)
+                    sidx = jnp.where(valid, g, nb)
+                    outs["cksums"] = p._pack(
+                        cksums_l.at[sidx].set(fresh, mode="drop"))
+                else:
+                    delta_p = kops.xor_delta(old_p, new_p)
+                if mode.has_parity:
+                    delta_p = jnp.where(valid[:, None], delta_p, 0)
+                    # fill slots must route to the out-of-range sentinel,
+                    # NOT the clamped page: a clamped fill would collide
+                    # with a genuinely-dirty last page and its zero-delta
+                    # scatter entry could overwrite the real patch
+                    outs["parity"] = p._pack(parity_mod.patch_parity_delta(
+                        parity_l, delta_p, jnp.where(valid, g, nb), lo,
+                        ax))
+            else:
+                # bulk: parity rebuilt from the current row — equal to
+                # parity_start ^ rs(telescoped delta) by XOR linearity
+                if mode.has_parity:
+                    outs["parity"] = p._pack(
+                        parity_mod.build_parity(row, ax))
+                if mode.has_cksums:
+                    outs["cksums"] = p._pack(kops.fletcher_blocks(
+                        parity_mod.page_view(row, bw)))
+            if dirty is not None:
+                outs["dirty"] = p._pack(jnp.zeros((nb,), jnp.bool_))
+            return outs
+
+        z = p._zone_spec
+        out_specs = {}
+        if mode.has_parity:
+            out_specs["parity"] = z
+        if mode.has_cksums:
+            out_specs["cksums"] = z
+        if patch:
+            out_specs["row"] = z
+            out_specs["dirty"] = z
+        fn = p._smap(_flush, in_specs=(z, z, z, p.state_specs, z),
+                     out_specs=out_specs)
+
+        def flush(est: EpochState) -> EpochState:
+            prot = est.prot
+            outs = fn(prot.row, prot.parity, prot.cksums, prot.state,
+                      est.dirty)
+            new_prot = dataclasses.replace(
+                prot, parity=outs.get("parity", prot.parity),
+                cksums=outs.get("cksums", prot.cksums),
+                row=outs.get("row", prot.row))
+            return EpochState(prot=new_prot, dirty=outs.get("dirty"),
+                              pending=jnp.zeros((), U32))
+
+        return flush
+
+    # -- cached-jit entry points -------------------------------------------------
+
+    def _jitted(self, key, build, n_donated=1, static=()):
+        if key not in self._jit:
+            donate = tuple(range(n_donated)) if self.donate else ()
+            self._jit[key] = jax.jit(build(), donate_argnums=donate,
+                                     static_argnums=static)
+        return self._jit[key]
+
+    def commit(self, est: EpochState, state_new: PyTree, *,
+               dirty_words=None, data_cursor=0, rng_key=None,
+               canary_ok: bool = True):
+        """One transactional update; flushes automatically at the window
+        boundary.
+
+        `dirty_words` (patch engines): tuple aligned with
+        `dirty_leaf_idx` — per-leaf word-index arrays, or None entries
+        (or None for the whole tuple) meaning those leaves are wholly
+        dirty.  With donation on, `est` (and its buffers) must not be
+        used after this call — keep only the returned EpochState.
+        """
+        assert dirty_words is None or self.patch, \
+            "dirty_words requires a patch engine (static dirty_leaf_idx)"
+        assert dirty_words is None or len(dirty_words) == len(
+            self.dirty_leaf_idx)
+        # canary verdict is host-known before dispatch: static, so the
+        # all-clear program folds its abort select-chains away entirely
+        prot, dirty, pending, ok = self._jitted(
+            "step", self.make_step_commit, n_donated=3, static=(7,))(
+            est.prot, est.dirty, est.pending, state_new, dirty_words,
+            data_cursor, rng_key, bool(canary_ok))
+        est = EpochState(prot=prot, dirty=dirty, pending=pending)
+        self._since += 1
+        if self._since >= self.window:
+            est = self.flush(est)
+        return est, ok
+
+    def flush(self, est: EpochState) -> EpochState:
+        """Refresh parity/cksums (and the row) from the window now."""
+        self._since = 0
+        return self._jitted("flush", self.make_flush)(est)
+
+    def flush_if_pending(self, est: EpochState) -> EpochState:
+        """Flush only when in-window work exists (pre-scrub / recovery)."""
+        return self.flush(est) if self.needs_flush else est

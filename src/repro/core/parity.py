@@ -96,15 +96,15 @@ def patch_parity_delta(parity_seg: jax.Array, delta_pages: jax.Array,
     mine = (owner == me)
     seg_pages = parity_seg.reshape(pages_per_seg, bw)
     # Scatter-XOR with O(k) work: page indices within one commit are unique,
-    # so gather -> xor -> scatter-set is exact; non-owned rows route to a
-    # dummy slot past the end (dropped by the final slice).  This is the
+    # so gather -> xor -> scatter-set is exact; non-owned rows route to the
+    # out-of-range sentinel and are dropped by the scatter itself (an
+    # earlier version concatenated a dummy row and sliced it back off,
+    # which copied the whole parity segment per patch).  This is the
     # "atomic XOR" application — commutativity already did the cross-rank
     # combining in the all-reduce above.
     scatter_idx = jnp.where(mine, local_page, pages_per_seg)
-    padded = jnp.concatenate(
-        [seg_pages, jnp.zeros((1, bw), seg_pages.dtype)], axis=0)
-    patched_rows = padded[scatter_idx] ^ patch           # (k, bw)
-    out = padded.at[scatter_idx].set(patched_rows)[:pages_per_seg]
+    cur = seg_pages[jnp.minimum(scatter_idx, pages_per_seg - 1)]
+    out = seg_pages.at[scatter_idx].set(cur ^ patch, mode="drop")
     return out.reshape(-1)
 
 

@@ -46,10 +46,13 @@ class RedoLog:
 
 
 def make(capacity: int = 64) -> RedoLog:
-    z = jnp.zeros((capacity,), U32)
-    return RedoLog(step=z, data_cursor=z,
+    # distinct buffers per field: the log is donated into its successor
+    # on the commit hot path, and XLA rejects donating one buffer twice
+    def z():
+        return jnp.zeros((capacity,), U32)
+    return RedoLog(step=z(), data_cursor=z(),
                    rng=jnp.zeros((capacity, 2), U32),
-                   digest=jnp.zeros((capacity, 2), U32), mark=z)
+                   digest=jnp.zeros((capacity, 2), U32), mark=z())
 
 
 def append(log: RedoLog, step, data_cursor, rng_key, digest) -> RedoLog:

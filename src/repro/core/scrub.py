@@ -24,6 +24,7 @@ class ScrubReport:
     parity_ok: Optional[bool]
     repaired: bool
     repair_ok: Optional[bool]
+    row_cache_ok: Optional[bool] = None   # cached row == flatten(state)
 
 
 class Scrubber:
@@ -55,19 +56,27 @@ class Scrubber:
                                      False, None)
         if freeze is not None:
             freeze()
-        out = self.protector.scrub(prot)
+        # one transfer for every scrub output (plus the step counter) —
+        # the old code issued a device_get per field and then walked
+        # np.argwhere rows in Python
+        out = dict(self.protector.scrub(prot))
+        out["step"] = prot.step
+        host = jax.device_get(out)
         bad_locations = []
-        if "bad_pages" in out:
-            bad = np.asarray(jax.device_get(out["bad_pages"]))
-            # bad: (*mesh_dims, n_blocks); data axis position -> rank
+        if "bad_pages" in host:
+            # (*mesh_dims, n_blocks) -> (G, n_blocks): a page is bad if
+            # any non-data mesh coordinate flags it (vectorized union)
+            bad = np.asarray(host["bad_pages"])
             data_pos = self.protector.axis_names.index(
                 self.protector.data_axis)
-            for idx in np.argwhere(bad):
-                rank = int(idx[data_pos])
-                page = int(idx[-1])
-                bad_locations.append((rank, page))
-        parity_ok = (bool(jax.device_get(out["parity_ok"]))
-                     if "parity_ok" in out else None)
+            bad = np.moveaxis(bad, data_pos, 0)
+            bad = bad.any(axis=tuple(range(1, bad.ndim - 1)))
+            ranks, pages = np.nonzero(bad)
+            bad_locations = list(zip(ranks.tolist(), pages.tolist()))
+        parity_ok = (bool(host["parity_ok"]) if "parity_ok" in host
+                     else None)
+        row_cache_ok = (bool(host["row_cache_ok"])
+                        if "row_cache_ok" in host else None)
         repaired, repair_ok = False, None
         if bad_locations and self.auto_repair and mode.has_parity:
             ranks = [r for r, _ in bad_locations]
@@ -76,6 +85,6 @@ class Scrubber:
             repaired, repair_ok = True, bool(jax.device_get(ok))
         if resume is not None:
             resume()
-        return prot, ScrubReport(int(jax.device_get(prot.step)), True,
-                                 bad_locations, parity_ok, repaired,
-                                 repair_ok)
+        return prot, ScrubReport(int(host["step"]), True, bad_locations,
+                                 parity_ok, repaired, repair_ok,
+                                 row_cache_ok=row_cache_ok)

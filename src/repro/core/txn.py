@@ -411,30 +411,48 @@ class Protector:
         return commit
 
     def commit(self, prot, state_new, *, dirty_pages=None, verify_old=False,
-               **kw):
+               donate=False, **kw):
         """Cached-jit commit entry point.
 
         Distinct dirty-page sets (and the verify flag) key distinct
         compiled commits — a previous version folded `_dirty_key` into the
         cache key but always built the no-dirty-pages commit, silently
         sharing one stale program across different footprints.
+
+        `donate=True` donates `prot` into its successor (row, parity,
+        cksums, digest, log and state reuse their buffers in place —
+        allocation-free steady state); the caller must then drop the old
+        `prot` and keep only the returned one.
         """
         key = ("commit",
                tuple(int(p) for p in dirty_pages)
                if dirty_pages is not None else None,
-               bool(verify_old))
+               bool(verify_old), bool(donate))
         if key not in self._jit_cache:
-            self._jit_cache[key] = jax.jit(self.make_commit(
-                dirty_pages=dirty_pages, verify_old=verify_old))
+            # the canary verdict is host-known before dispatch: static,
+            # so the all-clear program folds its abort select-chains away
+            # (an abort compiles the cheap no-op variant once)
+            self._jit_cache[key] = jax.jit(
+                self.make_commit(dirty_pages=dirty_pages,
+                                 verify_old=verify_old),
+                donate_argnums=(0,) if donate else (),
+                static_argnames=("canary_ok",))
         return self._jit_cache[key](prot, state_new, **kw)
 
     # -- scrub -------------------------------------------------------------------
 
     def make_scrub(self):
+        """One fused scrub program: a single flatten of the live state
+        feeds the checksum verify, the parity invariant check AND a
+        row-cache divergence check (`row == flatten(state)` — nearly free
+        with the row already in hand, and it catches a cache gone stale
+        before a commit would trust it as the old operand).  All outputs
+        land in one dict so the Scrubber fetches them with a single
+        device_get."""
         lo, ax = self.layout, self.data_axis
         mode = self.mode
 
-        def _scrub(state, parity, cksums):
+        def _scrub(state, row_cache, parity, cksums):
             row = layout_mod.flatten_row(lo, state)
             out = {}
             if mode.has_cksums:
@@ -444,6 +462,10 @@ class Protector:
             if mode.has_parity:
                 out["parity_ok"] = parity_mod.verify_parity(
                     row, self._unpack(parity), ax)
+            if mode.has_parity or mode.has_cksums:
+                same = jnp.all(row == self._unpack(row_cache))
+                out["row_cache_ok"] = (
+                    lax.pmin(same.astype(jnp.int32), self.axis_names) > 0)
             return out
 
         out_specs = {}
@@ -451,12 +473,14 @@ class Protector:
             out_specs["bad_pages"] = self._zone_spec
         if mode.has_parity:
             out_specs["parity_ok"] = P()
+        if mode.has_parity or mode.has_cksums:
+            out_specs["row_cache_ok"] = P()
         fn = self._smap(_scrub, in_specs=(self.state_specs, self._zone_spec,
-                                          self._zone_spec),
+                                          self._zone_spec, self._zone_spec),
                         out_specs=out_specs)
 
         def scrub(prot: ProtectedState):
-            return fn(prot.state, prot.parity, prot.cksums)
+            return fn(prot.state, prot.row, prot.parity, prot.cksums)
 
         return scrub
 

@@ -137,3 +137,57 @@ def fused_commit_old_terms(old: jax.Array, new: jax.Array, *,
     """
     zeros = jnp.zeros((old.shape[0], 2), U32)
     return _verify_call(old, new, zeros, interpret)
+
+
+def _accum_kernel(acc_ref, old_ref, new_ref, acc_out_ref, old_ck_ref,
+                  new_ck_ref):
+    acc = acc_ref[...]
+    old = old_ref[...]
+    new = new_ref[...]
+    # XOR deltas telescope: acc ^ (old ^ new) after W steps equals
+    # row_epoch_start ^ row_now, the exact delta the epoch flush applies.
+    acc_out_ref[...] = acc ^ old ^ new
+    bw = new.shape[-1]
+    w = U32(bw) - jax.lax.broadcasted_iota(U32, (1, bw), 1)
+    # both tiles are in VMEM for the accumulate: their Fletcher terms are
+    # free, and they are exactly what the incremental row digest needs
+    a_old = jnp.sum(old, axis=-1, dtype=U32)
+    b_old = jnp.sum(old * w, axis=-1, dtype=U32)
+    old_ck_ref[...] = jnp.stack([a_old, b_old], axis=-1)
+    a = jnp.sum(new, axis=-1, dtype=U32)
+    b = jnp.sum(new * w, axis=-1, dtype=U32)
+    new_ck_ref[...] = jnp.stack([a, b], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_accum_commit(acc: jax.Array, old: jax.Array, new: jax.Array, *,
+                       interpret: bool = False):
+    """Delta-accumulate variant for the deferred-epoch engine.
+
+    One sweep over (acc, old, new), each (n_blocks, block_words) u32,
+    emits the running epoch delta `acc ^ old ^ new` plus the old and new
+    per-block Fletcher terms.  In-window commits use it to fold the
+    step's XOR delta into the epoch accumulator and keep the row digest
+    current (from the term deltas) without touching parity or the
+    checksum table — those consume the accumulator once per epoch, so
+    the flush is still one sweep per operand.
+    """
+    assert acc.shape == old.shape == new.shape, (acc.shape, old.shape,
+                                                 new.shape)
+    assert acc.dtype == old.dtype == new.dtype == U32
+    n, bw = old.shape
+    tb = _pick_tb(n)
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=(n // tb,),
+        in_specs=[pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                  pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                  pl.BlockSpec((tb, bw), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                   pl.BlockSpec((tb, 2), lambda i: (i, 0)),
+                   pl.BlockSpec((tb, 2), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, bw), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32)],
+        interpret=interpret,
+    )(acc, old, new)

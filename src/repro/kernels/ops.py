@@ -74,3 +74,11 @@ def fused_commit_old_terms(old: jax.Array, new: jax.Array, *,
     if p is None:
         return _ref.fused_commit_old_terms_ref(old, new)
     return _fused.fused_commit_old_terms(old, new, interpret=p)
+
+
+def fused_accum_commit(acc: jax.Array, old: jax.Array, new: jax.Array, *,
+                       interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_accum_commit_ref(acc, old, new)
+    return _fused.fused_accum_commit(acc, old, new, interpret=p)

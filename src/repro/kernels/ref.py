@@ -62,3 +62,17 @@ def fused_commit_old_terms_ref(old: jax.Array, new: jax.Array):
     """(delta, new cksums, old cksums) — one logical sweep per operand."""
     return (xor_delta_ref(old, new), fletcher_blocks_ref(new),
             fletcher_blocks_ref(old))
+
+
+def fused_accum_commit_ref(acc: jax.Array, old: jax.Array, new: jax.Array):
+    """Delta-accumulate sweep of the deferred-epoch engine.
+
+    acc/old/new: (n, bw) u32.  Returns (acc ^ old ^ new, old cksums,
+    new cksums): the step's XOR delta folded into the epoch accumulator
+    (deltas telescope, so after W steps acc == row_start ^ row_now) plus
+    both term sets for the incremental row digest.
+    """
+    assert acc.shape == old.shape == new.shape
+    assert acc.dtype == U32 and old.dtype == U32 and new.dtype == U32
+    return (acc ^ old ^ new, fletcher_blocks_ref(old),
+            fletcher_blocks_ref(new))

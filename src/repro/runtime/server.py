@@ -1,23 +1,33 @@
 """Serving runtime: batched decode with Pangolin protection of the KV cache.
 
 Decode is the paper's *atomic-style small update* case: each step touches a
-tiny, known range of the cache (one token slot per layer).  The server
-protects the cache with:
+tiny, known range of the cache (one token slot per layer).  The dirty page
+set of a decode step is computed from the cache layout on the host
+(`layout.time_slice_pages`: the page columns under time slot `pos` of every
+cache leaf; leaves without a sequence axis — recurrent state, conv windows
+— count as fully dirty), so decode commits always take the *patch* path:
+block checksums refreshed incrementally and parity patched over dirty
+pages only.  A previous version jitted `make_commit()` with no dirty pages,
+silently sending every decode commit down the bulk path.
 
-  * block checksums refreshed incrementally (cost ∝ dirty pages — the
-    Adler32 range-update property), and
-  * the parity *patch* path (XOR patch over dirty pages only), the
-    "atomic XOR" side of the hybrid scheme; params are static and scrubbed.
+Two protection cadences:
 
-For simplicity and testability the protected unit here is the cache pytree;
-the dirty page set of a decode step is computed from the cache layout once
-(it is position-independent for ring buffers, position-dependent for linear
-caches — we conservatively take the union of slots the update may touch
-when the position is dynamic, or recompute per call when static).
+  * `window=1` — synchronous: every step routes through
+    `Protector.commit(..., dirty_pages=...)` with the static per-position
+    page set (compiled once per distinct set, cached).
+  * `window=W>1` — deferred epochs (core/epoch.py): in-window steps pay
+    protection proportional to the *words* a decode step writes
+    (`layout.time_slice_words` — position-independent shapes, so one
+    compiled program serves every position) while the cached row stays
+    pinned at the epoch start; parity and the checksum table refresh
+    once per epoch from the unioned dirty pages.  The scrubber sees
+    flushed (current) redundancy: the engine flushes before every scrub.
+
+Both cadences donate the previous protected state into its successor, so
+steady-state decode allocates no row-sized buffers.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Optional
 
 import jax
@@ -26,6 +36,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ProtectConfig
+from repro.core import layout as layout_mod
+from repro.core.epoch import DeferredProtector, EngineHost
 from repro.core.scrub import Scrubber
 from repro.core.txn import Mode, Protector
 from repro.models import api
@@ -34,18 +46,24 @@ from repro.models.transformer import build_model
 PyTree = Any
 
 
-class Server:
+class Server(EngineHost):
     def __init__(self, cfg: ModelConfig, protect_cfg: ProtectConfig, mesh,
-                 *, batch: int, max_len: int, protect_cache: bool = True):
+                 *, batch: int, max_len: int, protect_cache: bool = True,
+                 window: Optional[int] = None):
         self.cfg = cfg
         self.mesh = mesh
         self.batch = batch
         self.max_len = max_len
         self.model = build_model(cfg, mesh)
         self._decode = jax.jit(api.make_decode_step(self.model))
+        self.window = int(window if window is not None
+                          else protect_cfg.window)
 
         self.protect_cache = protect_cache and protect_cfg.mode != "none"
         self.protector: Optional[Protector] = None
+        self._engine: Optional[DeferredProtector] = None
+        self._est = None
+        self._prot = None
         if self.protect_cache:
             cache_abs = jax.eval_shape(
                 lambda: self.model._cache_defs(batch, max_len))
@@ -54,9 +72,36 @@ class Server:
                 mesh, cache_abs, cache_specs, mode=Mode(protect_cfg.mode),
                 block_words=protect_cfg.block_words,
                 hybrid_threshold=protect_cfg.hybrid_threshold)
-            self._commit = jax.jit(self.protector.make_commit())
+            lo = self.protector.layout
+            self._dirty_cap = layout_mod.time_slice_page_capacity(
+                lo, max_len)
+            self._page_cache: dict = {}
+            self._word_cache: dict = {}
+            mode = self.protector.mode
+            if self.window > 1 and (mode.has_parity or mode.has_cksums):
+                self._engine = DeferredProtector(
+                    self.protector, window=self.window,
+                    dirty_capacity=self._dirty_cap,
+                    dirty_leaf_idx=range(len(lo.slots)))
             self.scrubber = Scrubber(self.protector,
                                      period=protect_cfg.scrub_period)
+
+    # protected-state plumbing (prot property / flush) comes from
+    # core.epoch.EngineHost
+
+    def _dirty_pages(self, pos: int) -> np.ndarray:
+        key = pos % self.max_len
+        if key not in self._page_cache:
+            self._page_cache[key] = layout_mod.time_slice_pages(
+                self.protector.layout, self.max_len, key)
+        return self._page_cache[key]
+
+    def _dirty_words(self, pos: int) -> tuple:
+        key = pos % self.max_len
+        if key not in self._word_cache:
+            self._word_cache[key] = tuple(layout_mod.time_slice_words(
+                self.protector.layout, self.max_len, key))
+        return self._word_cache[key]
 
     def start(self, params: PyTree) -> None:
         self.params = params
@@ -66,7 +111,10 @@ class Server:
             lambda s: NamedSharding(self.mesh, s), specs,
             is_leaf=lambda x: isinstance(x, P)))
         if self.protect_cache:
-            self.prot = self.protector.init(cache)
+            if self._engine is not None:
+                self._est = self._engine.init(cache)
+            else:
+                self._prot = self.protector.init(cache)
         else:
             self.prot = None
             self.cache = cache
@@ -81,10 +129,21 @@ class Server:
             self.params, tokens, self._current_cache(),
             jnp.asarray(self.pos, jnp.int32))
         if self.prot is not None:
-            self.prot, ok = self._commit(self.prot, new_cache)
+            if self._engine is not None:
+                self._est, ok = self._engine.commit(
+                    self._est, new_cache,
+                    dirty_words=self._dirty_words(self.pos))
+            else:
+                self._prot, ok = self.protector.commit(
+                    self._prot, new_cache,
+                    dirty_pages=self._dirty_pages(self.pos).tolist(),
+                    donate=True)
             self.scrubber.on_commit()
             if self.scrubber.due():
-                self.prot, _ = self.scrubber.run(self.prot)
+                if self._engine is not None:
+                    self._est = self._engine.flush_if_pending(self._est)
+                prot, _ = self.scrubber.run(self.prot)
+                self.prot = prot
         else:
             self.cache = new_cache
         self.pos += 1
@@ -94,8 +153,8 @@ class Server:
         """Feed a prompt through decode steps (small-scale serving path)."""
         tok = prompt[:, 0]
         for t in range(prompt.shape[1]):
-            nxt = self.step(prompt[:, t])
-        return nxt
+            tok = self.step(prompt[:, t])
+        return tok
 
     def generate(self, prompt: jax.Array, n_new: int) -> np.ndarray:
         tok = self.prefill(prompt)

@@ -2,26 +2,41 @@
 
 Per step:  batch <- deterministic pipeline(cursor)
            micro-buffer   = train_step(state, batch)      (pure staging)
-           commit         = canary check -> redo record -> checksums ->
-                            parity (hybrid) -> functional swap
+           commit         = canary check -> redo record -> protection ->
+                            functional swap
            scrub every N commits; online recovery on failure events;
            async disk checkpoints as the backstop tier.
 
-Crash recovery (paper §3.6): restore the newest checkpoint, then replay the
-redo log's marked records — the deterministic pipeline regenerates each
-logged batch from its cursor, and the row digest verifies each replayed
-step landed bit-identically.
+Protection cadence (`ProtectConfig.window`):
 
-The `overlap_commit` option keeps protection off the critical path: step
-t+1's compute is dispatched before step t's commit is awaited (the two are
-independent programs; on TPU the async runtime overlaps the parity
-reduce-scatter with forward compute — see EXPERIMENTS.md §Perf).
+  * window=1 — synchronous: checksums + parity refresh inside every
+    commit (the single-sweep engine, core/txn.py).
+  * window=W>1 — deferred epochs (core/epoch.py): in-window commits keep
+    the row digest current and union the dirty-page set; parity and the
+    checksum table refresh once per epoch from the windowed delta.  The
+    redo log still persists per step and covers the window for crash
+    replay.  The engine flushes before scrubs and online recovery, and
+    donates the old protected state into its successor (allocation-free
+    steady state).
+
+`overlap_commit` keeps protection off the critical path: step t+1's
+compute is dispatched before step t's commit (and, at an epoch boundary,
+its flush) is awaited — the programs are independent, so the async
+runtime overlaps the parity reduce-scatter with forward compute.  `run`
+resolves commits one step behind; an explicit `step()` stays fully
+synchronous.
+
+Crash recovery (paper §3.6): restore the newest checkpoint, then replay
+the redo log's marked records — the deterministic pipeline regenerates
+each logged batch from its cursor, and the row digest verifies each
+replayed step landed bit-identically (the deferred engine keeps the
+digest current per step precisely so every log record stays
+replay-verifiable mid-window).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +46,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ProtectConfig, TrainConfig
 from repro.core import recovery as recovery_mod
 from repro.core import redolog
+from repro.core.epoch import DeferredProtector, EngineHost
 from repro.core.scrub import Scrubber
 from repro.core.txn import Mode, ProtectedState, Protector
 from repro.data.synthetic import batch_for
@@ -39,7 +55,7 @@ from repro.models.transformer import build_model
 from repro.optim import build_optimizer
 
 
-class Trainer:
+class Trainer(EngineHost):
     def __init__(self, cfg: ModelConfig, train_cfg: TrainConfig,
                  protect_cfg: ProtectConfig, mesh, *,
                  seq_len: int = 128, global_batch: int = 8,
@@ -51,6 +67,8 @@ class Trainer:
         self.seq_len = seq_len
         self.global_batch = global_batch
         self.seed = seed
+        self.overlap_commit = bool(protect_cfg.overlap_commit)
+        self.window = int(protect_cfg.window)
 
         self.model = build_model(cfg, mesh)
         self.optimizer = build_optimizer(train_cfg, cfg)
@@ -66,10 +84,20 @@ class Trainer:
             log_capacity=protect_cfg.log_capacity)
         self.scrubber = Scrubber(self.protector,
                                  period=protect_cfg.scrub_period)
+        mode = self.protector.mode
+        self._engine: Optional[DeferredProtector] = None
+        self._est = None
+        self._prot: Optional[ProtectedState] = None
+        if self.window > 1 and (mode.has_parity or mode.has_cksums):
+            # bulk engine: train steps dirty the whole row
+            self._engine = DeferredProtector(self.protector,
+                                             window=self.window)
+        else:
+            self._commit = jax.jit(self.protector.make_commit(),
+                                   static_argnames=("canary_ok",))
 
         self._train_step = jax.jit(api.make_train_step(
             self.model, self.optimizer, train_cfg))
-        self._commit = jax.jit(self.protector.make_commit())
         self._batch_shardings = jax.tree.map(
             lambda s: NamedSharding(mesh, s), api.batch_specs(cfg, mesh),
             is_leaf=lambda x: isinstance(x, P))
@@ -80,10 +108,13 @@ class Trainer:
             from repro.checkpoint.manager import CheckpointManager
             self._ckpt_mgr = CheckpointManager(checkpoint_dir, mesh,
                                                state_specs)
-        self.prot: Optional[ProtectedState] = None
         self.cursor = 0
         self.history: list = []
         self._frozen = False
+        self._host_step = 0
+
+    # protected-state plumbing (prot property / flush) comes from
+    # core.epoch.EngineHost
 
     # -- lifecycle ---------------------------------------------------------------
 
@@ -96,6 +127,7 @@ class Trainer:
                 api.train_state_specs(self.model, self.optimizer, self.mesh),
                 is_leaf=lambda x: isinstance(x, P)))
         self.prot = self.protector.init(state)
+        self._host_step = 0
 
     def freeze(self):
         """Paper's pool freeze: drain outstanding work before recovery."""
@@ -108,52 +140,107 @@ class Trainer:
 
     # -- stepping ----------------------------------------------------------------
 
-    def step(self, *, canary_ok: bool = True) -> dict:
+    def _dispatch_step(self, *, canary_ok: bool = True) -> dict:
+        """Dispatch compute + commit without any host synchronization.
+
+        Returns the pending record `_resolve_step` finishes later; only
+        values that survive buffer donation are captured (ok / metrics
+        are fresh program outputs, never donated operands).
+        """
         assert self.prot is not None and not self._frozen
         batch = self.stream.device_batch(self.cursor, self._batch_shardings)
         rng = jax.random.fold_in(jax.random.PRNGKey(self.seed), self.cursor)
+        cursor_before = self.cursor
         new_state, metrics = self._train_step(self.prot.state, batch)
-        self.prot, ok = self._commit(self.prot, new_state,
-                                     data_cursor=self.cursor, rng_key=rng,
-                                     canary_ok=canary_ok)
-        committed = bool(jax.device_get(ok))
+        if self._engine is not None:
+            self._est, ok = self._engine.commit(
+                self._est, new_state, data_cursor=self.cursor,
+                rng_key=rng, canary_ok=canary_ok)
+        else:
+            self._prot, ok = self._commit(self._prot, new_state,
+                                          data_cursor=self.cursor,
+                                          rng_key=rng, canary_ok=canary_ok)
+        self.cursor += 1          # optimistic; rolled back on late abort
+        return {"ok": ok, "loss": metrics["loss"],
+                "cursor_before": cursor_before}
+
+    def _resolve_step(self, pending: dict) -> dict:
+        """Await a dispatched step's commit; bookkeeping + scrub cadence."""
+        committed = bool(jax.device_get(pending["ok"]))
         if committed:
-            self.cursor += 1
+            self._host_step += 1
+        else:
+            self.cursor = pending["cursor_before"]
         self.scrubber.on_commit()
-        out = {"step": int(jax.device_get(self.prot.step)),
-               "loss": float(jax.device_get(metrics["loss"])),
+        out = {"step": self._host_step,
+               "loss": float(jax.device_get(pending["loss"])),
                "committed": committed}
         self.history.append(out)
         if self.scrubber.due():
-            self.prot, report = self.scrubber.run(
+            self.flush()          # scrub must see current redundancy
+            prot, report = self.scrubber.run(
                 self.prot, freeze=self.freeze, resume=self.resume)
+            self.prot = prot
             out["scrub"] = dataclasses.asdict(report)
         return out
 
+    def step(self, *, canary_ok: bool = True) -> dict:
+        return self._resolve_step(self._dispatch_step(canary_ok=canary_ok))
+
     def run(self, n_steps: int, checkpoint_every: int = 0) -> list:
-        outs = []
-        for _ in range(n_steps):
-            outs.append(self.step())
-            if (checkpoint_every and self._ckpt_mgr
-                    and outs[-1]["step"] % checkpoint_every == 0):
+        def maybe_checkpoint():
+            if (outs and checkpoint_every and self._ckpt_mgr
+                    and outs[-1]["step"] % checkpoint_every == 0
+                    and outs[-1]["committed"]):
                 self.save_checkpoint()
+
+        outs = []
+        pending = None
+        for _ in range(n_steps):
+            if self.overlap_commit:
+                # dispatch step t+1's compute before awaiting commit t —
+                # the async runtime overlaps protection with forward
+                nxt = self._dispatch_step()
+                if pending is not None:
+                    outs.append(self._resolve_step(pending))
+                pending = nxt
+            else:
+                outs.append(self.step())
+            maybe_checkpoint()
+        if pending is not None:
+            # the trailing overlapped step gets the same checkpoint
+            # cadence the synchronous path would give it
+            outs.append(self._resolve_step(pending))
+            maybe_checkpoint()
         return outs
 
     # -- fault handling -----------------------------------------------------------
 
     def on_failure(self, event) -> dict:
-        """Online recovery entry point (the SIGBUS-handler analogue)."""
+        """Online recovery entry point (the SIGBUS-handler analogue).
+
+        With a deferred window pending, the flush first brings parity and
+        checksums current *from the cached row* — the cache is a separate
+        buffer the failure's state corruption never touched, so the
+        refreshed redundancy describes the intended values and recovery
+        proceeds as in the synchronous engine.  (A full machine loss that
+        also takes the cache and accumulator down falls back to
+        checkpoint + redo-log replay — see EXPERIMENTS.md §Perf,
+        window-loss semantics.)
+        """
         assert self.prot is not None
+        self.flush()
         if event.kind == "rank_loss":
-            self.prot, rep = recovery_mod.recover_from_rank_loss(
+            prot, rep = recovery_mod.recover_from_rank_loss(
                 self.protector, self.prot, event.lost_rank,
                 freeze=self.freeze, resume=self.resume)
         elif event.kind == "scribble":
-            self.prot, rep = recovery_mod.recover_from_scribble(
+            prot, rep = recovery_mod.recover_from_scribble(
                 self.protector, self.prot, event.locations,
                 freeze=self.freeze, resume=self.resume)
         else:
             raise ValueError(event.kind)
+        self.prot = prot
         return dataclasses.asdict(rep)
 
     # -- checkpoint / crash recovery ------------------------------------------------
@@ -169,14 +256,19 @@ class Trainer:
             self._ckpt_mgr.wait()
 
     def restore_from_checkpoint(self, replay: bool = True) -> dict:
-        """Crash recovery: newest checkpoint + redo-log replay (§3.6)."""
+        """Crash recovery: newest checkpoint + redo-log replay (§3.6).
+
+        Replay works identically for both cadences: deferred commits keep
+        the row digest current per step, so every marked record's digest
+        is checkable even when the crash hit mid-window.
+        """
         assert self._ckpt_mgr is not None
         self._ckpt_mgr.wait()
         step, state, extra = self._ckpt_mgr.restore_latest()
-        self.prot = self.protector.init(state)
-        object.__setattr__  # no-op; prot is a plain dataclass
+        prot = self.protector.init(state)
         self.prot = dataclasses.replace(
-            self.prot, step=jnp.asarray(step, jnp.uint32))
+            prot, step=jnp.asarray(step, jnp.uint32))
+        self._host_step = int(step)
         self.cursor = int(extra.get("cursor", step))
         replayed = []
         if replay and extra.get("log") is not None:

@@ -149,6 +149,34 @@ def test_fused_commit_old_terms_kernel_vs_ref():
         np.asarray(ref.fletcher_blocks_ref(old)))
 
 
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_accum_commit_kernel_vs_ref(shape):
+    acc = rand_u32(shape, seed=40)
+    old = rand_u32(shape, seed=41)
+    new = rand_u32(shape, seed=42)
+    a_k, o_k, n_k = commit_fused.fused_accum_commit(acc, old, new,
+                                                    interpret=True)
+    a_r, o_r, n_r = ref.fused_accum_commit_ref(acc, old, new)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(o_k), np.asarray(o_r))
+    np.testing.assert_array_equal(np.asarray(n_k), np.asarray(n_r))
+
+
+def test_fused_accum_commit_telescopes():
+    """W accumulate steps must land the single-delta row_0 ^ row_W, so the
+    epoch flush can apply one accumulated patch for the whole window."""
+    rows = [rand_u32((8, 256), seed=50 + i) for i in range(5)]
+    acc = jnp.zeros_like(rows[0])
+    for old, new in zip(rows[:-1], rows[1:]):
+        acc, old_ck, new_ck = ops.fused_accum_commit(acc, old, new)
+        np.testing.assert_array_equal(np.asarray(old_ck),
+                                      np.asarray(ref.fletcher_blocks_ref(old)))
+        np.testing.assert_array_equal(np.asarray(new_ck),
+                                      np.asarray(ref.fletcher_blocks_ref(new)))
+    np.testing.assert_array_equal(np.asarray(acc),
+                                  np.asarray(rows[0] ^ rows[-1]))
+
+
 def test_fused_kernels_odd_block_counts():
     """Tile picking must handle block counts not divisible by TILE_BLOCKS."""
     for n in (3, 12, 17):
