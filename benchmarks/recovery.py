@@ -7,7 +7,11 @@ Measures what the paper demonstrates qualitatively, plus latencies:
   * scribble: inject targeted bit flips -> scrub detect -> page repair,
   * canary: a smashed staging buffer must abort the transaction,
   * detection completeness: every injected corruption is found (no false
-    negatives) and clean pools scrub clean (no false positives).
+    negatives) and clean pools scrub clean (no false positives),
+  * double loss (beyond paper, redundancy=2): TWO simultaneous rank
+    losses solved from P + the GF(2^32) Q syndrome — reconstruction wall
+    time, exactness, and the Q storage tax (must stay <= 2x P; it is
+    exactly 1x — gated by scripts/bench_gate.py via BENCH_commit.json).
 """
 from __future__ import annotations
 
@@ -87,7 +91,37 @@ def run(quick: bool = False) -> dict:
     assert bool(rep["parity_ok"])
     print("clean-pool scrub: no false positives")
 
-    payload = {"rows": rows, "canary_caught": caught}
+    # dual parity: two simultaneous rank losses, P+Q Vandermonde solve
+    double_rows = []
+    for size in sizes:
+        state, specs = common.state_of_bytes(size, mesh)
+        p2 = Protector(mesh, jax.eval_shape(lambda: state), specs,
+                       mode=Mode.MLPC2, block_words=1024)
+        prot2 = p2.init(state)
+        w0 = np.asarray(prot2.state["w"]).copy()
+        bad, event = failure.inject_double_rank_loss(p2, prot2,
+                                                     ranks=(1, 3))
+        t0 = time.perf_counter()
+        rec, ok = p2.recover_two(bad, *event.lost_ranks)
+        jax.block_until_ready(jax.tree.leaves(rec.state)[0])
+        t_double = time.perf_counter() - t0
+        over = p2.overhead_report()
+        double_rows.append({
+            "state_B": size,
+            "double_recover_ms": round(t_double * 1e3, 2),
+            "double_exact": np.array_equal(np.asarray(rec.state["w"]), w0),
+            "double_verified": bool(ok),
+            "q_over_p": round(over["qparity_bytes_per_rank"]
+                              / max(over["parity_bytes_per_rank"], 1), 4),
+        })
+    common.print_table("double loss (redundancy=2, P+Q)", double_rows,
+                       ["state_B", "double_recover_ms", "double_exact",
+                        "double_verified", "q_over_p"])
+    assert all(r["double_exact"] and r["double_verified"]
+               for r in double_rows)
+
+    payload = {"rows": rows, "canary_caught": caught,
+               "double_loss": double_rows}
     common.save_result("recovery", payload)
     return payload
 

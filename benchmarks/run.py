@@ -29,15 +29,18 @@ BENCHES = ["storage_overhead", "txn_latency", "commit_sweep", "deferred",
 
 def emit_commit_json(txn_result: dict, quick: bool, path: str,
                      ab_result: dict = None,
-                     deferred_result: dict = None) -> None:
+                     deferred_result: dict = None,
+                     recovery_result: dict = None) -> None:
     """Write the per-PR commit-latency record (BENCH_commit.json).
 
     Distills txn_latency down to the commit hot path (overwrite latency
     per mode/size), plus the interleaved unfused-vs-fused A/B when
-    commit_sweep ran and the deferred-epoch W-sweep when `deferred` ran,
-    so perf regressions on the commit engines are visible as one small
-    diffable file (scripts/bench_gate.py diffs it against the committed
-    baseline); EXPERIMENTS.md §Perf records the history.
+    commit_sweep ran, the deferred-epoch W-sweep when `deferred` ran,
+    and the dual-parity recovery record (double-loss reconstruction time
+    + Q storage tax) when `recovery` ran, so perf regressions on the
+    commit/recovery engines are visible as one small diffable file
+    (scripts/bench_gate.py diffs it against the committed baseline);
+    EXPERIMENTS.md §Perf records the history.
     """
     overwrite = {}
     for r in txn_result["rows"]:
@@ -54,6 +57,8 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
         payload["ab_interleaved"] = ab_result["rows"]
     if deferred_result:
         payload["deferred"] = deferred_result["rows"]
+    if recovery_result and recovery_result.get("double_loss"):
+        payload["recovery"] = {"double_loss": recovery_result["double_loss"]}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"commit benchmark record -> {path}")
@@ -87,7 +92,8 @@ def main():
         emit_commit_json(results["txn_latency"], args.quick,
                          args.commit_json,
                          ab_result=results.get("commit_sweep"),
-                         deferred_result=results.get("deferred"))
+                         deferred_result=results.get("deferred"),
+                         recovery_result=results.get("recovery"))
     print("\n" + "=" * 70)
     for name, s in status.items():
         print(f"{name:20s} {s}")

@@ -86,6 +86,30 @@ def check(fresh: dict, base: dict, wall_tol: float,
                     f"deferred[{size},{mode}]: W=16 bytes/step "
                     f"{row['bytes_per_step_MB']} not below W=1 "
                     f"{sync['bytes_per_step_MB']} — deferral win lost")
+
+    # -- dual-parity recovery section ------------------------------------------
+    fr = _index(fresh.get("recovery", {}).get("double_loss", []),
+                ("state_B",))
+    br = _index(base.get("recovery", {}).get("double_loss", []),
+                ("state_B",))
+    if br and not fr:
+        bad.append("recovery.double_loss: record missing from fresh run "
+                   "(double-loss reconstruction no longer measured)")
+    for key, row in fr.items():
+        # structural: Q storage tax must stay <= 2x P (it is exactly 1x
+        # by construction — one seg_words row per syndrome); exactness
+        # is asserted inside the benchmark itself
+        if row["q_over_p"] > 2.0:
+            bad.append(f"recovery.double_loss{key}: q_over_p "
+                       f"{row['q_over_p']} > 2.0 — Q storage blew past "
+                       "the dual-parity budget")
+        ref = br.get(key)
+        # wall: pathology catch-all only (same rule as the other walls)
+        if ref and (row["double_recover_ms"]
+                    > ref["double_recover_ms"] * (1 + wall_tol)):
+            bad.append(f"recovery.double_loss{key}: double_recover_ms "
+                       f"{row['double_recover_ms']} vs baseline "
+                       f"{ref['double_recover_ms']} (> {1 + wall_tol:.1f}x)")
     return bad
 
 
@@ -114,6 +138,8 @@ def main():
     print("bench gate: ok "
           f"({len(fresh.get('deferred', []))} deferred cells, "
           f"{len(fresh.get('ab_interleaved', []))} A/B cells, "
+          f"{len(fresh.get('recovery', {}).get('double_loss', []))} "
+          "double-loss cells, "
           f"wall tol {args.wall_tol}, bytes tol {args.bytes_tol})")
     return 0
 

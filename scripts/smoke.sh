@@ -20,8 +20,9 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== perf: commit latency (quick) =="
-    python -m benchmarks.run --quick --only txn_latency,commit_sweep,deferred \
+    echo "== perf: commit latency + dual-parity recovery (quick) =="
+    python -m benchmarks.run --quick \
+        --only txn_latency,commit_sweep,deferred,recovery \
         --commit-json BENCH_commit.fresh.json
     echo "== perf: bench gate =="
     python scripts/bench_gate.py

@@ -120,9 +120,14 @@ class TrainConfig:
     grad_compression: bool = False    # int8 all-reduce with error feedback
 
 
+_PROTECT_MODES = ("none", "ml", "mlp", "mlpc", "replica", "mlp2", "mlpc2")
+
+
 @dataclasses.dataclass(frozen=True)
 class ProtectConfig:
     mode: str = "mlpc"                # none | ml | mlp | mlpc | replica
+                                      # (mlp2/mlpc2 = dual-parity levels,
+                                      # normally reached via redundancy=2)
     block_words: int = 1024
     hybrid_threshold: float = 0.5
     scrub_period: int = 0             # transactions between scrubs; 0 = off
@@ -131,6 +136,52 @@ class ProtectConfig:
                                       # epoch t's protection program
     window: int = 1                   # deferred-epoch window W; 1 = the
                                       # synchronous per-commit engine
+    redundancy: int = 1               # simultaneous rank losses survived:
+                                      # 1 = XOR parity P, 2 = P + GF(2^32)
+                                      # Q syndrome (two-rank reconstruction)
+
+    def __post_init__(self):
+        if self.mode not in _PROTECT_MODES:
+            raise ValueError(
+                f"ProtectConfig.mode={self.mode!r} is not a protection "
+                f"level; pick one of {', '.join(_PROTECT_MODES)} "
+                "(Table 2 ladder: none < ml < mlp < mlpc; replica = 2x "
+                "storage baseline)")
+        if self.window < 1:
+            raise ValueError(
+                f"ProtectConfig.window={self.window} — the deferred-epoch "
+                "window counts commits per redundancy refresh, so it must "
+                "be >= 1 (1 = synchronous per-commit protection)")
+        if self.scrub_period < 0:
+            raise ValueError(
+                f"ProtectConfig.scrub_period={self.scrub_period} — use 0 "
+                "to disable scrubbing or a positive transaction count "
+                "between scrubs")
+        if self.redundancy not in (1, 2):
+            raise ValueError(
+                f"ProtectConfig.redundancy={self.redundancy} — a zone "
+                "holds at most two syndromes: 1 (XOR parity, one rank "
+                "loss) or 2 (P + GF(2^32) Q, any two rank losses)")
+        if self.redundancy == 2 and self.mode not in ("mlp", "mlpc",
+                                                      "mlp2", "mlpc2"):
+            raise ValueError(
+                f"ProtectConfig.redundancy=2 with mode={self.mode!r} — "
+                "the Q syndrome extends parity, so redundancy=2 requires "
+                "a parity mode (mlp or mlpc)")
+        if self.block_words < 1:
+            raise ValueError(
+                f"ProtectConfig.block_words={self.block_words} — the "
+                "page-column unit must be a positive word count "
+                "(paper default: 1024 words = 4 KB pages)")
+        if not 0.0 <= self.hybrid_threshold <= 1.0:
+            raise ValueError(
+                f"ProtectConfig.hybrid_threshold={self.hybrid_threshold} "
+                "— the patch/bulk crossover is a dirty-page *fraction* "
+                "and must lie in [0, 1]")
+        if self.log_capacity < 1:
+            raise ValueError(
+                f"ProtectConfig.log_capacity={self.log_capacity} — the "
+                "redo log needs at least one record slot")
 
 
 def workload_skips(cfg: ModelConfig, wl: Workload) -> Optional[str]:

@@ -1,7 +1,10 @@
 """Pangolin-JAX core: the paper's contribution as composable JAX modules."""
 
-from repro.core.txn import Mode, ProtectedState, Protector  # noqa: F401
+from repro.core.txn import (  # noqa: F401
+    Mode, ProtectedState, Protector, resolve_mode)
 from repro.core.scrub import Scrubber, ScrubReport  # noqa: F401
 from repro.core.recovery import (  # noqa: F401
-    RecoveryReport, recover_from_rank_loss, recover_from_scribble)
-from repro.core import checksum, layout, microbuffer, parity, redolog  # noqa: F401
+    RecoveryReport, recover_from_double_loss, recover_from_rank_loss,
+    recover_from_scribble)
+from repro.core import (  # noqa: F401
+    checksum, gf, layout, microbuffer, parity, redolog)

@@ -64,10 +64,12 @@ from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import utils
 from repro.core import checksum as ck
+from repro.core import gf
 from repro.core import layout as layout_mod
 from repro.core import parity as parity_mod
 from repro.core import redolog
@@ -166,15 +168,25 @@ class DeferredProtector:
     def __init__(self, protector: Protector, *, window: int = 16,
                  dirty_capacity: Optional[int] = None,
                  dirty_leaf_idx: Optional[Sequence[int]] = None,
-                 donate: bool = True):
+                 donate: bool = True, replicate_meta: bool = False):
         mode = protector.mode
         assert mode.has_parity or mode.has_cksums, (
             "deferred epochs batch parity/checksum work; mode "
             f"{mode.value} has neither — use Protector.commit directly")
         assert window >= 1, window
         self.p = protector
+        # `window` is the ceiling; the *current* window adapts (adaptive
+        # shrink: scrub pressure / failure suspicion collapse it toward 1,
+        # clean scrubs regrow it by doubling — see report_pressure)
+        self.max_window = window
         self.window = window
         self.donate = donate
+        # replicate_meta mirrors the window's dirty mask + digest (a few
+        # hundred bytes) across the pod at every commit, so survivors of a
+        # mid-window loss can bound the lost window without checkpoint +
+        # log replay (see window_meta / verify_window_bound)
+        self.replicate_meta = bool(replicate_meta)
+        self._meta: Optional[dict] = None
         lo = protector.layout
         self.patch = dirty_leaf_idx is not None
         self.dirty_leaf_idx = (tuple(int(i) for i in dirty_leaf_idx)
@@ -230,6 +242,88 @@ class DeferredProtector:
     @property
     def needs_flush(self) -> bool:
         return self._since > 0
+
+    # -- adaptive window (scrub pressure / failure suspicion) -------------------
+
+    def report_pressure(self, suspect: bool) -> int:
+        """Feed scrub pressure or failure suspicion back into the window.
+
+        Any detected error (bad pages, parity/Q mismatch, stale row
+        cache) or failure event collapses the window to 1 — the engine
+        degenerates to the synchronous cadence, so redundancy lag never
+        compounds while the pool is suspect.  Every clean scrub doubles
+        the window back toward its configured ceiling.  Returns the new
+        window size; takes effect at the next commit (an already-open
+        window flushes on its old cadence at the latest).
+        """
+        if suspect:
+            self.window = 1
+        else:
+            self.window = min(self.max_window, max(self.window * 2, 2))
+        return self.window
+
+    # -- replicated window metadata ---------------------------------------------
+
+    @property
+    def window_meta(self) -> Optional[dict]:
+        """The last replicated (dirty mask + digest) snapshot, or None.
+
+        Materializes the device-side mirror to the host lazily — the
+        commit path never blocks on it (see _mirror_meta).
+        """
+        if self._meta is None:
+            return None
+        nb = self.p.layout.n_blocks
+        dig, step, pending, dirty = jax.device_get(self._meta)
+        meta = {"step": int(step), "pending": int(pending),
+                "digest": np.asarray(dig).copy()}
+        if dirty is not None:
+            d = np.asarray(dirty).reshape(-1, nb).any(axis=0)
+            meta["dirty_pages"] = np.nonzero(d)[0].tolist()
+        else:
+            meta["dirty_pages"] = None     # bulk engine: whole row in-window
+        return meta
+
+    def _mirror_meta(self, est: EpochState) -> None:
+        """Mirror the window's bookkeeping across the pod.
+
+        A few hundred bytes per commit: the unioned dirty-page mask,
+        every rank's row digest, and the pending count.  On a mid-window
+        rank loss the survivors' copy bounds exactly which pages the lost
+        window could have touched and what the row digests must be after
+        flush + reconstruction — no checkpoint + redo replay needed to
+        re-derive them.  The snapshot is an *async device copy* (the
+        stand-in for a secondary pod-axis all-gather): jnp.copy gives the
+        mirror its own buffers — donation of the live EpochState can't
+        invalidate them — without a host sync, so overlap_commit keeps
+        dispatching ahead; `window_meta` fetches to host only when a
+        failure actually consults the mirror.
+        """
+        self._meta = jax.tree.map(
+            jnp.copy, (est.prot.digest, est.prot.step, est.pending,
+                       est.dirty))
+
+    def verify_window_bound(self, est: EpochState) -> Optional[bool]:
+        """Check the live rows against the replicated digests.
+
+        Call after flush (+ recovery): recomputes each rank's row digest
+        from the live state and compares with the mirrored copy.  True
+        means the survivors' metadata bounds the pool exactly — nothing
+        in the lost window needs checkpoint + log replay.
+        """
+        if self._meta is None:
+            return None
+        p, lo = self.p, self.p.layout
+        if "wmeta_digest" not in self._jit:
+            def _dig(state):
+                row = layout_mod.flatten_row(lo, state)
+                return p._pack(ck.digest(row, lo.block_words))
+            self._jit["wmeta_digest"] = jax.jit(p._smap(
+                _dig, in_specs=(p.state_specs,), out_specs=p._zone_spec))
+        dig = np.asarray(jax.device_get(
+            self._jit["wmeta_digest"](est.prot.state)))
+        want = np.asarray(jax.device_get(self._meta[0]))   # mirrored digest
+        return bool(np.array_equal(dig, want))
 
     # -- in-window commit -------------------------------------------------------
 
@@ -317,7 +411,8 @@ class DeferredProtector:
                 state=state_new, parity=prot.parity, cksums=prot.cksums,
                 digest=outs["digest"], replica=prot.replica, log=log,
                 step=step,
-                row=prot.row if patch else outs["row"])
+                row=prot.row if patch else outs["row"],
+                qparity=prot.qparity)
             return (new_prot, outs.get("dirty", dirty),
                     pending + U32(1), jnp.ones((), bool))
 
@@ -343,10 +438,13 @@ class DeferredProtector:
         patch = self.patch
         dirty_leaves = self.dirty_leaf_idx
 
-        def _flush(row_cache, parity, cksums, state, dirty):
+        def _flush(row_cache, parity, qparity, cksums, state, dirty):
             base = p._unpack(row_cache)
             parity_l = p._unpack(parity) if parity is not None else None
+            qparity_l = p._unpack(qparity) if qparity is not None else None
             cksums_l = p._unpack(cksums) if cksums is not None else None
+            coeff = (gf.rank_coeff(p.group_size, ax)
+                     if mode.has_qparity else None)
             outs = {}
             if patch:
                 row = layout_mod.update_row(lo, base, state, dirty_leaves)
@@ -360,13 +458,22 @@ class DeferredProtector:
                 g = jnp.minimum(idx, nb - 1)
                 old_p = parity_mod.gather_pages(base, g, bw)
                 new_p = parity_mod.gather_pages(row, g, bw)
+                qdelta_p = None
                 if mode.has_cksums:
-                    delta_p, fresh = kops.fused_commit(old_p, new_p)
+                    if mode.has_qparity:
+                        # Q rides the same telescoped epoch delta: the
+                        # fused PQ sweep weights it by g^me in VMEM
+                        delta_p, qdelta_p, fresh = kops.fused_commit_pq(
+                            old_p, new_p, coeff)
+                    else:
+                        delta_p, fresh = kops.fused_commit(old_p, new_p)
                     sidx = jnp.where(valid, g, nb)
                     outs["cksums"] = p._pack(
                         cksums_l.at[sidx].set(fresh, mode="drop"))
                 else:
                     delta_p = kops.xor_delta(old_p, new_p)
+                    if mode.has_qparity:
+                        qdelta_p = kops.gf_scale(delta_p, coeff)
                 if mode.has_parity:
                     delta_p = jnp.where(valid[:, None], delta_p, 0)
                     # fill slots must route to the out-of-range sentinel,
@@ -376,12 +483,21 @@ class DeferredProtector:
                     outs["parity"] = p._pack(parity_mod.patch_parity_delta(
                         parity_l, delta_p, jnp.where(valid, g, nb), lo,
                         ax))
+                if mode.has_qparity:
+                    qdelta_p = jnp.where(valid[:, None], qdelta_p, 0)
+                    outs["qparity"] = p._pack(
+                        parity_mod.patch_qparity_delta(
+                            qparity_l, qdelta_p, jnp.where(valid, g, nb),
+                            lo, ax))
             else:
                 # bulk: parity rebuilt from the current row — equal to
                 # parity_start ^ rs(telescoped delta) by XOR linearity
                 if mode.has_parity:
                     outs["parity"] = p._pack(
                         parity_mod.build_parity(row, ax))
+                if mode.has_qparity:
+                    outs["qparity"] = p._pack(
+                        parity_mod.build_qparity(row, ax))
                 if mode.has_cksums:
                     outs["cksums"] = p._pack(kops.fletcher_blocks(
                         parity_mod.page_view(row, bw)))
@@ -393,20 +509,23 @@ class DeferredProtector:
         out_specs = {}
         if mode.has_parity:
             out_specs["parity"] = z
+        if mode.has_qparity:
+            out_specs["qparity"] = z
         if mode.has_cksums:
             out_specs["cksums"] = z
         if patch:
             out_specs["row"] = z
             out_specs["dirty"] = z
-        fn = p._smap(_flush, in_specs=(z, z, z, p.state_specs, z),
+        fn = p._smap(_flush, in_specs=(z, z, z, z, p.state_specs, z),
                      out_specs=out_specs)
 
         def flush(est: EpochState) -> EpochState:
             prot = est.prot
-            outs = fn(prot.row, prot.parity, prot.cksums, prot.state,
-                      est.dirty)
+            outs = fn(prot.row, prot.parity, prot.qparity, prot.cksums,
+                      prot.state, est.dirty)
             new_prot = dataclasses.replace(
                 prot, parity=outs.get("parity", prot.parity),
+                qparity=outs.get("qparity", prot.qparity),
                 cksums=outs.get("cksums", prot.cksums),
                 row=outs.get("row", prot.row))
             return EpochState(prot=new_prot, dirty=outs.get("dirty"),
@@ -449,6 +568,8 @@ class DeferredProtector:
         self._since += 1
         if self._since >= self.window:
             est = self.flush(est)
+        if self.replicate_meta:
+            self._mirror_meta(est)
         return est, ok
 
     def flush(self, est: EpochState) -> EpochState:

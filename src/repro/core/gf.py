@@ -1,0 +1,204 @@
+"""GF(2^32) arithmetic for the dual-parity (P+Q) erasure code.
+
+Pangolin's zone holds a single XOR parity row, so a zone tolerates exactly
+one concurrent failure (§3.1).  The second syndrome Q extends the scheme to
+any TWO simultaneous rank losses, Reed-Solomon style, while staying linear
+over XOR — so every piece of the existing parity machinery (delta
+telescoping, patch scatters, deferred-epoch batching) applies verbatim:
+
+    P = row_0 ^ row_1 ^ ... ^ row_{G-1}
+    Q = g^0·row_0 ^ g^1·row_1 ^ ... ^ g^{G-1}·row_{G-1}
+
+with multiplication in GF(2^32) over the word lanes.  Losing ranks a < b
+leaves the 2x2 Vandermonde system
+
+    P ^ S_p = A ^ B              S_p, S_q = survivor syndromes
+    Q ^ S_q = g^a·A ^ g^b·B      A, B    = the lost rows
+
+whose determinant g^a ^ g^b is nonzero for a != b because g is a
+*primitive* element — so the solve below always succeeds.
+
+Field choice: the word size IS the lane width (u32), so parity words and
+Q words are the same shape and every XOR kernel is reusable.  The reduction
+polynomial is the degree-32 primitive pentanomial
+
+    x^32 + x^22 + x^2 + x + 1          (POLY = 0x400007)
+
+(the classic maximal-length LFSR tap set 32/22/2/1), with generator
+g = x = 2.  Primitivity (verified: ord(g) = 2^32 - 1 against all prime
+factors 3·5·17·257·65537) guarantees distinct nonzero g^i for every rank
+index that could ever appear.
+
+Two implementation layers:
+
+  * host integers (`*_int`) — exact Python arithmetic for the scalar
+    constants (rank coefficients, Vandermonde inverses) that jitted code
+    consumes as compile-time literals;
+  * jnp (`xtime` / `mul_const` / `mul_pow_g`) — element-wise carry-less
+    multiply over u32 buffers, usable inside shard_map and as the oracle
+    the Pallas kernels (kernels/gf_parity.py) are tested against.
+    `mul_const` is the 32-step shift-and-conditional-XOR clmul, branch-free
+    so it vectorizes on the VPU and accepts a *traced* scalar coefficient
+    (the per-rank g^i looked up by axis_index).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+MASK = (1 << 32) - 1
+# x^32 + x^22 + x^2 + x + 1 — primitive over GF(2), generator g = x = 2.
+POLY = 0x400007
+ORDER = (1 << 32) - 1           # multiplicative group order (g is primitive)
+
+
+# ---------------------------------------------------------------------------
+# host-side exact arithmetic (scalar constants for jitted consumers)
+# ---------------------------------------------------------------------------
+
+def xtime_int(x: int) -> int:
+    """Multiply by g (carry-less doubling) on a host integer."""
+    x &= MASK
+    return ((x << 1) & MASK) ^ (POLY if x >> 31 else 0)
+
+
+def mul_int(a: int, b: int) -> int:
+    """Full GF(2^32) product of two host integers (shift-and-add clmul)."""
+    a &= MASK
+    b &= MASK
+    acc = 0
+    while b:
+        if b & 1:
+            acc ^= a
+        a = xtime_int(a)
+        b >>= 1
+    return acc
+
+
+def pow_int(a: int, e: int) -> int:
+    """a^e by square-and-multiply (e reduced mod the group order)."""
+    if a == 0:
+        return 0
+    e %= ORDER
+    r = 1
+    while e:
+        if e & 1:
+            r = mul_int(r, a)
+        a = mul_int(a, a)
+        e >>= 1
+    return r
+
+
+def inv_int(a: int) -> int:
+    """Multiplicative inverse a^(2^32 - 2); a must be nonzero."""
+    if a & MASK == 0:
+        raise ZeroDivisionError("GF(2^32) inverse of 0")
+    return pow_int(a, ORDER - 1)
+
+
+@functools.lru_cache(maxsize=None)
+def pow_g_int(k: int) -> int:
+    """g^k as a host integer (rank coefficient)."""
+    r = 1
+    for _ in range(k % ORDER if k >= ORDER else k):
+        r = xtime_int(r)
+    return r
+
+
+@functools.lru_cache(maxsize=None)
+def pow_g_table(g: int) -> tuple:
+    """(g^0, ..., g^{G-1}) — per-rank Q coefficients for a zone of size G."""
+    out, cur = [], 1
+    for _ in range(g):
+        out.append(cur)
+        cur = xtime_int(cur)
+    return tuple(out)
+
+
+def pow_g_array(g: int) -> np.ndarray:
+    """`pow_g_table` as a u32 ndarray (device lookup by axis_index)."""
+    return np.asarray(pow_g_table(g), np.uint32)
+
+
+def solve_two_int(p: int, q: int, rank_a: int, rank_b: int) -> tuple:
+    """Host oracle for the 2x2 Vandermonde solve (tests)."""
+    ga, gb = pow_g_int(rank_a), pow_g_int(rank_b)
+    b = mul_int(q ^ mul_int(ga, p), inv_int(ga ^ gb))
+    return p ^ b, b
+
+
+# ---------------------------------------------------------------------------
+# jnp element-wise arithmetic (shard_map-safe; Pallas oracle)
+# ---------------------------------------------------------------------------
+
+def xtime(x: jax.Array) -> jax.Array:
+    """Element-wise multiply by g: (x << 1) ^ ((x >> 31) * POLY)."""
+    assert x.dtype == U32, x.dtype
+    return (x << U32(1)) ^ ((x >> U32(31)) * U32(POLY))
+
+
+def mul_const(x: jax.Array, coeff) -> jax.Array:
+    """Element-wise GF(2^32) multiply of a u32 buffer by one coefficient.
+
+    `coeff` may be a Python int or a traced u32 scalar (e.g. the rank's
+    g^i gathered from `pow_g_array` by `lax.axis_index`).  Branch-free
+    32-step clmul: step i XORs in x·g^i masked by coefficient bit i —
+    pure VPU ops, bit-identical to the host `mul_int` per lane.
+    """
+    assert x.dtype == U32, x.dtype
+    coeff = jnp.asarray(coeff, U32)
+    acc = jnp.zeros_like(x)
+    cur = x
+    for i in range(32):
+        bit = (coeff >> U32(i)) & U32(1)
+        acc = acc ^ (bit * cur)
+        cur = xtime(cur)
+    return acc
+
+
+def mul_pow_g(x: jax.Array, k: int) -> jax.Array:
+    """Element-wise multiply by g^k for a *static* k (rank index).
+
+    Small k unrolls as k doublings (cheaper than the full clmul); large k
+    falls back to `mul_const` with the host-computed coefficient.
+    """
+    k = int(k)
+    assert k >= 0, k
+    if k >= 32:
+        return mul_const(x, pow_g_int(k))
+    for _ in range(k):
+        x = xtime(x)
+    return x
+
+
+def rank_coeff(group_size: int, axis_name: str) -> jax.Array:
+    """This rank's Q Vandermonde coefficient g^me (shard_map-only).
+
+    One table lookup by `lax.axis_index` — the single place the
+    coefficient scheme lives, shared by the commit engines, the epoch
+    flush, and the GF collective.
+    """
+    from jax import lax
+    table = jnp.asarray(pow_g_array(group_size))
+    return table[lax.axis_index(axis_name)]
+
+
+def solve_two(p: jax.Array, q: jax.Array, rank_a: int, rank_b: int) -> tuple:
+    """Solve the double-loss Vandermonde system element-wise.
+
+    `p` = P ^ S_p (= A ^ B) and `q` = Q ^ S_q (= g^a·A ^ g^b·B) for lost
+    ranks a != b (static ints).  The scalar constants — g^a and the
+    determinant inverse — are exact host integers folded into the program,
+    so the device does two constant multiplies and two XORs per word.
+    Returns (A, B), the lost rows' segments.
+    """
+    rank_a, rank_b = int(rank_a), int(rank_b)
+    assert rank_a != rank_b, "double-loss solve needs two distinct ranks"
+    ga = pow_g_int(rank_a)
+    det_inv = inv_int(ga ^ pow_g_int(rank_b))
+    b = mul_const(q ^ mul_const(p, ga), det_inv)
+    return p ^ b, b

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import gf
 from repro.core.layout import ZoneLayout
 from repro.dist import collectives as coll
 
@@ -106,6 +107,76 @@ def patch_parity_delta(parity_seg: jax.Array, delta_pages: jax.Array,
     cur = seg_pages[jnp.minimum(scatter_idx, pages_per_seg - 1)]
     out = seg_pages.at[scatter_idx].set(cur ^ patch, mode="drop")
     return out.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# dual parity: the GF(2^32) Q syndrome (beyond paper — two-rank erasure)
+# ---------------------------------------------------------------------------
+
+def build_qparity(row: jax.Array, axis_name: str) -> jax.Array:
+    """Full Q build: GF-weighted XOR reduce-scatter (rank i adds g^i·row_i)."""
+    return coll.gf_reduce_scatter(row, axis_name)
+
+
+def apply_qdelta(qparity_seg: jax.Array, qdelta_row: jax.Array,
+                 axis_name: str) -> jax.Array:
+    """Bulk Q delta path: qparity ^= XOR-reduce-scatter(g^me · delta).
+
+    `qdelta_row` is the *pre-weighted* delta (the fused PQ sweep emits
+    g^me·(old^new) directly), so the combine is the plain XOR collective —
+    GF addition is XOR, and the weighting already happened in VMEM.
+    """
+    return qparity_seg ^ coll.xor_reduce_scatter(qdelta_row, axis_name)
+
+
+def patch_qparity_delta(qparity_seg: jax.Array, qdelta_pages: jax.Array,
+                        page_idx: jax.Array, layout: ZoneLayout,
+                        axis_name: str) -> jax.Array:
+    """Incremental Q patch for pre-weighted dirty-page deltas.
+
+    Identical algebra to the P patch — Q is linear over XOR once each
+    rank has scaled its delta by g^i — so the owner-scatter machinery is
+    shared verbatim.  `qdelta_pages`: (k, bw) g^me-weighted deltas.
+    """
+    return patch_parity_delta(qparity_seg, qdelta_pages, page_idx, layout,
+                              axis_name)
+
+
+def verify_qparity(row: jax.Array, qparity_seg: jax.Array,
+                   axis_name: str) -> jax.Array:
+    """Zone invariant: GF-weighted XOR of all rows equals Q.  Returns bool."""
+    fresh = coll.gf_reduce_scatter(row, axis_name)
+    ok_local = jnp.all(fresh == qparity_seg)
+    return lax.pmin(ok_local.astype(jnp.int32), axis_name) > 0
+
+
+def reconstruct_two(row: jax.Array, parity_seg: jax.Array,
+                    qparity_seg: jax.Array, lost_a: int, lost_b: int,
+                    axis_name: str) -> tuple:
+    """Rebuild TWO lost ranks' rows online from P + Q (2x2 Vandermonde).
+
+    `lost_a` / `lost_b` are *static* distinct rank indices (recovery is
+    rare; one compiled program per pair).  Survivors contribute their rows
+    to both syndromes; the lost ranks contribute zeros, so
+
+        P ^ S_p = A ^ B,     Q ^ S_q = g^a·A ^ g^b·B
+
+    which `gf.solve_two` inverts with exact host-integer constants.  Every
+    rank returns both reconstructed rows (the lost ranks replace their
+    state; survivors may verify or discard).  Also covers a rank loss with
+    an outstanding scribbled rank: name the scribbled rank as the second
+    loss and both come back to intended values.
+    """
+    lost_a, lost_b = int(lost_a), int(lost_b)
+    me = lax.axis_index(axis_name)
+    lost = (me == lost_a) | (me == lost_b)
+    contrib = jnp.where(lost, jnp.zeros_like(row), row)
+    s_p = coll.xor_reduce_scatter(contrib, axis_name)
+    s_q = coll.gf_reduce_scatter(contrib, axis_name)
+    a_seg, b_seg = gf.solve_two(parity_seg ^ s_p, qparity_seg ^ s_q,
+                                lost_a, lost_b)
+    return (coll.all_gather_row(a_seg, axis_name),
+            coll.all_gather_row(b_seg, axis_name))
 
 
 # ---------------------------------------------------------------------------

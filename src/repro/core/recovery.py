@@ -28,11 +28,15 @@ from repro.core import txn as txn_mod
 
 @dataclasses.dataclass
 class RecoveryReport:
-    kind: str                    # "rank_loss" | "scribble"
+    kind: str                    # "rank_loss" | "double_loss" | "scribble"
     lost_rank: Optional[int]
     pages: list
     verified: bool               # post-repair checksum verification passed
     frozen: bool
+    lost_ranks: Optional[list] = None     # double-loss: both ranks
+    # survivors' replicated window metadata bound (deferred engine):
+    # {"pending", "dirty_pages", "digest_verified"} or None
+    window_bound: Optional[dict] = None
 
 
 def recover_from_rank_loss(protector: txn_mod.Protector,
@@ -52,6 +56,38 @@ def recover_from_rank_loss(protector: txn_mod.Protector,
         resume()
     return prot, RecoveryReport("rank_loss", lost_rank, [], verified,
                                 freeze is not None)
+
+
+def recover_from_double_loss(protector: txn_mod.Protector,
+                             prot: txn_mod.ProtectedState,
+                             lost_ranks: Sequence[int],
+                             freeze: Optional[Callable] = None,
+                             resume: Optional[Callable] = None):
+    """Rebuild TWO lost data-ranks' rows from P + Q, online.
+
+    Requires a dual-parity mode (redundancy=2): the 2x2 Vandermonde solve
+    over GF(2^32) inverts both losses at once (core/parity.reconstruct_two).
+    Also the escape hatch for a rank loss while a scribbled page is still
+    unrepaired — name the scribbled rank as the second loss and both come
+    back to intended values (single-parity Pangolin cannot untangle that
+    overlap).  Idempotent like the single-loss path: pure reconstruction
+    from surviving rows + both syndromes.
+    """
+    if not protector.mode.has_qparity:
+        raise RuntimeError(
+            f"mode {protector.mode.value} has no Q syndrome; a double "
+            "rank loss is unrecoverable online — run redundancy=2 "
+            "(mlp2/mlpc2) or restore from checkpoint")
+    a, b = (int(r) for r in lost_ranks)
+    if freeze is not None:
+        freeze()
+    prot, ok = protector.recover_two(prot, a, b)
+    verified = bool(jax.device_get(ok))
+    if resume is not None:
+        resume()
+    return prot, RecoveryReport("double_loss", None, [], verified,
+                                freeze is not None,
+                                lost_ranks=sorted((a, b)))
 
 
 def recover_from_scribble(protector: txn_mod.Protector,

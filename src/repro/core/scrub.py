@@ -25,16 +25,30 @@ class ScrubReport:
     repaired: bool
     repair_ok: Optional[bool]
     row_cache_ok: Optional[bool] = None   # cached row == flatten(state)
+    qparity_ok: Optional[bool] = None     # GF Q syndrome invariant holds
+
+    @property
+    def suspect(self) -> bool:
+        """Any signal that the pool (or its redundancy) is unhealthy."""
+        return (bool(self.bad_locations) or self.parity_ok is False
+                or self.qparity_ok is False or self.row_cache_ok is False)
 
 
 class Scrubber:
-    """Transaction-count-based scrubbing with online repair."""
+    """Transaction-count-based scrubbing with online repair.
+
+    `engine` (optional) is a DeferredProtector to feed scrub pressure
+    back into: a suspect scrub collapses its window toward 1, a clean
+    scrub lets it regrow (adaptive window sizing — redundancy lag never
+    compounds while the pool looks unhealthy).
+    """
 
     def __init__(self, protector: txn_mod.Protector, period: int = 0,
-                 auto_repair: bool = True):
+                 auto_repair: bool = True, engine=None):
         self.protector = protector
         self.period = period          # 0 = disabled
         self.auto_repair = auto_repair
+        self.engine = engine          # Optional[DeferredProtector]
         self._since = 0
 
     def due(self) -> bool:
@@ -75,6 +89,8 @@ class Scrubber:
             bad_locations = list(zip(ranks.tolist(), pages.tolist()))
         parity_ok = (bool(host["parity_ok"]) if "parity_ok" in host
                      else None)
+        qparity_ok = (bool(host["qparity_ok"]) if "qparity_ok" in host
+                      else None)
         row_cache_ok = (bool(host["row_cache_ok"])
                         if "row_cache_ok" in host else None)
         repaired, repair_ok = False, None
@@ -85,6 +101,11 @@ class Scrubber:
             repaired, repair_ok = True, bool(jax.device_get(ok))
         if resume is not None:
             resume()
-        return prot, ScrubReport(int(host["step"]), True, bad_locations,
-                                 parity_ok, repaired, repair_ok,
-                                 row_cache_ok=row_cache_ok)
+        report = ScrubReport(int(host["step"]), True, bad_locations,
+                             parity_ok, repaired, repair_ok,
+                             row_cache_ok=row_cache_ok,
+                             qparity_ok=qparity_ok)
+        if self.engine is not None:
+            # adaptive window: errors shrink W toward 1, clean regrows it
+            self.engine.report_pressure(report.suspect)
+        return prot, report

@@ -40,6 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core import checksum as ck
+from repro.core import gf
 from repro.core import layout as layout_mod
 from repro.core import parity as parity_mod
 from repro.core import redolog
@@ -56,22 +57,61 @@ class Mode(enum.Enum):
     MLP = "mlp"            # + parity
     MLPC = "mlpc"          # + checksums
     REPLICA = "replica"    # full replica (Pmemobj-R analogue)
+    # dual-parity levels (beyond paper): a second, GF(2^32) Reed-Solomon
+    # syndrome Q alongside XOR parity P — any TWO simultaneous rank
+    # losses in a zone reconstruct (core/gf.py, parity.reconstruct_two)
+    MLP2 = "mlp2"          # + Q syndrome (no checksums)
+    MLPC2 = "mlpc2"        # + Q syndrome + checksums
 
     @property
     def has_parity(self) -> bool:
-        return self in (Mode.MLP, Mode.MLPC)
+        return self in (Mode.MLP, Mode.MLPC, Mode.MLP2, Mode.MLPC2)
 
     @property
     def has_cksums(self) -> bool:
-        return self is Mode.MLPC
+        return self in (Mode.MLPC, Mode.MLPC2)
+
+    @property
+    def has_qparity(self) -> bool:
+        return self in (Mode.MLP2, Mode.MLPC2)
 
     @property
     def has_log(self) -> bool:
-        return self in (Mode.ML, Mode.MLP, Mode.MLPC)
+        return self in (Mode.ML, Mode.MLP, Mode.MLPC, Mode.MLP2,
+                        Mode.MLPC2)
 
     @property
     def has_replica(self) -> bool:
         return self is Mode.REPLICA
+
+    @property
+    def redundancy(self) -> int:
+        """Simultaneous rank losses a zone survives online."""
+        return 2 if self.has_qparity else (1 if self.has_parity else 0)
+
+
+def resolve_mode(mode, redundancy: int = 1) -> Mode:
+    """Map (base mode, ProtectConfig.redundancy) onto the Mode ladder.
+
+    redundancy=1 returns the base mode unchanged; redundancy=2 promotes a
+    parity mode to its dual-parity level (mlp -> mlp2, mlpc -> mlpc2).
+    """
+    m = mode if isinstance(mode, Mode) else Mode(mode)
+    r = int(redundancy)
+    if r == 1:
+        return m
+    if r == 2:
+        if m is Mode.MLP:
+            return Mode.MLP2
+        if m is Mode.MLPC:
+            return Mode.MLPC2
+        if m.has_qparity:
+            return m
+        raise ValueError(
+            f"redundancy=2 needs a parity mode (mlp or mlpc), got "
+            f"'{m.value}' — the Q syndrome extends parity, it cannot "
+            "replace it")
+    raise ValueError(f"redundancy must be 1 or 2, got {redundancy}")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -89,10 +129,15 @@ class ProtectedState:
     # commits diff rows directly instead of re-flattening the whole state
     # every step.  Rebuilt (never trusted) by recovery and repair.
     row: Optional[jax.Array] = None
+    # Q syndrome segment, (*mesh_dims, seg_words) u32 — dual-parity modes
+    # only (Mode.has_qparity).  Q = XOR_i g^i·row_i over GF(2^32); with P
+    # it solves any two simultaneous rank losses (core/gf.py).
+    qparity: Optional[jax.Array] = None
 
     def tree_flatten(self):
         return ((self.state, self.parity, self.cksums, self.digest,
-                 self.replica, self.log, self.step, self.row), None)
+                 self.replica, self.log, self.step, self.row,
+                 self.qparity), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -155,6 +200,7 @@ class Protector:
             return jax.ShapeDtypeStruct(shape, dtype)
 
         parity = sds(zdims + (lo.seg_words,)) if mode.has_parity else None
+        qparity = sds(zdims + (lo.seg_words,)) if mode.has_qparity else None
         cksums = sds(zdims + (lo.n_blocks, 2)) if mode.has_cksums else None
         dig = (sds(zdims + (2,))
                if (mode.has_parity or mode.has_cksums) else None)
@@ -167,7 +213,8 @@ class Protector:
                if mode.has_log else None)
         return ProtectedState(state=abstract_state, parity=parity,
                               cksums=cksums, digest=dig, replica=replica,
-                              log=log, step=sds((), U32), row=row)
+                              log=log, step=sds((), U32), row=row,
+                              qparity=qparity)
 
     def protected_specs(self) -> ProtectedState:
         """PartitionSpec tree matching ProtectedState."""
@@ -184,7 +231,8 @@ class Protector:
             digest=z if (mode.has_parity or mode.has_cksums) else None,
             replica=self.state_specs if mode.has_replica else None,
             log=log, step=P(),
-            row=z if (mode.has_parity or mode.has_cksums) else None)
+            row=z if (mode.has_parity or mode.has_cksums) else None,
+            qparity=z if mode.has_qparity else None)
 
     def _pack(self, x: jax.Array) -> jax.Array:
         """Local per-rank value -> shard_map output layout (leading 1s)."""
@@ -208,6 +256,9 @@ class Protector:
             outs = {}
             if mode.has_parity:
                 outs["parity"] = self._pack(parity_mod.build_parity(row, ax))
+            if mode.has_qparity:
+                outs["qparity"] = self._pack(
+                    parity_mod.build_qparity(row, ax))
             if mode.has_cksums:
                 cks = ck.block_checksums(row, lo.block_words)
                 outs["cksums"] = self._pack(cks)
@@ -221,6 +272,8 @@ class Protector:
         out_specs = {}
         if mode.has_parity:
             out_specs["parity"] = self._zone_spec
+        if mode.has_qparity:
+            out_specs["qparity"] = self._zone_spec
         if mode.has_cksums:
             out_specs["cksums"] = self._zone_spec
         if mode.has_parity or mode.has_cksums:
@@ -236,7 +289,8 @@ class Protector:
         return ProtectedState(
             state=state, parity=outs.get("parity"), cksums=outs.get("cksums"),
             digest=outs.get("digest"), replica=replica, log=log,
-            step=jnp.zeros((), U32), row=outs.get("row"))
+            step=jnp.zeros((), U32), row=outs.get("row"),
+            qparity=outs.get("qparity"))
 
     # -- commit ------------------------------------------------------------------
 
@@ -282,11 +336,16 @@ class Protector:
         dirty_idx = (np.asarray(list(dirty_pages), np.int32)
                      if patch else None)
 
-        def _protect(state_old, row_cache, parity, cksums, digest,
+        def _protect(state_old, row_cache, parity, qparity, cksums, digest,
                      state_new, canary_ok):
             parity_l = self._unpack(parity) if parity is not None else None
+            qparity_l = (self._unpack(qparity)
+                         if qparity is not None else None)
             cksums_l = self._unpack(cksums) if cksums is not None else None
             digest_l = self._unpack(digest)
+            # this rank's Q Vandermonde coefficient g^me (dual parity)
+            coeff = (gf.rank_coeff(self.group_size, ax)
+                     if mode.has_qparity else None)
             row_old = (layout_mod.flatten_row(lo, state_old) if verify_old
                        else self._unpack(row_cache))
             if meta_only or patch:
@@ -296,30 +355,49 @@ class Protector:
                 row_new = layout_mod.flatten_row(lo, state_new)
             ok = canary_ok
             new_parity, new_cksums, new_digest = parity_l, cksums_l, digest_l
+            new_qparity = qparity_l
             if meta_only:
                 pass          # the paper's "free" metadata-only transaction
             elif patch:
                 idx = jnp.asarray(dirty_idx)
                 old_pages = parity_mod.gather_pages(row_old, idx, bw)
                 new_pages = parity_mod.gather_pages(row_new, idx, bw)
+                qdelta_p = None
                 if mode.has_cksums:
                     if verify_old:
-                        delta_p, fresh, bad = kops.fused_verify_commit(
-                            old_pages, new_pages, cksums_l[idx])
+                        if mode.has_qparity:
+                            delta_p, qdelta_p, fresh, bad = \
+                                kops.fused_verify_commit_pq(
+                                    old_pages, new_pages, cksums_l[idx],
+                                    coeff)
+                        else:
+                            delta_p, fresh, bad = kops.fused_verify_commit(
+                                old_pages, new_pages, cksums_l[idx])
                         ok = _zone_clean(ok, bad, ax)
+                    elif mode.has_qparity:
+                        delta_p, qdelta_p, fresh = kops.fused_commit_pq(
+                            old_pages, new_pages, coeff)
                     else:
                         delta_p, fresh = kops.fused_commit(old_pages,
                                                            new_pages)
                     new_cksums = ck.set_blocks(cksums_l, fresh, idx)
                     new_digest = ck.combine(new_cksums, bw)
                 else:
-                    delta_p, fresh, old_ck = kops.fused_commit_old_terms(
-                        old_pages, new_pages)
+                    if mode.has_qparity:
+                        delta_p, qdelta_p, fresh, old_ck = \
+                            kops.fused_commit_old_terms_pq(
+                                old_pages, new_pages, coeff)
+                    else:
+                        delta_p, fresh, old_ck = kops.fused_commit_old_terms(
+                            old_pages, new_pages)
                     new_digest = ck.update_digest(digest_l, old_ck, fresh,
                                                   idx, lo.n_blocks, bw)
                 if mode.has_parity:
                     new_parity = parity_mod.patch_parity_delta(
                         parity_l, delta_p, idx, lo, ax)
+                if mode.has_qparity:
+                    new_qparity = parity_mod.patch_qparity_delta(
+                        qparity_l, qdelta_p, idx, lo, ax)
             else:
                 pages_new = parity_mod.page_view(row_new, bw)
                 if verify_old and mode.has_cksums:
@@ -327,8 +405,15 @@ class Protector:
                     # shares that read with the parity delta, and parity
                     # consumes the delta (parity ^ rs(delta) == rs(new))
                     pages_old = parity_mod.page_view(row_old, bw)
-                    delta, fresh, bad = kops.fused_verify_commit(
-                        pages_old, pages_new, cksums_l)
+                    if mode.has_qparity:
+                        delta, qdelta, fresh, bad = \
+                            kops.fused_verify_commit_pq(
+                                pages_old, pages_new, cksums_l, coeff)
+                        new_qparity = parity_mod.apply_qdelta(
+                            qparity_l, qdelta.reshape(-1), ax)
+                    else:
+                        delta, fresh, bad = kops.fused_verify_commit(
+                            pages_old, pages_new, cksums_l)
                     ok = _zone_clean(ok, bad, ax)
                     if mode.has_parity:
                         new_parity = parity_mod.apply_delta(
@@ -340,6 +425,8 @@ class Protector:
                     fresh = kops.fletcher_blocks(pages_new)
                     if mode.has_parity:
                         new_parity = parity_mod.build_parity(row_new, ax)
+                    if mode.has_qparity:
+                        new_qparity = parity_mod.build_qparity(row_new, ax)
                 if mode.has_cksums:
                     new_cksums = fresh
                 new_digest = ck.combine(fresh, bw)
@@ -350,6 +437,9 @@ class Protector:
             if mode.has_parity:
                 outs["parity"] = self._pack(
                     jnp.where(ok, new_parity, parity_l))
+            if mode.has_qparity:
+                outs["qparity"] = self._pack(
+                    jnp.where(ok, new_qparity, qparity_l))
             if mode.has_cksums:
                 outs["cksums"] = self._pack(
                     jnp.where(ok, new_cksums, cksums_l))
@@ -359,13 +449,15 @@ class Protector:
                      "digest": self._zone_spec}
         if mode.has_parity:
             out_specs["parity"] = self._zone_spec
+        if mode.has_qparity:
+            out_specs["qparity"] = self._zone_spec
         if mode.has_cksums:
             out_specs["cksums"] = self._zone_spec
         protect = self._smap(
             _protect,
             in_specs=(self.state_specs, self._zone_spec, self._zone_spec,
-                      self._zone_spec, self._zone_spec, self.state_specs,
-                      P()),
+                      self._zone_spec, self._zone_spec, self._zone_spec,
+                      self.state_specs, P()),
             out_specs=out_specs)
 
         def commit(prot: ProtectedState, state_new: PyTree, *,
@@ -375,13 +467,15 @@ class Protector:
             log = prot.log
             digest_for_log = jnp.zeros((2,), U32)
             new_row = prot.row
+            new_qparity = prot.qparity
             if mode.has_parity or mode.has_cksums:
                 outs = protect(prot.state, prot.row, prot.parity,
-                               prot.cksums, prot.digest, state_new,
-                               canary_ok)
+                               prot.qparity, prot.cksums, prot.digest,
+                               state_new, canary_ok)
                 ok = outs["ok"]
                 new_row = outs["row"]
                 new_parity = outs.get("parity", prot.parity)
+                new_qparity = outs.get("qparity", prot.qparity)
                 new_cksums = outs.get("cksums", prot.cksums)
                 new_digest = outs["digest"]
                 digest_for_log = new_digest.reshape(-1, 2)[0]
@@ -406,7 +500,8 @@ class Protector:
             return ProtectedState(
                 state=new_state, parity=new_parity, cksums=new_cksums,
                 digest=new_digest, replica=replica, log=log,
-                step=jnp.where(ok, step, prot.step), row=new_row), ok
+                step=jnp.where(ok, step, prot.step), row=new_row,
+                qparity=new_qparity), ok
 
         return commit
 
@@ -452,7 +547,7 @@ class Protector:
         lo, ax = self.layout, self.data_axis
         mode = self.mode
 
-        def _scrub(state, row_cache, parity, cksums):
+        def _scrub(state, row_cache, parity, qparity, cksums):
             row = layout_mod.flatten_row(lo, state)
             out = {}
             if mode.has_cksums:
@@ -462,6 +557,9 @@ class Protector:
             if mode.has_parity:
                 out["parity_ok"] = parity_mod.verify_parity(
                     row, self._unpack(parity), ax)
+            if mode.has_qparity:
+                out["qparity_ok"] = parity_mod.verify_qparity(
+                    row, self._unpack(qparity), ax)
             if mode.has_parity or mode.has_cksums:
                 same = jnp.all(row == self._unpack(row_cache))
                 out["row_cache_ok"] = (
@@ -473,14 +571,18 @@ class Protector:
             out_specs["bad_pages"] = self._zone_spec
         if mode.has_parity:
             out_specs["parity_ok"] = P()
+        if mode.has_qparity:
+            out_specs["qparity_ok"] = P()
         if mode.has_parity or mode.has_cksums:
             out_specs["row_cache_ok"] = P()
         fn = self._smap(_scrub, in_specs=(self.state_specs, self._zone_spec,
-                                          self._zone_spec, self._zone_spec),
+                                          self._zone_spec, self._zone_spec,
+                                          self._zone_spec),
                         out_specs=out_specs)
 
         def scrub(prot: ProtectedState):
-            return fn(prot.state, prot.row, prot.parity, prot.cksums)
+            return fn(prot.state, prot.row, prot.parity, prot.qparity,
+                      prot.cksums)
 
         return scrub
 
@@ -534,6 +636,63 @@ class Protector:
         if "recover" not in self._jit_cache:
             self._jit_cache["recover"] = jax.jit(self.make_recover_rank())
         return self._jit_cache["recover"](prot, lost_rank)
+
+    def make_recover_two(self, lost_a: int, lost_b: int):
+        """Online reconstruction of TWO lost data-ranks' rows from P + Q.
+
+        The pair is static (recovery is rare; one compiled program per
+        pair) so the Vandermonde constants fold in as exact host
+        integers.  Also the rank-loss-with-outstanding-scribble path:
+        name the scribbled rank as the second loss.
+        """
+        lo, ax = self.layout, self.data_axis
+        mode = self.mode
+        assert mode.has_qparity, (
+            f"mode {mode.value} has no Q syndrome; double loss is "
+            "unrecoverable online (redundancy=2 adds it)")
+
+        def _recover(state, parity, qparity, cksums):
+            # flatten the live (damaged) state — the row cache is rebuilt,
+            # never trusted, across recovery
+            row = layout_mod.flatten_row(lo, state)
+            row_a, row_b = parity_mod.reconstruct_two(
+                row, self._unpack(parity), self._unpack(qparity),
+                lost_a, lost_b, ax)
+            me = lax.axis_index(ax)
+            row_out = jnp.where(me == lost_a, row_a,
+                                jnp.where(me == lost_b, row_b, row))
+            out = {"state": layout_mod.unflatten_row(lo, row_out),
+                   "row": self._pack(row_out)}
+            if mode.has_cksums:
+                bad = ck.verify_blocks(row_out, self._unpack(cksums),
+                                       lo.block_words)
+                any_bad = lax.pmax(jnp.any(bad).astype(jnp.int32), ax)
+                out["ok"] = any_bad == 0
+            else:
+                out["ok"] = jnp.asarray(True)
+            return out
+
+        out_specs = {"state": self.state_specs, "ok": P(),
+                     "row": self._zone_spec}
+        fn = self._smap(_recover,
+                        in_specs=(self.state_specs, self._zone_spec,
+                                  self._zone_spec, self._zone_spec),
+                        out_specs=out_specs)
+
+        def recover(prot: ProtectedState):
+            out = fn(prot.state, prot.parity, prot.qparity, prot.cksums)
+            return dataclasses.replace(prot, state=out["state"],
+                                       row=out["row"]), out["ok"]
+
+        return recover
+
+    def recover_two(self, prot, lost_a, lost_b):
+        a, b = sorted((int(lost_a), int(lost_b)))
+        assert a != b, "double-loss recovery needs two distinct ranks"
+        key = ("recover2", a, b)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(self.make_recover_two(a, b))
+        return self._jit_cache[key](prot)
 
     def make_repair_pages(self, n_pages: int):
         """Targeted scribble repair: fix `n_pages` (rank, page) locations."""
@@ -599,12 +758,21 @@ class Protector:
         rep = self.layout.overhead_report()
         rep["mode"] = self.mode.value
         rep["group_size"] = self.group_size
+        rep["redundancy"] = self.mode.redundancy
+        # Q is one more seg_words row per rank — same bytes as P, so the
+        # dual-parity storage tax is exactly 2x the parity fraction
+        rep["qparity_bytes_per_rank"] = (rep["parity_bytes_per_rank"]
+                                         if self.mode.has_qparity else 0)
+        rep["qparity_fraction"] = (rep["parity_fraction"]
+                                   if self.mode.has_qparity else 0.0)
         if self.mode.has_replica:
             rep["protection_fraction"] = 1.0
         else:
             frac = 0.0
             if self.mode.has_parity:
                 frac += rep["parity_fraction"]
+            if self.mode.has_qparity:
+                frac += rep["qparity_fraction"]
             if self.mode.has_cksums:
                 frac += rep["checksum_fraction"]
             rep["protection_fraction"] = frac

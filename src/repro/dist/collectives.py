@@ -64,6 +64,21 @@ def xor_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     return full[:n].reshape(shape)
 
 
+def gf_reduce_scatter(row: jax.Array, axis_name: str) -> jax.Array:
+    """GF(2^32)-weighted XOR reduce-scatter: rank i contributes g^i · row_i.
+
+    The Q-syndrome collective of the dual-parity scheme (core/gf.py):
+    each rank scales its row by its Vandermonde coefficient g^i — a local
+    branch-free clmul, no extra communication — and the combine is the
+    same XOR reduce-scatter P uses, because GF(2^32) addition IS XOR.
+    Rank i keeps segment i of Q = XOR_j g^j · row_j.
+    """
+    from repro.core import gf          # lazy: core.parity imports this module
+    g = lax.psum(1, axis_name)
+    coeff = gf.rank_coeff(g, axis_name)
+    return xor_reduce_scatter(gf.mul_const(row, coeff), axis_name)
+
+
 def xor_tree_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     """Recursive-doubling XOR all-reduce (power-of-two zones).
 

@@ -51,3 +51,18 @@ def rescale(protector, prot, make_protector: Callable, new_mesh):
     step = int(jax.device_get(prot.step))
     return p_new, dataclasses.replace(
         prot_new, step=jnp.asarray(step, jnp.uint32))
+
+
+def rescale_windowed(engine, est, make_protector: Callable, new_mesh):
+    """`rescale` for a deferred-epoch engine: flush-before-rescale.
+
+    A pending window means parity/checksums (and Q) describe the
+    epoch-start state; resharding mid-window would rebuild redundancy
+    from a state the old geometry's log still had in flight.  The flush
+    lands the window first, then the move rebuilds P — and, in
+    redundancy=2 modes, Q with the *new* zone's Vandermonde coefficients
+    (the g^i weights depend on the data-axis size G, so Q can never move
+    with the state either).  Returns (protector', prot').
+    """
+    est = engine.flush_if_pending(est)
+    return rescale(engine.p, est.prot, make_protector, new_mesh)

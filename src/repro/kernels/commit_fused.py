@@ -29,16 +29,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import largest_divisor_tile
+
 U32 = jnp.uint32
 TILE_BLOCKS = 8
 
 
 def _pick_tb(n: int) -> int:
     """Largest tile height <= TILE_BLOCKS that divides the block count."""
-    t = min(TILE_BLOCKS, n)
-    while n % t:
-        t -= 1
-    return t
+    return largest_divisor_tile(n, TILE_BLOCKS)
 
 
 def _fused_kernel(old_ref, new_ref, delta_ref, ck_ref):

@@ -1,0 +1,189 @@
+"""Pallas TPU kernels: GF(2^32)-weighted parity sweeps (dual-parity Q).
+
+The Q syndrome is Q = XOR_i g^i·row_i with multiplication in GF(2^32)
+(core/gf.py), so a commit that already sweeps (old, new) for the XOR delta
+can emit the Q delta from the same VMEM tiles: qdelta = g^me · (old ^ new),
+a 32-step branch-free clmul per word — pure VPU bit-ops, no extra HBM
+traffic.  The kernels here fuse that weighting with the existing
+verify+checksum sweep (kernels/commit_fused.py):
+
+  * `gf_scale`                 — standalone element-wise y = coeff · x
+    (epoch-flush Q patches for parity-only modes).
+  * `fused_commit_pq`          — one sweep over (old, new) emitting
+    (delta, qdelta, new Fletcher terms).
+  * `fused_verify_commit_pq`   — additionally folds verify-at-open over
+    the old tile (terms XOR stored, all-zero == clean).
+  * `fused_commit_old_terms_pq`— the stored=0 specialization whose
+    mismatch output is the raw old terms (MLP2's incremental digest).
+
+HBM traffic per page is unchanged from the single-parity fused sweep
+(r old + r new + w delta) plus the unavoidable w qdelta — the GF weighting
+itself is free, which is what makes redundancy=2 cost one extra write
+stream rather than a second pass.
+
+The per-rank coefficient g^me is a *traced* scalar (axis_index lookup), fed
+to the kernel as a (1, 1) u32 operand so one compiled program serves every
+rank of the zone.  `kernels/ref.py` carries the jnp oracles these must
+match bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import largest_divisor_tile as _pick_tile
+
+U32 = jnp.uint32
+TILE_BLOCKS = 8
+TILE_ROWS = 512          # gf_scale tile height (matches xor_parity.py)
+
+
+def _gf_mul_tile(x, coeff):
+    """Branch-free 32-step clmul of a tile by a scalar coefficient."""
+    poly = U32(0x400007)                      # gf.POLY, inlined for Mosaic
+    acc = jnp.zeros_like(x)
+    cur = x
+    for i in range(32):
+        bit = (coeff >> U32(i)) & U32(1)
+        acc = acc ^ (bit * cur)
+        cur = (cur << U32(1)) ^ ((cur >> U32(31)) * poly)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# standalone scale
+# ---------------------------------------------------------------------------
+
+def _gf_scale_kernel(coeff_ref, x_ref, o_ref):
+    o_ref[...] = _gf_mul_tile(x_ref[...], coeff_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gf_scale(x: jax.Array, coeff: jax.Array, *, interpret: bool = False
+             ) -> jax.Array:
+    """Element-wise y = coeff · x in GF(2^32); coeff a (traced) u32 scalar."""
+    assert x.dtype == U32, x.dtype
+    shape = x.shape
+    if x.ndim == 1:
+        x = x.reshape(-1, 1024) if x.size % 1024 == 0 else x.reshape(1, -1)
+    n, m = x.shape
+    t = _pick_tile(n, TILE_ROWS)
+    coeff = jnp.asarray(coeff, U32).reshape(1, 1)
+    out = pl.pallas_call(
+        _gf_scale_kernel,
+        grid=(n // t,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((t, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((t, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), U32),
+        interpret=interpret,
+    )(coeff, x)
+    return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# fused P+Q commit sweeps
+# ---------------------------------------------------------------------------
+
+def _pq_kernel(coeff_ref, old_ref, new_ref, delta_ref, qdelta_ref, ck_ref):
+    old = old_ref[...]
+    new = new_ref[...]
+    d = old ^ new
+    delta_ref[...] = d
+    # the delta tile is already in VMEM: its GF weighting is free
+    qdelta_ref[...] = _gf_mul_tile(d, coeff_ref[0, 0])
+    bw = new.shape[-1]
+    w = U32(bw) - jax.lax.broadcasted_iota(U32, (1, bw), 1)
+    a = jnp.sum(new, axis=-1, dtype=U32)
+    b = jnp.sum(new * w, axis=-1, dtype=U32)
+    ck_ref[...] = jnp.stack([a, b], axis=-1)
+
+
+def _pq_verify_kernel(coeff_ref, old_ref, new_ref, stored_ref, delta_ref,
+                      qdelta_ref, ck_ref, mism_ref):
+    old = old_ref[...]
+    new = new_ref[...]
+    d = old ^ new
+    delta_ref[...] = d
+    qdelta_ref[...] = _gf_mul_tile(d, coeff_ref[0, 0])
+    bw = new.shape[-1]
+    w = U32(bw) - jax.lax.broadcasted_iota(U32, (1, bw), 1)
+    a_old = jnp.sum(old, axis=-1, dtype=U32)
+    b_old = jnp.sum(old * w, axis=-1, dtype=U32)
+    mism_ref[...] = jnp.stack([a_old, b_old], axis=-1) ^ stored_ref[...]
+    a = jnp.sum(new, axis=-1, dtype=U32)
+    b = jnp.sum(new * w, axis=-1, dtype=U32)
+    ck_ref[...] = jnp.stack([a, b], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_commit_pq(old: jax.Array, new: jax.Array, coeff: jax.Array, *,
+                    interpret: bool = False):
+    """One sweep over (old, new): (delta, coeff·delta, new Fletcher terms)."""
+    assert old.shape == new.shape and old.dtype == U32 == new.dtype
+    n, bw = old.shape
+    tb = _pick_tile(n, TILE_BLOCKS)
+    coeff = jnp.asarray(coeff, U32).reshape(1, 1)
+    return pl.pallas_call(
+        _pq_kernel,
+        grid=(n // tb,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                  pl.BlockSpec((tb, bw), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                   pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                   pl.BlockSpec((tb, 2), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, bw), U32),
+                   jax.ShapeDtypeStruct((n, bw), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32)],
+        interpret=interpret,
+    )(coeff, old, new)
+
+
+def _pq_verify_call(old, new, stored, coeff, interpret):
+    assert old.shape == new.shape and old.dtype == U32 == new.dtype
+    n, bw = old.shape
+    assert stored.shape == (n, 2) and stored.dtype == U32, stored.shape
+    tb = _pick_tile(n, TILE_BLOCKS)
+    coeff = jnp.asarray(coeff, U32).reshape(1, 1)
+    return pl.pallas_call(
+        _pq_verify_kernel,
+        grid=(n // tb,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                  pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                  pl.BlockSpec((tb, 2), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                   pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                   pl.BlockSpec((tb, 2), lambda i: (i, 0)),
+                   pl.BlockSpec((tb, 2), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, bw), U32),
+                   jax.ShapeDtypeStruct((n, bw), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32)],
+        interpret=interpret,
+    )(coeff, old, new, stored)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_verify_commit_pq(old: jax.Array, new: jax.Array, stored: jax.Array,
+                           coeff: jax.Array, *, interpret: bool = False):
+    """Verify + delta + qdelta + new checksums from one sweep.
+
+    Returns (delta, qdelta, new_cksums, bad) with bad True where the old
+    block's recomputed Fletcher terms no longer match `stored`.
+    """
+    delta, qdelta, ck, mism = _pq_verify_call(old, new, stored, coeff,
+                                              interpret)
+    return delta, qdelta, ck, jnp.any(mism != 0, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_commit_old_terms_pq(old: jax.Array, new: jax.Array,
+                              coeff: jax.Array, *, interpret: bool = False):
+    """(delta, qdelta, new cksums, old cksums) — the MLP2 patch sweep."""
+    zeros = jnp.zeros((old.shape[0], 2), U32)
+    return _pq_verify_call(old, new, zeros, coeff, interpret)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import commit_fused as _fused
 from repro.kernels import fletcher as _fletcher
+from repro.kernels import gf_parity as _gf
 from repro.kernels import ref as _ref
 from repro.kernels import xor_parity as _xor
 
@@ -82,3 +83,35 @@ def fused_accum_commit(acc: jax.Array, old: jax.Array, new: jax.Array, *,
     if p is None:
         return _ref.fused_accum_commit_ref(acc, old, new)
     return _fused.fused_accum_commit(acc, old, new, interpret=p)
+
+
+def gf_scale(x: jax.Array, coeff, *,
+             interpret: Optional[bool] = None) -> jax.Array:
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.gf_scale_ref(x, coeff)
+    return _gf.gf_scale(x, coeff, interpret=p)
+
+
+def fused_commit_pq(old: jax.Array, new: jax.Array, coeff, *,
+                    interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_commit_pq_ref(old, new, coeff)
+    return _gf.fused_commit_pq(old, new, coeff, interpret=p)
+
+
+def fused_verify_commit_pq(old: jax.Array, new: jax.Array, stored: jax.Array,
+                           coeff, *, interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_verify_commit_pq_ref(old, new, stored, coeff)
+    return _gf.fused_verify_commit_pq(old, new, stored, coeff, interpret=p)
+
+
+def fused_commit_old_terms_pq(old: jax.Array, new: jax.Array, coeff, *,
+                              interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_commit_old_terms_pq_ref(old, new, coeff)
+    return _gf.fused_commit_old_terms_pq(old, new, coeff, interpret=p)

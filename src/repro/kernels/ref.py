@@ -64,6 +64,39 @@ def fused_commit_old_terms_ref(old: jax.Array, new: jax.Array):
             fletcher_blocks_ref(old))
 
 
+def gf_scale_ref(x: jax.Array, coeff) -> jax.Array:
+    """Element-wise GF(2^32) multiply by a scalar coefficient (dual parity)."""
+    from repro.core import gf
+    return gf.mul_const(x, coeff)
+
+
+def fused_commit_pq_ref(old: jax.Array, new: jax.Array, coeff):
+    """Dual-parity commit sweep: (delta, coeff·delta, new cksums).
+
+    The Q syndrome delta is the GF(2^32)-weighted XOR delta — weighted by
+    the committing rank's g^i so the zone collective can combine it with
+    plain XOR (core/gf.py).
+    """
+    d = xor_delta_ref(old, new)
+    return d, gf_scale_ref(d, coeff), fletcher_blocks_ref(new)
+
+
+def fused_verify_commit_pq_ref(old: jax.Array, new: jax.Array,
+                               stored: jax.Array, coeff):
+    """Verify + delta + qdelta + new checksums, one logical sweep."""
+    assert stored.shape == (old.shape[0], 2) and stored.dtype == U32
+    bad = jnp.any(fletcher_blocks_ref(old) != stored, axis=-1)
+    d = xor_delta_ref(old, new)
+    return d, gf_scale_ref(d, coeff), fletcher_blocks_ref(new), bad
+
+
+def fused_commit_old_terms_pq_ref(old: jax.Array, new: jax.Array, coeff):
+    """(delta, qdelta, new cksums, old cksums) — MLP2's patch sweep."""
+    d = xor_delta_ref(old, new)
+    return (d, gf_scale_ref(d, coeff), fletcher_blocks_ref(new),
+            fletcher_blocks_ref(old))
+
+
 def fused_accum_commit_ref(acc: jax.Array, old: jax.Array, new: jax.Array):
     """Delta-accumulate sweep of the deferred-epoch engine.
 

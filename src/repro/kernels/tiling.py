@@ -1,0 +1,15 @@
+"""Shared tiling policy for the protection kernels.
+
+Every kernel in this package tiles a (n, m) u32 buffer along the leading
+axis; the grid must divide n exactly, so the tile height is the largest
+divisor of n no bigger than the kernel's VMEM-budget cap.
+"""
+from __future__ import annotations
+
+
+def largest_divisor_tile(n: int, cap: int) -> int:
+    """Largest tile height <= cap that divides n exactly."""
+    t = min(cap, n)
+    while n % t:
+        t -= 1
+    return t

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import largest_divisor_tile
+
 U32 = jnp.uint32
 # (rows, lanes) tile: 512 x 1024 x 4 B = 2 MB per operand; 3 operands = 6 MB
 # of VMEM traffic per step, comfortably under the ~16 MB v5e VMEM budget.
@@ -25,10 +27,7 @@ def _xor2_kernel(a_ref, b_ref, o_ref):
 
 
 def _pick_tile(n: int) -> int:
-    t = min(TILE_ROWS, n)
-    while n % t:
-        t -= 1
-    return t
+    return largest_divisor_tile(n, TILE_ROWS)
 
 
 def _xor2(a: jax.Array, b: jax.Array, interpret: bool) -> jax.Array:

@@ -19,6 +19,9 @@ def main(argv=None):
     ap.add_argument("--data", type=int, default=4)
     ap.add_argument("--model", type=int, default=2)
     ap.add_argument("--protect", default="mlpc")
+    ap.add_argument("--redundancy", type=int, default=1, choices=[1, 2],
+                    help="rank losses survived per zone: 1 = XOR parity, "
+                         "2 = + GF(2^32) Q syndrome")
     ap.add_argument("--scrub-period", type=int, default=16)
     ap.add_argument("--host-devices", type=int, default=8)
     args = ap.parse_args(argv)
@@ -42,7 +45,8 @@ def main(argv=None):
     model = build_model(cfg, mesh)
     params = model.init(jax.random.PRNGKey(0))
     srv = Server(cfg, ProtectConfig(mode=args.protect, block_words=256,
-                                    scrub_period=args.scrub_period),
+                                    scrub_period=args.scrub_period,
+                                    redundancy=args.redundancy),
                  mesh, batch=args.batch,
                  max_len=args.prompt_len + args.new_tokens + 1)
     srv.start(params)

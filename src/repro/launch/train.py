@@ -24,6 +24,9 @@ def main(argv=None):
     ap.add_argument("--model", type=int, default=2, help="model-axis size")
     ap.add_argument("--protect", default="mlpc",
                     choices=["none", "ml", "mlp", "mlpc", "replica"])
+    ap.add_argument("--redundancy", type=int, default=1, choices=[1, 2],
+                    help="rank losses survived per zone: 1 = XOR parity, "
+                         "2 = + GF(2^32) Q syndrome")
     ap.add_argument("--scrub-period", type=int, default=50)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--optimizer", default="adamw",
@@ -55,7 +58,8 @@ def main(argv=None):
         TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                     microbatches=args.microbatches,
                     optimizer=args.optimizer),
-        ProtectConfig(mode=args.protect, scrub_period=args.scrub_period),
+        ProtectConfig(mode=args.protect, scrub_period=args.scrub_period,
+                      redundancy=args.redundancy),
         mesh, seq_len=args.seq_len, global_batch=args.global_batch,
         checkpoint_dir=args.ckpt_dir, seed=args.seed)
     trainer.initialize()

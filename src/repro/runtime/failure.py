@@ -34,9 +34,11 @@ from repro.core.txn import ProtectedState, Protector
 
 @dataclasses.dataclass
 class FailureEvent:
-    kind: str                  # "rank_loss" | "scribble" | "canary"
+    kind: str                  # "rank_loss" | "double_loss" | "scribble"
+                               # | "canary"
     lost_rank: Optional[int] = None
     locations: Optional[list] = None   # [(rank, page)] for scribbles
+    lost_ranks: Optional[list] = None  # both ranks for double_loss
 
 
 def inject_rank_loss(protector: Protector, prot: ProtectedState,
@@ -58,6 +60,34 @@ def inject_rank_loss(protector: Protector, prot: ProtectedState,
     bad_state = fn(prot.state)
     return (dataclasses.replace(prot, state=bad_state),
             FailureEvent("rank_loss", lost_rank=rank))
+
+
+def inject_double_rank_loss(protector: Protector, prot: ProtectedState,
+                            ranks) -> tuple:
+    """Garble TWO data-ranks' shards at once (overlapping failures).
+
+    The pod-scale scenario single-parity zones cannot survive: both rows
+    gone before either could be rebuilt.  Returns (prot, event) with a
+    "double_loss" event carrying both ranks.
+    """
+    a, b = (int(r) for r in ranks)
+    assert a != b, "double loss needs two distinct ranks"
+    lo, ax = protector.layout, protector.data_axis
+
+    def _garble(state):
+        row = layout_mod.flatten_row(lo, state)
+        me = lax.axis_index(ax)
+        garbage = row ^ jnp.uint32(0xA5A5A5A5)
+        out = jnp.where((me == a) | (me == b), garbage, row)
+        return layout_mod.unflatten_row(lo, out)
+
+    fn = jax.jit(shard_map(_garble, mesh=protector.mesh,
+                           in_specs=(protector.state_specs,),
+                           out_specs=protector.state_specs,
+                           check_vma=False))
+    bad_state = fn(prot.state)
+    return (dataclasses.replace(prot, state=bad_state),
+            FailureEvent("double_loss", lost_ranks=sorted((a, b))))
 
 
 def inject_scribble(protector: Protector, prot: ProtectedState,

@@ -39,7 +39,7 @@ from repro.configs.base import ModelConfig, ProtectConfig
 from repro.core import layout as layout_mod
 from repro.core.epoch import DeferredProtector, EngineHost
 from repro.core.scrub import Scrubber
-from repro.core.txn import Mode, Protector
+from repro.core.txn import Mode, Protector, resolve_mode
 from repro.models import api
 from repro.models.transformer import build_model
 
@@ -69,7 +69,9 @@ class Server(EngineHost):
                 lambda: self.model._cache_defs(batch, max_len))
             cache_specs = self.model.cache_specs(batch, max_len, mesh)
             self.protector = Protector(
-                mesh, cache_abs, cache_specs, mode=Mode(protect_cfg.mode),
+                mesh, cache_abs, cache_specs,
+                mode=resolve_mode(protect_cfg.mode,
+                                  protect_cfg.redundancy),
                 block_words=protect_cfg.block_words,
                 hybrid_threshold=protect_cfg.hybrid_threshold)
             lo = self.protector.layout
@@ -83,8 +85,10 @@ class Server(EngineHost):
                     self.protector, window=self.window,
                     dirty_capacity=self._dirty_cap,
                     dirty_leaf_idx=range(len(lo.slots)))
+            # scrub pressure feeds the adaptive window (engine=None inert)
             self.scrubber = Scrubber(self.protector,
-                                     period=protect_cfg.scrub_period)
+                                     period=protect_cfg.scrub_period,
+                                     engine=self._engine)
 
     # protected-state plumbing (prot property / flush) comes from
     # core.epoch.EngineHost

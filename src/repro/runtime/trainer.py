@@ -48,7 +48,7 @@ from repro.core import recovery as recovery_mod
 from repro.core import redolog
 from repro.core.epoch import DeferredProtector, EngineHost
 from repro.core.scrub import Scrubber
-from repro.core.txn import Mode, ProtectedState, Protector
+from repro.core.txn import Mode, ProtectedState, Protector, resolve_mode
 from repro.data.synthetic import batch_for
 from repro.models import api
 from repro.models.transformer import build_model
@@ -78,23 +78,28 @@ class Trainer(EngineHost):
         state_specs = api.train_state_specs(self.model, self.optimizer, mesh)
         self.protector = Protector(
             mesh, abstract_state, state_specs,
-            mode=Mode(protect_cfg.mode),
+            mode=resolve_mode(protect_cfg.mode, protect_cfg.redundancy),
             block_words=protect_cfg.block_words,
             hybrid_threshold=protect_cfg.hybrid_threshold,
             log_capacity=protect_cfg.log_capacity)
-        self.scrubber = Scrubber(self.protector,
-                                 period=protect_cfg.scrub_period)
         mode = self.protector.mode
         self._engine: Optional[DeferredProtector] = None
         self._est = None
         self._prot: Optional[ProtectedState] = None
         if self.window > 1 and (mode.has_parity or mode.has_cksums):
-            # bulk engine: train steps dirty the whole row
+            # bulk engine: train steps dirty the whole row; the window's
+            # mask + digest mirror across the pod per commit so survivors
+            # of a mid-window loss bound it without checkpoint + replay
             self._engine = DeferredProtector(self.protector,
-                                             window=self.window)
+                                             window=self.window,
+                                             replicate_meta=True)
         else:
             self._commit = jax.jit(self.protector.make_commit(),
                                    static_argnames=("canary_ok",))
+        # scrub pressure feeds the adaptive window (engine=None is inert)
+        self.scrubber = Scrubber(self.protector,
+                                 period=protect_cfg.scrub_period,
+                                 engine=self._engine)
 
         self._train_step = jax.jit(api.make_train_step(
             self.model, self.optimizer, train_cfg))
@@ -229,10 +234,19 @@ class Trainer(EngineHost):
         window-loss semantics.)
         """
         assert self.prot is not None
+        # survivors' copy of the window metadata, captured BEFORE the
+        # flush mutates the window — this is what a real pod's surviving
+        # hosts would hold when the failing rank drops out mid-window
+        meta = (self._engine.window_meta
+                if self._engine is not None else None)
         self.flush()
         if event.kind == "rank_loss":
             prot, rep = recovery_mod.recover_from_rank_loss(
                 self.protector, self.prot, event.lost_rank,
+                freeze=self.freeze, resume=self.resume)
+        elif event.kind == "double_loss":
+            prot, rep = recovery_mod.recover_from_double_loss(
+                self.protector, self.prot, event.lost_ranks,
                 freeze=self.freeze, resume=self.resume)
         elif event.kind == "scribble":
             prot, rep = recovery_mod.recover_from_scribble(
@@ -241,6 +255,19 @@ class Trainer(EngineHost):
         else:
             raise ValueError(event.kind)
         self.prot = prot
+        if self._engine is not None:
+            # failure suspicion collapses the deferred window toward 1
+            self._engine.report_pressure(True)
+            if meta is not None:
+                # bound the lost window from the replicated mask+digest:
+                # digest_verified means the recovered pool matches what
+                # the survivors recorded — no checkpoint + log replay
+                rep.window_bound = {
+                    "pending": meta["pending"],
+                    "dirty_pages": meta["dirty_pages"],
+                    "digest_verified": self._engine.verify_window_bound(
+                        self._est),
+                }
         return dataclasses.asdict(rep)
 
     # -- checkpoint / crash recovery ------------------------------------------------

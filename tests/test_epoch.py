@@ -36,9 +36,12 @@ def _assert_protection_equal(pa, pb, mode):
     if mode.has_cksums:
         np.testing.assert_array_equal(np.asarray(pa.cksums),
                                       np.asarray(pb.cksums))
+    if mode.has_qparity:
+        np.testing.assert_array_equal(np.asarray(pa.qparity),
+                                      np.asarray(pb.qparity))
 
 
-@pytest.mark.parametrize("mode", [Mode.MLPC, Mode.MLP])
+@pytest.mark.parametrize("mode", [Mode.MLPC, Mode.MLP, Mode.MLPC2])
 def test_bulk_engine_matches_sync_at_boundaries(setup, mode):
     """W full-state commits + one flush must land exactly where W
     synchronous commits land: parity, cksums, digest, row AND the redo
@@ -73,7 +76,7 @@ def test_bulk_engine_matches_sync_at_boundaries(setup, mode):
                                   np.asarray(cur["w1"]))
 
 
-@pytest.mark.parametrize("mode", [Mode.MLPC, Mode.MLP])
+@pytest.mark.parametrize("mode", [Mode.MLPC, Mode.MLP, Mode.MLPC2])
 @pytest.mark.parametrize("words", ["full", "dynamic"])
 def test_patch_engine_matches_sync(setup, mode, words):
     """The decode-style engine commits against a static dirty-leaf set —
@@ -381,6 +384,52 @@ def trainer_cfg():
         name="t_epoch", family="dense", n_layers=2, d_model=32, n_heads=4,
         n_kv=2, d_ff=64, vocab=128, param_dtype="float32",
         compute_dtype="float32")
+
+
+def test_elastic_rescale_windowed_rebuilds_p_and_q(setup, mesh81):
+    """ISSUE satellite: elastic rescale under W>1 must flush-before-
+    rescale, then rebuild P AND Q bit-exactly on the new mesh geometry
+    (G changes 4 -> 8: new segment lengths, new page->owner map, new
+    Vandermonde coefficients for Q)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist import elastic
+    mesh, state, specs, _ = setup
+    state = jax.tree.map(jnp.copy, state)
+    p = make_protector(mesh, state, specs, Mode.MLPC2)
+    eng = DeferredProtector(p, window=3, donate=False)
+    est = eng.init(state)
+    cur = state
+    for i in range(2):          # strictly mid-window: 2 of 3 commits
+        cur = jax.tree.map(lambda x: (x * 1.01 + 0.02).astype(x.dtype), cur)
+        est, ok = eng.commit(est, cur, rng_key=jax.random.PRNGKey(i))
+        assert bool(ok)
+    assert eng.needs_flush
+
+    def make_protector_new(new_mesh):
+        return make_protector(new_mesh, state, specs, Mode.MLPC2)
+
+    p_new, prot_new = elastic.rescale_windowed(eng, est,
+                                               make_protector_new, mesh81)
+    assert not eng.needs_flush, "rescale must have flushed the window"
+    assert p_new.group_size == 8 and p.group_size == 4
+    # the moved state is bit-exact...
+    for k, v in cur.items():
+        np.testing.assert_array_equal(np.asarray(prot_new.state[k]),
+                                      np.asarray(v))
+    # ...P and Q verify on the new geometry, bit-identical to a fresh
+    # rebuild of the same state there
+    rep = p_new.scrub(prot_new)
+    assert bool(rep["parity_ok"]) and bool(rep["qparity_ok"])
+    assert not np.asarray(rep["bad_pages"]).any()
+    fresh = p_new.init(prot_new.state)
+    _assert_protection_equal(fresh, prot_new, Mode.MLPC2)
+    # and the new zone still solves a double loss
+    from repro.runtime import failure
+    snap = np.asarray(prot_new.state["w1"]).copy()
+    bad, ev = failure.inject_double_rank_loss(p_new, prot_new, (2, 5))
+    rec, ok = p_new.recover_two(bad, *ev.lost_ranks)
+    assert bool(ok)
+    np.testing.assert_array_equal(np.asarray(rec.state["w1"]), snap)
 
 
 # -- serving wiring -----------------------------------------------------------

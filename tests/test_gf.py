@@ -1,0 +1,363 @@
+"""Dual-parity erasure subsystem: GF(2^32) arithmetic, the gf_parity
+Pallas kernel family vs its oracles, P+Q commit threading (P path must
+stay bit-identical to single-parity modes), two-rank reconstruction
+(including mid-window at W=16 and rank-loss-with-outstanding-scribble),
+adaptive window feedback, window-metadata replication, and ProtectConfig
+validation."""
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gf
+from repro.core import layout as layout_mod
+from repro.core.epoch import DeferredProtector
+from repro.core.scrub import Scrubber
+from repro.core.txn import Mode, Protector, resolve_mode
+from repro.kernels import gf_parity as gfk
+from repro.kernels import ref
+from repro.runtime import failure
+from tests.conftest import small_state
+
+U32 = jnp.uint32
+
+
+def make_protector(mesh, state, specs, mode, **kw):
+    kw.setdefault("block_words", 64)
+    return Protector(mesh, jax.eval_shape(lambda: state), specs, mode=mode,
+                     **kw)
+
+
+# -- field arithmetic ---------------------------------------------------------
+
+def test_gf_field_properties_host():
+    """GF(2^32) under POLY is a field with primitive g=2: spot-check the
+    group axioms, inverses, and distributivity on random samples."""
+    rng = random.Random(0)
+    for _ in range(50):
+        a, b, c = (rng.getrandbits(32) for _ in range(3))
+        assert gf.mul_int(a, b) == gf.mul_int(b, a)
+        assert gf.mul_int(a, gf.mul_int(b, c)) == \
+            gf.mul_int(gf.mul_int(a, b), c)
+        assert gf.mul_int(a, b ^ c) == gf.mul_int(a, b) ^ gf.mul_int(a, c)
+        assert gf.mul_int(a, 1) == a
+        if a:
+            assert gf.mul_int(a, gf.inv_int(a)) == 1
+    # the per-rank coefficients are distinct and nonzero (primitivity)
+    table = gf.pow_g_table(64)
+    assert len(set(table)) == 64 and 0 not in table
+    with pytest.raises(ZeroDivisionError):
+        gf.inv_int(0)
+
+
+def test_gf_device_matches_host():
+    """jnp mul_const / mul_pow_g lanes agree with exact host integers."""
+    rng = random.Random(1)
+    words = np.asarray([rng.getrandbits(32) for _ in range(256)], np.uint32)
+    x = jnp.asarray(words)
+    for coeff in [1, 2, 3, 0x80000000, 0xDEADBEEF, gf.pow_g_int(7)]:
+        want = np.asarray([gf.mul_int(int(w), coeff) for w in words],
+                          np.uint32)
+        np.testing.assert_array_equal(
+            np.asarray(gf.mul_const(x, coeff)), want)
+    for k in [0, 1, 5, 31, 40]:
+        np.testing.assert_array_equal(
+            np.asarray(gf.mul_pow_g(x, k)),
+            np.asarray(gf.mul_const(x, gf.pow_g_int(k))))
+
+
+def test_gf_solve_two_roundtrip():
+    """The 2x2 Vandermonde solve recovers both lost rows exactly."""
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(0, 1 << 32, 512, dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 1 << 32, 512, dtype=np.uint32))
+    for ra, rb in [(0, 1), (1, 3), (2, 7), (0, 63)]:
+        p = a ^ b
+        q = gf.mul_pow_g(a, ra) ^ gf.mul_pow_g(b, rb)
+        got_a, got_b = gf.solve_two(p, q, ra, rb)
+        np.testing.assert_array_equal(np.asarray(got_a), np.asarray(a))
+        np.testing.assert_array_equal(np.asarray(got_b), np.asarray(b))
+
+
+# -- kernels vs oracles -------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 64), (5, 128), (1, 256)])
+def test_gf_kernels_match_oracles(shape):
+    """The gf_parity Pallas kernels (interpret mode) are bit-identical to
+    the jnp oracles on every output."""
+    rng = np.random.default_rng(3)
+    old = jnp.asarray(rng.integers(0, 1 << 32, shape, dtype=np.uint32))
+    new = jnp.asarray(rng.integers(0, 1 << 32, shape, dtype=np.uint32))
+    stored = jnp.asarray(
+        rng.integers(0, 1 << 32, (shape[0], 2), dtype=np.uint32))
+    coeff = jnp.asarray(0xC0FFEE42, U32)
+
+    np.testing.assert_array_equal(
+        np.asarray(gfk.gf_scale(old, coeff, interpret=True)),
+        np.asarray(ref.gf_scale_ref(old, coeff)))
+
+    got = gfk.fused_commit_pq(old, new, coeff, interpret=True)
+    want = ref.fused_commit_pq_ref(old, new, coeff)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    got = gfk.fused_verify_commit_pq(old, new, stored, coeff,
+                                     interpret=True)
+    want = ref.fused_verify_commit_pq_ref(old, new, stored, coeff)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    got = gfk.fused_commit_old_terms_pq(old, new, coeff, interpret=True)
+    want = ref.fused_commit_old_terms_pq_ref(old, new, coeff)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_gf_scale_1d_and_verify_flags():
+    """1-D dispatch path, and a corrupted old block flips the verify bit."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.integers(0, 1 << 32, 2048, dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(gfk.gf_scale(x, 7, interpret=True)),
+        np.asarray(gf.mul_const(x, 7)))
+    old = jnp.asarray(rng.integers(0, 1 << 32, (4, 64), dtype=np.uint32))
+    new = old ^ U32(1)
+    stored = ref.fletcher_blocks_ref(old)
+    _, _, _, bad = gfk.fused_verify_commit_pq(old, new, stored, 3,
+                                              interpret=True)
+    assert not np.asarray(bad).any()
+    smashed = old.at[2, 5].set(old[2, 5] ^ U32(0x40))
+    _, _, _, bad = gfk.fused_verify_commit_pq(smashed, new, stored, 3,
+                                              interpret=True)
+    np.testing.assert_array_equal(np.asarray(bad),
+                                  [False, False, True, False])
+
+
+# -- P+Q commit threading -----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup(mesh42):
+    state, specs, shardings = small_state(mesh42)
+    return mesh42, state, specs, shardings
+
+
+def _q_verifies(p, prot) -> bool:
+    return bool(jax.device_get(p.scrub(prot)["qparity_ok"]))
+
+
+@pytest.mark.parametrize("base,dual", [(Mode.MLPC, Mode.MLPC2),
+                                       (Mode.MLP, Mode.MLP2)])
+def test_dual_parity_p_path_bit_identical(setup, base, dual):
+    """redundancy=2 must not perturb the single-parity engine: P, cksums,
+    digest and row stay bit-identical to the base mode across bulk,
+    patch, and verify_old commits — with Q verifying at every step."""
+    mesh, state, specs, _ = setup
+    p1 = make_protector(mesh, state, specs, base)
+    p2 = make_protector(mesh, state, specs, dual)
+    a, b = p1.init(state), p2.init(state)
+    lo = p2.layout
+    pages = layout_mod.leaf_pages(lo, 1).tolist()
+    cur = state
+    plans = [dict(), dict(dirty_pages=pages),
+             dict(verify_old=True), dict(dirty_pages=pages,
+                                         verify_old=base.has_cksums)]
+    for i, kw in enumerate(plans):
+        cur = dict(cur)
+        cur["w1"] = cur["w1"] * 1.01 + 0.25
+        key = jax.random.PRNGKey(i)
+        a, ok_a = p1.commit(a, cur, rng_key=key, **kw)
+        b, ok_b = p2.commit(b, cur, rng_key=key, **kw)
+        assert bool(ok_a) and bool(ok_b), (i, kw)
+        np.testing.assert_array_equal(np.asarray(a.parity),
+                                      np.asarray(b.parity))
+        np.testing.assert_array_equal(np.asarray(a.digest),
+                                      np.asarray(b.digest))
+        np.testing.assert_array_equal(np.asarray(a.row), np.asarray(b.row))
+        if base.has_cksums:
+            np.testing.assert_array_equal(np.asarray(a.cksums),
+                                          np.asarray(b.cksums))
+        assert _q_verifies(p2, b), (i, kw)
+    assert a.qparity is None and b.qparity is not None
+
+
+def test_resolve_mode_ladder():
+    assert resolve_mode("mlpc", 1) is Mode.MLPC
+    assert resolve_mode("mlpc", 2) is Mode.MLPC2
+    assert resolve_mode("mlp", 2) is Mode.MLP2
+    assert resolve_mode(Mode.MLPC2, 2) is Mode.MLPC2
+    assert Mode.MLPC2.redundancy == 2 and Mode.MLPC.redundancy == 1
+    with pytest.raises(ValueError, match="redundancy=2"):
+        resolve_mode("ml", 2)
+    with pytest.raises(ValueError, match="redundancy"):
+        resolve_mode("mlpc", 3)
+
+
+# -- two-rank reconstruction --------------------------------------------------
+
+@pytest.mark.parametrize("mode", [Mode.MLPC2, Mode.MLP2])
+@pytest.mark.parametrize("ranks", [(0, 1), (1, 3), (0, 3)])
+def test_double_rank_loss_reconstructs(setup, mode, ranks):
+    """ISSUE acceptance: any two simultaneous rank losses reconstruct
+    bit-exactly against a pre-loss snapshot."""
+    mesh, state, specs, _ = setup
+    p = make_protector(mesh, state, specs, mode)
+    prot = p.init(state)
+    cur = state
+    for i in range(2):
+        cur = jax.tree.map(lambda x: (x * 1.02 + 0.01).astype(x.dtype), cur)
+        prot, ok = p.commit(prot, cur, rng_key=jax.random.PRNGKey(i))
+        assert bool(ok)
+    snap = {k: np.asarray(v).copy() for k, v in prot.state.items()}
+    bad, event = failure.inject_double_rank_loss(p, prot, ranks)
+    assert event.kind == "double_loss"
+    rec, ok = p.recover_two(bad, *event.lost_ranks)
+    assert bool(ok) or not mode.has_cksums
+    for k in snap:
+        np.testing.assert_array_equal(np.asarray(rec.state[k]), snap[k])
+    assert _q_verifies(p, rec)
+
+
+def test_double_loss_unrecoverable_without_q(setup):
+    mesh, state, specs, _ = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC)
+    from repro.core import recovery as recovery_mod
+    with pytest.raises(RuntimeError, match="no Q syndrome"):
+        recovery_mod.recover_from_double_loss(p, p.init(state), (0, 1))
+
+
+def test_rank_loss_with_outstanding_scribble(setup):
+    """A rank loss while another rank's scribble is still unrepaired is a
+    double erasure: naming the scribbled rank as the second loss brings
+    both back to intended values (single parity cannot untangle this)."""
+    mesh, state, specs, _ = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC2)
+    prot = p.init(state)
+    snap = {k: np.asarray(v).copy() for k, v in prot.state.items()}
+    # scribble rank 1 (undetected — no scrub ran), then lose rank 3
+    bad, _ = failure.inject_scribble(p, prot, rank=1,
+                                     word_offsets=[3, 70])
+    bad, _ = failure.inject_rank_loss(p, bad, rank=3)
+    rec, ok = p.recover_two(bad, 1, 3)
+    assert bool(ok)
+    for k in snap:
+        np.testing.assert_array_equal(np.asarray(rec.state[k]), snap[k])
+
+
+def test_mid_window_double_loss_w16(trainer_cfg, mesh42):
+    """ISSUE acceptance: a double loss landing mid-window at W=16 in
+    redundancy=2 mode reconstructs bit-exactly — the flush brings P and Q
+    current from the cached row, then the Vandermonde solve rebuilds both
+    lost rows; the replicated window metadata bounds the window with no
+    checkpoint + log replay."""
+    from repro.configs.base import ProtectConfig, TrainConfig
+    from repro.runtime.trainer import Trainer
+    t = Trainer(trainer_cfg,
+                TrainConfig(learning_rate=1e-3, warmup_steps=2,
+                            total_steps=100),
+                ProtectConfig(mode="mlpc", block_words=64, window=16,
+                              redundancy=2),
+                mesh42, seq_len=32, global_batch=8, seed=3)
+    t.initialize()
+    assert t.protector.mode is Mode.MLPC2
+    t.run(3)
+    assert t._engine.needs_flush, "loss must land strictly mid-window"
+    snap = jax.tree.map(lambda x: np.asarray(x).copy(), t.prot.state)
+    bad, event = failure.inject_double_rank_loss(t.protector, t.prot,
+                                                 ranks=(0, 2))
+    t._est = dataclasses.replace(t._est, prot=bad)
+    rep = t.on_failure(event)
+    assert rep["kind"] == "double_loss" and rep["verified"]
+    assert rep["lost_ranks"] == [0, 2]
+    # survivors' replicated metadata bounded the lost window exactly
+    assert rep["window_bound"]["digest_verified"]
+    assert rep["window_bound"]["pending"] == 3
+    # failure suspicion collapsed the adaptive window
+    assert t._engine.window == 1
+    got = jax.tree.map(np.asarray, t.prot.state)
+    for k in jax.tree.leaves(jax.tree.map(
+            lambda a, b: np.array_equal(a, b), snap, got)):
+        assert k
+    assert _q_verifies(t.protector, t.prot)
+
+
+# -- adaptive window ----------------------------------------------------------
+
+def test_adaptive_window_shrinks_and_regrows(setup):
+    """Scrub pressure collapses W to 1; consecutive clean scrubs double
+    it back up to the configured ceiling."""
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC2)
+    eng = DeferredProtector(p, window=8, donate=False)
+    scrubber = Scrubber(p, period=1, engine=eng)
+    est = eng.init(state)
+    cur = jax.tree.map(lambda x: (x * 1.1).astype(x.dtype), state)
+    est, ok = eng.commit(est, cur, rng_key=jax.random.PRNGKey(0))
+    assert bool(ok)
+    est = eng.flush_if_pending(est)
+    # scribble -> suspect scrub -> W collapses to 1
+    bad, _ = failure.inject_scribble(p, est.prot, rank=1,
+                                     word_offsets=[5])
+    est = dataclasses.replace(est, prot=bad)
+    prot, report = scrubber.run(est.prot)
+    assert report.suspect and report.bad_locations
+    assert eng.window == 1
+    est = dataclasses.replace(est, prot=prot)
+    # clean scrubs regrow toward the ceiling: 2, 4, 8, capped at 8
+    widths = []
+    for _ in range(4):
+        prot, report = scrubber.run(est.prot)
+        assert not report.suspect
+        assert report.qparity_ok
+        est = dataclasses.replace(est, prot=prot)
+        widths.append(eng.window)
+    assert widths == [2, 4, 8, 8]
+    assert eng.max_window == 8
+
+
+# -- ProtectConfig validation -------------------------------------------------
+
+def test_protect_config_validation():
+    from repro.configs.base import ProtectConfig
+    ProtectConfig(mode="mlpc", window=16, redundancy=2)     # valid
+    with pytest.raises(ValueError, match="not a protection level"):
+        ProtectConfig(mode="mlqc")
+    with pytest.raises(ValueError, match="window"):
+        ProtectConfig(window=0)
+    with pytest.raises(ValueError, match="scrub_period"):
+        ProtectConfig(scrub_period=-5)
+    with pytest.raises(ValueError, match="at most two syndromes"):
+        ProtectConfig(redundancy=3)
+    with pytest.raises(ValueError, match="requires.*parity mode"):
+        ProtectConfig(mode="ml", redundancy=2)
+    with pytest.raises(ValueError, match="block_words"):
+        ProtectConfig(block_words=0)
+    with pytest.raises(ValueError, match="hybrid_threshold"):
+        ProtectConfig(hybrid_threshold=1.5)
+    with pytest.raises(ValueError, match="log_capacity"):
+        ProtectConfig(log_capacity=0)
+
+
+# -- storage accounting -------------------------------------------------------
+
+def test_overhead_report_dual_parity(setup):
+    mesh, state, specs, _ = setup
+    r1 = make_protector(mesh, state, specs, Mode.MLPC).overhead_report()
+    r2 = make_protector(mesh, state, specs, Mode.MLPC2).overhead_report()
+    assert r1["qparity_bytes_per_rank"] == 0
+    assert r2["qparity_bytes_per_rank"] == r2["parity_bytes_per_rank"]
+    assert r2["redundancy"] == 2
+    # the dual-parity tax is exactly one extra parity fraction
+    assert r2["protection_fraction"] == pytest.approx(
+        r1["protection_fraction"] + r1["parity_fraction"])
+
+
+@pytest.fixture(scope="module")
+def trainer_cfg():
+    from repro.configs.base import ModelConfig
+    return ModelConfig(
+        name="t_gf", family="dense", n_layers=2, d_model=32, n_heads=4,
+        n_kv=2, d_ff=64, vocab=128, param_dtype="float32",
+        compute_dtype="float32")
