@@ -37,11 +37,13 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from benchmarks import common
+from repro.configs.base import ProtectConfig
 from repro.core import checksum as ck
 from repro.core import layout as layout_mod
 from repro.core import parity as parity_mod
 from repro.core import redolog
 from repro.core.txn import Mode, Protector, ProtectedState, tree_select
+from repro.pool import Pool
 
 U32 = jnp.uint32
 
@@ -189,20 +191,22 @@ def run(quick: bool = False) -> dict:
             scen = {}
             # -- overwrite / verify: full-state commit ----------------------
             state, specs = common.state_of_bytes(size, mesh)
-            abstract = jax.eval_shape(lambda: state)
             new_state = jax.tree.map(lambda x: x * 1.01, state)
-            p = Protector(mesh, abstract, specs, mode=mode, block_words=64)
-            prot = p.init(state)
+            cfg = ProtectConfig(mode=mode.value, block_words=64)
+            pool = Pool.open(state, specs, mesh=mesh, config=cfg,
+                             donate=False)
+            p = pool.protector
+            prot = pool.prot
             for name, vo in (("overwrite", False), ("verify", True)):
                 fused = jax.jit(p.make_commit(verify_old=vo))
                 unfused = jax.jit(make_unfused_commit(p, verify_old=vo))
                 scen[name] = (fused, unfused, prot, new_state)
             # -- decode: dirty-page commit on a leafy state -----------------
             lstate, lspecs = _leafy_state(size, mesh)
-            labstract = jax.eval_shape(lambda: lstate)
-            pl_ = Protector(mesh, labstract, lspecs, mode=mode,
-                            block_words=64, hybrid_threshold=0.5)
-            lprot = pl_.init(lstate)
+            lpool = Pool.open(lstate, lspecs, mesh=mesh, config=cfg,
+                              donate=False)
+            pl_ = lpool.protector
+            lprot = lpool.prot
             dirty = layout_mod.leaf_pages(pl_.layout, 3).tolist()
             lnew = dict(lstate)
             lnew["l03"] = lstate["l03"] * 1.01

@@ -12,19 +12,22 @@ Measures what the paper demonstrates qualitatively, plus latencies:
     losses solved from P + the GF(2^32) Q syndrome — reconstruction wall
     time, exactness, and the Q storage tax (must stay <= 2x P; it is
     exactly 1x — gated by scripts/bench_gate.py via BENCH_commit.json).
+
+Everything routes through the public `Pool` facade: `pool.recover`
+dispatches every fault kind (and flushes any open window first), and
+`pool.scrub` is the detection path.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax
 import numpy as np
 
 from benchmarks import common
+from repro.configs.base import ProtectConfig
 from repro.core import microbuffer
-from repro.core.scrub import Scrubber
-from repro.core.txn import Mode, Protector
+from repro.pool import Fault, Pool
 from repro.runtime import failure
 
 
@@ -35,33 +38,35 @@ def run(quick: bool = False) -> dict:
     rows = []
     for size in sizes:
         state, specs = common.state_of_bytes(size, mesh)
-        p = Protector(mesh, jax.eval_shape(lambda: state), specs,
-                      mode=Mode.MLPC, block_words=1024)
-        prot = p.init(state)
-        w0 = np.asarray(prot.state["w"]).copy()
+        pool = Pool.open(state, specs, mesh=mesh,
+                         config=ProtectConfig(mode="mlpc",
+                                              block_words=1024),
+                         donate=False)
+        w0 = np.asarray(pool.state["w"]).copy()
 
         # media error: lose rank 2 entirely
-        bad, event = failure.inject_rank_loss(p, prot, rank=2)
+        pool.prot, event = failure.inject_rank_loss(pool.protector,
+                                                    pool.prot, rank=2)
         t0 = time.perf_counter()
-        rec, ok = p.recover_rank(bad, event.lost_rank)
-        jax.block_until_ready(jax.tree.leaves(rec.state)[0])
+        rep = pool.recover(Fault.from_event(event))
+        jax.block_until_ready(jax.tree.leaves(pool.state)[0])
         t_rank = time.perf_counter() - t0
-        exact = np.array_equal(np.asarray(rec.state["w"]), w0)
+        exact = np.array_equal(np.asarray(pool.state["w"]), w0)
 
         # scribble: flip bits in 3 words, detect by scrub, repair pages
-        bad2, ev2 = failure.inject_scribble(p, prot, rank=1,
-                                            word_offsets=[7, 2048, 100000])
-        scrubber = Scrubber(p, period=1)
+        pool.prot, ev2 = failure.inject_scribble(
+            pool.protector, pool.prot, rank=1,
+            word_offsets=[7, 2048, 100000])
         t0 = time.perf_counter()
-        fixed, report = scrubber.run(bad2)
-        jax.block_until_ready(jax.tree.leaves(fixed.state)[0])
+        report = pool.scrub()
+        jax.block_until_ready(jax.tree.leaves(pool.state)[0])
         t_scrub = time.perf_counter() - t0
-        exact2 = np.array_equal(np.asarray(fixed.state["w"]), w0)
+        exact2 = np.array_equal(np.asarray(pool.state["w"]), w0)
 
         rows.append({
             "state_B": size,
             "rank_recover_ms": round(t_rank * 1e3, 2),
-            "rank_exact": exact, "rank_verified": bool(ok),
+            "rank_exact": exact, "rank_verified": rep.verified,
             "scrub_repair_ms": round(t_scrub * 1e3, 2),
             "scribble_found": len(report.bad_locations),
             "scribble_exact": exact2,
@@ -84,33 +89,35 @@ def run(quick: bool = False) -> dict:
 
     # false-positive check: a clean pool scrubs clean
     state, specs = common.state_of_bytes(256 * 1024, mesh)
-    p = Protector(mesh, jax.eval_shape(lambda: state), specs,
-                  mode=Mode.MLPC, block_words=1024)
-    rep = p.scrub(p.init(state))
-    assert not np.asarray(rep["bad_pages"]).any()
-    assert bool(rep["parity_ok"])
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", block_words=1024),
+                     donate=False)
+    rep = pool.scrub()
+    assert not rep.bad_locations and bool(rep.parity_ok)
     print("clean-pool scrub: no false positives")
 
     # dual parity: two simultaneous rank losses, P+Q Vandermonde solve
     double_rows = []
     for size in sizes:
         state, specs = common.state_of_bytes(size, mesh)
-        p2 = Protector(mesh, jax.eval_shape(lambda: state), specs,
-                       mode=Mode.MLPC2, block_words=1024)
-        prot2 = p2.init(state)
-        w0 = np.asarray(prot2.state["w"]).copy()
-        bad, event = failure.inject_double_rank_loss(p2, prot2,
-                                                     ranks=(1, 3))
+        pool2 = Pool.open(state, specs, mesh=mesh,
+                          config=ProtectConfig(mode="mlpc", redundancy=2,
+                                               block_words=1024),
+                          donate=False)
+        w0 = np.asarray(pool2.state["w"]).copy()
+        pool2.prot, event = failure.inject_double_rank_loss(
+            pool2.protector, pool2.prot, ranks=(1, 3))
         t0 = time.perf_counter()
-        rec, ok = p2.recover_two(bad, *event.lost_ranks)
-        jax.block_until_ready(jax.tree.leaves(rec.state)[0])
+        rep = pool2.recover(Fault.double_loss(*event.lost_ranks))
+        jax.block_until_ready(jax.tree.leaves(pool2.state)[0])
         t_double = time.perf_counter() - t0
-        over = p2.overhead_report()
+        over = pool2.overhead_report()
         double_rows.append({
             "state_B": size,
             "double_recover_ms": round(t_double * 1e3, 2),
-            "double_exact": np.array_equal(np.asarray(rec.state["w"]), w0),
-            "double_verified": bool(ok),
+            "double_exact": np.array_equal(np.asarray(pool2.state["w"]),
+                                           w0),
+            "double_verified": rep.verified,
             "q_over_p": round(over["qparity_bytes_per_rank"]
                               / max(over["parity_bytes_per_rank"], 1), 4),
         })

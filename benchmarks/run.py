@@ -34,11 +34,14 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
     """Write the per-PR commit-latency record (BENCH_commit.json).
 
     Distills txn_latency down to the commit hot path (overwrite latency
-    per mode/size), plus the interleaved unfused-vs-fused A/B when
-    commit_sweep ran, the deferred-epoch W-sweep when `deferred` ran,
-    and the dual-parity recovery record (double-loss reconstruction time
-    + Q storage tax) when `recovery` ran, so perf regressions on the
-    commit/recovery engines are visible as one small diffable file
+    per mode/size) plus the facade-vs-direct compiled-bytes record (the
+    Pool facade must route to the very program direct engine use
+    compiles — zero byte overhead, gated structurally), plus the
+    interleaved unfused-vs-fused A/B when commit_sweep ran, the
+    deferred-epoch W-sweep when `deferred` ran, and the dual-parity
+    recovery record (double-loss reconstruction time + Q storage tax)
+    when `recovery` ran, so perf regressions on the commit/recovery
+    engines are visible as one small diffable file
     (scripts/bench_gate.py diffs it against the committed baseline);
     EXPERIMENTS.md §Perf records the history.
     """
@@ -50,9 +53,12 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
         "bench": "txn_latency",
         "quick": quick,
         "commit_engine": "fused-single-sweep+deferred-epoch",
+        "api": "pool-facade",
         "overwrite_us": overwrite,
         "summary": {str(k): v for k, v in txn_result["summary"].items()},
     }
+    if txn_result.get("facade"):
+        payload["facade"] = txn_result["facade"]
     if ab_result:
         payload["ab_interleaved"] = ab_result["rows"]
     if deferred_result:

@@ -19,8 +19,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from benchmarks import common
+from repro.configs.base import ProtectConfig
 from repro.core import layout as layout_mod
-from repro.core.txn import Mode, Protector
+from repro.pool import Pool
 
 
 def concurrent_commits(quick: bool) -> list:
@@ -30,10 +31,12 @@ def concurrent_commits(quick: bool) -> list:
         mesh = jax.make_mesh((g, 1), ("data", "model"))
         for size in sizes:
             state, specs = common.state_of_bytes(size * g, mesh)
-            p = Protector(mesh, jax.eval_shape(lambda: state), specs,
-                          mode=Mode.MLPC, block_words=64)
-            prot = p.init(state)
-            commit = jax.jit(p.make_commit())
+            pool = Pool.open(state, specs, mesh=mesh,
+                             config=ProtectConfig(mode="mlpc",
+                                                  block_words=64),
+                             donate=False)
+            prot = pool.prot
+            commit = jax.jit(pool.protector.make_commit())
             new_state = jax.tree.map(lambda x: x * 1.01, state)
             t = common.timeit(commit, prot, new_state,
                               rng_key=jax.random.PRNGKey(0),
@@ -59,9 +62,11 @@ def hybrid_sweep(quick: bool) -> list:
     mesh = common.get_mesh()
     size = 4 * 1024 * 1024 if quick else 32 * 1024 * 1024
     state, specs = common.state_of_bytes(size, mesh)
-    abstract = jax.eval_shape(lambda: state)
-    p = Protector(mesh, abstract, specs, mode=Mode.MLPC, block_words=1024)
-    prot = p.init(state)
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", block_words=1024),
+                     donate=False)
+    p = pool.protector
+    prot = pool.prot
     n_pages = p.layout.n_blocks
     rows = []
     fracs = [0.004, 0.02, 0.1, 0.5, 1.0]

@@ -9,8 +9,6 @@ from __future__ import annotations
 
 import time
 
-import jax
-
 from benchmarks import common
 from repro.configs.base import ModelConfig, ProtectConfig, TrainConfig
 from repro.runtime.trainer import Trainer
@@ -49,7 +47,7 @@ def run(quick: bool = False) -> dict:
                 ProtectConfig(mode="mlpc", block_words=64, scrub_period=0),
                 mesh, seq_len=32, global_batch=8)
     t.initialize()
-    t._commit = jax.jit(t.protector.make_commit(verify_old=True))
+    t.verify_old = True            # routed through the pool's commit
     t.run(2)
     t0 = time.perf_counter()
     t.run(n_steps)

@@ -11,6 +11,12 @@ Modes ladder per Table 2: pgl(none) -> +ML -> +MLP -> +MLPC, vs REPLICA.
 Reproduction targets (DESIGN.md §6): ladder ordering; MLP is the dominant
 add-on; MLPC adds little for small states and ~10% at 4 KB-page scale;
 MLP within ~±40% of REPLICA while protecting against strictly more.
+
+Engines are reached through the `Pool` facade (the public API); the
+low-level programs come off `pool.protector`.  A `facade` record pins
+the facade's routed overwrite commit to the direct engine program's
+compiled bytes (they must be the *same* program — scripts/bench_gate.py
+fails if the facade ever adds bytes).
 """
 from __future__ import annotations
 
@@ -23,7 +29,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core.txn import Mode, Protector
+from repro.configs.base import ProtectConfig
+from repro.core.txn import Mode
+from repro.pool import Pool
 
 # The paper's 64 B..4 KB objects are NVMM-scale; protected *state* here is
 # MB-scale (params/moments/caches), so the size axis shifts accordingly —
@@ -35,19 +43,24 @@ MODES = [Mode.NONE, Mode.ML, Mode.MLP, Mode.MLPC, Mode.REPLICA]
 
 
 def run(quick: bool = False) -> dict:
+    from benchmarks.commit_sweep import _xla_bytes
     mesh = common.get_mesh()
     sizes = SIZES[:3] if quick else SIZES
     rows = []
+    facade_rows = []
     for size in sizes:
         state, specs = common.state_of_bytes(size, mesh)
-        abstract = jax.eval_shape(lambda: state)
         new_state = jax.tree.map(lambda x: x * 1.01, state)
         for mode in MODES:
-            p = Protector(mesh, abstract, specs, mode=mode, block_words=64)
+            pool = Pool.open(state, specs, mesh=mesh,
+                             config=ProtectConfig(mode=mode.value,
+                                                  block_words=64),
+                             donate=False)
+            p = pool.protector
             init_t = common.timeit(jax.jit(
                 lambda s: p.init(s, jit=False)), state,
                 reps=(5 if quick else 10))
-            prot = p.init(state)
+            prot = pool.prot
             commit = jax.jit(p.make_commit())
             key = jax.random.PRNGKey(0)
             over_t = common.timeit(commit, prot, new_state, rng_key=key,
@@ -61,9 +74,22 @@ def run(quick: bool = False) -> dict:
                 "overwrite_us": round(over_t["median_s"] * 1e6, 1),
                 "free_us": round(free_t["median_s"] * 1e6, 1),
             })
+            # the facade's routed commit vs the direct engine program:
+            # compiled bytes must be identical (gated structurally)
+            direct_mb = _xla_bytes(commit, prot, new_state, rng_key=key)
+            facade_mb = _xla_bytes(pool.commit_program(), prot, new_state,
+                                   rng_key=key)
+            facade_rows.append({
+                "size_B": size, "mode": mode.value,
+                "direct_MB": round(direct_mb / 2**20, 3),
+                "facade_MB": round(facade_mb / 2**20, 3),
+            })
     common.print_table("transaction latency (us, CPU-relative)", rows,
                        ["size_B", "mode", "alloc_us", "overwrite_us",
                         "free_us"])
+    common.print_table("facade vs direct commit (XLA bytes accessed, MB)",
+                       facade_rows,
+                       ["size_B", "mode", "direct_MB", "facade_MB"])
 
     # reproduction checks (relative claims only)
     summary = {}
@@ -77,9 +103,10 @@ def run(quick: bool = False) -> dict:
             "cksum_addon_pct": round(
                 100 * (over["mlpc"] - over["mlp"]) / over["mlp"], 1),
         }
-    common.save_result("txn_latency", {"rows": rows, "summary": summary})
+    out = {"rows": rows, "summary": summary, "facade": facade_rows}
+    common.save_result("txn_latency", out)
     print("summary (overwrite):", summary)
-    return {"rows": rows, "summary": summary}
+    return out
 
 
 if __name__ == "__main__":

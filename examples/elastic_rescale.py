@@ -1,21 +1,25 @@
 """Elastic rescale demo: move a protected training job between meshes.
 
-    PYTHONPATH=src python examples/elastic_rescale.py
+    PYTHONPATH=src python examples/elastic_rescale.py [--smoke]
 
 A job training on a (4, 2) mesh loses nodes and continues on (2, 2); later
 it scales back up to (4, 2).  The divisibility-fallback sharding rules keep
 the same model valid on every mesh; protection (zone geometry depends on G)
-is rebuilt after each move, exactly as Pangolin rebuilds parity when row
-geometry changes.  Loss history continues seamlessly across both moves.
+is rebuilt after each move by `Pool.rescale` — flush any open window,
+reshard the state bit-exactly, rebuild parity/checksums on the new
+geometry, carry the step counter — exactly as Pangolin rebuilds parity
+when row geometry changes.  Loss history continues seamlessly across both
+moves.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
 
 import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig, ProtectConfig, TrainConfig
-from repro.dist.elastic import reshard_state
 from repro.runtime.trainer import Trainer
 
 
@@ -32,53 +36,56 @@ def make_trainer(mesh, seed=0):
 
 
 def move(trainer_old, new_mesh):
-    """Re-shard state onto the new mesh and rebuild protection there."""
+    """Move the protected job: one `Pool.rescale` call does the flush,
+    the bit-exact reshard, the protection rebuild on the new zone
+    geometry and the host-side step-counter carry."""
     t_new = make_trainer(new_mesh, seed=0)
-    state = reshard_state(
-        trainer_old.prot.state, new_mesh,
-        t_new.protector.state_specs)
-    t_new.prot = t_new.protector.init(state)
-    import dataclasses
-    import jax.numpy as jnp
-    # the step counter moves as a host value — device arrays must not leak
-    # across meshes
-    t_new.prot = dataclasses.replace(
-        t_new.prot,
-        step=jnp.asarray(int(jax.device_get(trainer_old.prot.step)),
-                         jnp.uint32))
+    t_new.pool = trainer_old.pool.rescale(new_mesh, into=t_new.pool)
     t_new.cursor = trainer_old.cursor
     return t_new
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer steps per phase)")
+    args = ap.parse_args()
+    n = 4 if args.smoke else 10
+
     mesh_full = jax.make_mesh((4, 2), ("data", "model"))
     mesh_small = jax.make_mesh((2, 2), ("data", "model"))
 
     t = make_trainer(mesh_full)
     t.initialize()
-    losses = [o["loss"] for o in t.run(10)]
-    print(f"phase 1 (4x2, G=4):  steps 1-10,  loss -> {losses[-1]:.4f}, "
-          f"parity overhead {t.protector.overhead_report()['parity_fraction']:.3f}")
+    losses = [o["loss"] for o in t.run(n)]
+    print(f"phase 1 (4x2, G=4):  steps 1-{n},  loss -> {losses[-1]:.4f}, "
+          f"parity overhead "
+          f"{t.pool.overhead_report()['parity_fraction']:.3f}")
 
     # nodes evicted: shrink to 2x2 (G=2), protection rebuilt
     t = move(t, mesh_small)
-    losses += [o["loss"] for o in t.run(10)]
-    print(f"phase 2 (2x2, G=2):  steps 11-20, loss -> {losses[-1]:.4f}, "
-          f"parity overhead {t.protector.overhead_report()['parity_fraction']:.3f}")
+    losses += [o["loss"] for o in t.run(n)]
+    print(f"phase 2 (2x2, G=2):  steps {n + 1}-{2 * n}, loss -> "
+          f"{losses[-1]:.4f}, parity overhead "
+          f"{t.pool.overhead_report()['parity_fraction']:.3f}")
 
     # capacity restored: scale back up, verify recovery still works
     t = move(t, mesh_full)
-    losses += [o["loss"] for o in t.run(10)]
-    print(f"phase 3 (4x2, G=4):  steps 21-30, loss -> {losses[-1]:.4f}")
+    losses += [o["loss"] for o in t.run(n)]
+    print(f"phase 3 (4x2, G=4):  steps {2 * n + 1}-{3 * n}, loss -> "
+          f"{losses[-1]:.4f}")
 
     from repro.runtime import failure
     t.prot, ev = failure.inject_rank_loss(t.protector, t.prot, rank=1)
     rep = t.on_failure(ev)
     print(f"post-rescale rank loss: recovered, verified={rep['verified']}")
 
-    assert np.mean(losses[-5:]) < np.mean(losses[:5]), "loss must decrease"
-    assert int(jax.device_get(t.prot.step)) == 30
-    print("elastic rescale demo passed: 30 contiguous steps across 3 meshes")
+    if not args.smoke:         # too few steps to demand descent in CI
+        assert np.mean(losses[-3:]) < np.mean(losses[:3]), \
+            "loss must decrease"
+    assert int(jax.device_get(t.prot.step)) == 3 * n
+    print(f"elastic rescale demo passed: {3 * n} contiguous steps across "
+          "3 meshes")
 
 
 if __name__ == "__main__":

@@ -2,21 +2,31 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Demonstrates the whole public surface in ~60 lines: build a Protector over
-a sharded pytree, commit a transactional update, lose a rank, recover it
-online, scribble a page, scrub-detect it, repair it.
+The whole public surface is the `Pool` facade — the analogue of
+Pangolin's three-call API (paper Listing 2):
+
+    pgl_open            ->  Pool.open(state, specs, mesh=..., config=...)
+    pgl_tx_begin/commit ->  with pool.transaction() as tx: tx.stage(new)
+    pgl_tx_abort        ->  canary mismatch inside the context
+    SIGBUS handler      ->  pool.recover(Fault.rank_loss(r))
+    scrubbing thread    ->  pool.scrub() / pool.maybe_scrub()
+
+`ProtectConfig` is the single knob: mode ladder (none < ml < mlp < mlpc,
+plus replica and the dual-parity levels via redundancy=2), the deferred
+window W, and the scrub cadence.  This demo: build a pool over a sharded
+pytree, commit a transactional update, lose a rank, recover it online,
+scribble a page, scrub-detect + repair it, and abort a transaction whose
+staging buffer smashed its canary.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.txn import Mode, Protector
+from repro import Fault, Pool, ProtectConfig
 from repro.runtime import failure
 
 # 1. a sharded state pytree: FSDP weights, TP weights, a replicated scalar
@@ -31,40 +41,41 @@ state = {
 state = jax.tree.map(
     lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), state, specs)
 
-# 2. protect it: checksums detect corruption, XOR parity across the 4-rank
+# 2. pgl_open: checksums detect corruption, XOR parity across the 4-rank
 #    zone repairs it, at 1/4 storage overhead (1/G; 1% at G=100)
-protector = Protector(mesh, jax.eval_shape(lambda: state), specs,
-                      mode=Mode.MLPC, block_words=64)
-prot = protector.init(state)
-print("protected:", protector.overhead_report())
+pool = Pool.open(state, specs, mesh=mesh,
+                 config=ProtectConfig(mode="mlpc", block_words=64))
+print("protected:", pool.overhead_report())
 
-# 3. transactional update (the paper's Listing 2: open -> mutate -> commit)
-commit = jax.jit(protector.make_commit())
+# 3. transactional update (open -> mutate the micro-buffer -> commit)
 new_state = jax.tree.map(lambda x: (x * 2).astype(x.dtype), state)
-prot, ok = commit(prot, new_state, rng_key=jax.random.PRNGKey(0))
-print(f"commit ok={bool(ok)} step={int(prot.step)}")
+with pool.transaction(rng_key=jax.random.PRNGKey(0)) as tx:
+    tx.stage(new_state)
+print(f"commit ok={tx.ok} step={pool.step}")
 
 # 4. media error: lose data-rank 2 entirely; rebuild online from parity
-want = np.asarray(prot.state["w_fsdp"]).copy()
-prot, event = failure.inject_rank_loss(protector, prot, rank=2)
-prot, ok = protector.recover_rank(prot, event.lost_rank)
-assert bool(ok)
-assert np.array_equal(np.asarray(prot.state["w_fsdp"]), want)
+want = np.asarray(pool.state["w_fsdp"]).copy()
+pool.prot, event = failure.inject_rank_loss(pool.protector, pool.prot,
+                                            rank=2)
+rep = pool.recover(Fault.rank_loss(event.lost_rank))
+assert rep.verified
+assert np.array_equal(np.asarray(pool.state["w_fsdp"]), want)
 print("rank-loss recovery: bit-exact")
 
 # 5. silent scribble: flip bits, detect by scrub, repair the page
-prot, event = failure.inject_scribble(protector, prot, rank=1,
-                                      word_offsets=[7])
-report = protector.scrub(prot)
-locs = np.argwhere(np.asarray(report["bad_pages"]))
-print("scrub found corrupted (mesh-pos..., page):", locs.tolist())
-prot, ok = protector.repair_pages(
-    prot, [int(locs[0][0])], [int(locs[0][-1])])
-assert bool(ok)
-assert np.array_equal(np.asarray(prot.state["w_fsdp"]), want)
+pool.prot, event = failure.inject_scribble(pool.protector, pool.prot,
+                                           rank=1, word_offsets=[7])
+report = pool.scrub()
+print("scrub found corrupted (rank, page):", report.bad_locations)
+assert report.repaired and report.repair_ok
+assert np.array_equal(np.asarray(pool.state["w_fsdp"]), want)
 print("scribble repair: bit-exact")
 
 # 6. canary: a staged buffer overrun aborts the commit, state untouched
-prot2, ok = commit(prot, new_state, canary_ok=False)
-assert not bool(ok) and int(prot2.step) == int(prot.step)
+step_before = pool.step
+with pool.transaction() as tx:
+    tx.watch(failure.smashed_canary_buffer(4096))   # overrun staging buf
+    tx.stage(jax.tree.map(jnp.zeros_like, new_state))
+assert tx.aborted and not tx.ok and pool.step == step_before
+assert np.array_equal(np.asarray(pool.state["w_fsdp"]), want)
 print("canary abort: state untouched — all quickstart checks passed")

@@ -3,7 +3,7 @@ hundred steps with the full Pangolin protection stack, surviving injected
 failures along the way.
 
     PYTHONPATH=src python examples/train_fault_tolerant.py \
-        [--steps 300] [--mode mlpc] [--d-model 512] [--no-faults]
+        [--steps 300] [--mode mlpc] [--d-model 512] [--no-faults] [--smoke]
 
 Timeline (default):
   step  60   silent scribble injected -> caught by the periodic scrub,
@@ -48,7 +48,13 @@ def main():
                     help="default: a fresh temp dir (stale checkpoints from "
                          "other configs must not be restored into this run)")
     ap.add_argument("--no-faults", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: a tiny model for a few dozen steps "
+                         "through the same fault timeline")
     args = ap.parse_args()
+    if args.smoke:
+        args.steps, args.d_model = 30, 64
+        args.seq_len, args.batch = 64, 4
 
     if args.ckpt_dir is None:
         import tempfile
@@ -65,7 +71,7 @@ def main():
     n_params = sum(x.size for x in
                    jax.tree.leaves(trainer.prot.state["params"]))
     print(f"model: {n_params / 1e6:.1f}M params | mode={args.mode} | "
-          f"overhead: {trainer.protector.overhead_report()}")
+          f"overhead: {trainer.pool.overhead_report()}")
 
     q = max(args.steps // 5, 1)
     faults = {} if args.no_faults else {
@@ -82,8 +88,7 @@ def main():
             print(f"[{step}] injected silent scribble "
                   f"(will be caught by scrub at the period boundary)")
             # force an immediate scrub (as the periodic task would)
-            trainer.prot, rep = trainer.scrubber.run(
-                trainer.prot, freeze=trainer.freeze, resume=trainer.resume)
+            rep = trainer.pool.scrub()
             print(f"[{step}] scrub: bad={rep.bad_locations} "
                   f"repaired={rep.repaired} verified={rep.repair_ok}")
         elif fault == "rank_loss":

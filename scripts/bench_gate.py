@@ -87,6 +87,20 @@ def check(fresh: dict, base: dict, wall_tol: float,
                     f"{row['bytes_per_step_MB']} not below W=1 "
                     f"{sync['bytes_per_step_MB']} — deferral win lost")
 
+    # -- facade section --------------------------------------------------------
+    # structural invariant: the Pool facade routes commits to the SAME
+    # compiled program as direct engine use, so its bytes may never
+    # exceed the direct engine's (tol covers rounding only)
+    ff = _index(fresh.get("facade", []), ("size_B", "mode"))
+    if base.get("facade") and not ff:
+        bad.append("facade: record missing from fresh run (facade-vs-"
+                   "direct bytes no longer measured)")
+    for key, row in ff.items():
+        if row["facade_MB"] > row["direct_MB"] * (1 + bytes_tol):
+            bad.append(f"facade{key}: facade_MB {row['facade_MB']} vs "
+                       f"direct_MB {row['direct_MB']} — the Pool facade "
+                       "added compiled bytes over the direct engine")
+
     # -- dual-parity recovery section ------------------------------------------
     fr = _index(fresh.get("recovery", {}).get("double_loss", []),
                 ("state_B",))
@@ -140,6 +154,7 @@ def main():
           f"{len(fresh.get('ab_interleaved', []))} A/B cells, "
           f"{len(fresh.get('recovery', {}).get('double_loss', []))} "
           "double-loss cells, "
+          f"{len(fresh.get('facade', []))} facade cells, "
           f"wall tol {args.wall_tol}, bytes tol {args.bytes_tol})")
     return 0
 

@@ -1,16 +1,19 @@
 #!/usr/bin/env bash
-# Repo smoke: the tier-1 correctness gate plus the commit-latency record
-# and the commit-path perf gate.
+# Repo smoke: the tier-1 correctness gate, the public-API examples, the
+# commit-latency record and the commit-path perf gate.
 #
-#   scripts/smoke.sh            # full tier-1 suite + quick commit bench
-#   scripts/smoke.sh --no-bench # tests only
+#   scripts/smoke.sh            # tests + examples + quick commit bench
+#   scripts/smoke.sh --no-bench # tests + examples only
 #
-# The quick bench writes BENCH_commit.fresh.json; scripts/bench_gate.py
-# diffs it against the committed BENCH_commit.json baseline (noise-aware
-# wall tolerance, tight deterministic-bytes tolerance, and the deferred
-# W=16-below-W=1 structural invariant).  Only when the gate passes is
-# the fresh record promoted to BENCH_commit.json, so a PR diff shows
-# commit-path perf movement alongside test status.
+# The examples exercise the `Pool` facade end to end (quickstart runs in
+# full; the other three run their --smoke pass), so any API drift in the
+# public surface fails CI before it reaches a user.  The quick bench
+# writes BENCH_commit.fresh.json; scripts/bench_gate.py diffs it against
+# the committed BENCH_commit.json baseline (noise-aware wall tolerance,
+# tight deterministic-bytes tolerance, the deferred W=16-below-W=1
+# structural invariant, and the facade-adds-no-bytes invariant).  Only
+# when the gate passes is the fresh record promoted to BENCH_commit.json,
+# so a PR diff shows commit-path perf movement alongside test status.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -18,6 +21,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q
+
+echo "== examples: Pool facade (quickstart + --smoke passes) =="
+python examples/quickstart.py
+python examples/serve_protected.py --smoke
+python examples/train_fault_tolerant.py --smoke
+python examples/elastic_rescale.py --smoke
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== perf: commit latency + dual-parity recovery (quick) =="

@@ -139,6 +139,18 @@ class ProtectConfig:
     redundancy: int = 1               # simultaneous rank losses survived:
                                       # 1 = XOR parity P, 2 = P + GF(2^32)
                                       # Q syndrome (two-rank reconstruction)
+    window_growth_commits: int = 32   # consecutive clean commits before a
+                                      # shrunken adaptive window regrows
+                                      # under load (0 = grow on clean
+                                      # scrubs only)
+
+    @property
+    def resolved_mode(self):
+        """The effective protection Mode — (mode, redundancy) folded onto
+        the ladder (mlp + redundancy=2 -> mlp2, ...).  This is the single
+        source of truth; `core.txn.resolve_mode` is an internal detail."""
+        from repro.core.txn import resolve_mode
+        return resolve_mode(self.mode, self.redundancy)
 
     def __post_init__(self):
         if self.mode not in _PROTECT_MODES:
@@ -168,6 +180,19 @@ class ProtectConfig:
                 f"ProtectConfig.redundancy=2 with mode={self.mode!r} — "
                 "the Q syndrome extends parity, so redundancy=2 requires "
                 "a parity mode (mlp or mlpc)")
+        if self.window > 1 and self.mode in ("none", "ml", "replica"):
+            raise ValueError(
+                f"ProtectConfig.window={self.window} with "
+                f"mode={self.mode!r} — the deferred-epoch window batches "
+                "parity/checksum refreshes, which this mode does not "
+                "maintain; use a parity/checksum mode (mlp, mlpc, mlp2, "
+                "mlpc2) or window=1")
+        if self.window_growth_commits < 0:
+            raise ValueError(
+                f"ProtectConfig.window_growth_commits="
+                f"{self.window_growth_commits} — use 0 to regrow the "
+                "adaptive window on clean scrubs only, or a positive "
+                "count of consecutive clean commits")
         if self.block_words < 1:
             raise ValueError(
                 f"ProtectConfig.block_words={self.block_words} — the "

@@ -251,7 +251,9 @@ class DeferredProtector:
         Any detected error (bad pages, parity/Q mismatch, stale row
         cache) or failure event collapses the window to 1 — the engine
         degenerates to the synchronous cadence, so redundancy lag never
-        compounds while the pool is suspect.  Every clean scrub doubles
+        compounds while the pool is suspect.  Every clean signal — a
+        clean scrub, or sustained clean-commit load (the Scrubber calls
+        in after `growth_commits` consecutive clean commits) — doubles
         the window back toward its configured ceiling.  Returns the new
         window size; takes effect at the next commit (an already-open
         window flushes on its old cadence at the latest).

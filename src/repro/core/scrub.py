@@ -40,24 +40,54 @@ class Scrubber:
     `engine` (optional) is a DeferredProtector to feed scrub pressure
     back into: a suspect scrub collapses its window toward 1, a clean
     scrub lets it regrow (adaptive window sizing — redundancy lag never
-    compounds while the pool looks unhealthy).
+    compounds while the pool looks unhealthy).  `growth_commits` (> 0)
+    additionally regrows a shrunken window under sustained *clean-commit
+    load*: every N consecutive clean commits doubles it back toward the
+    ceiling, so a pool committing heavily between scrubs is not stuck at
+    W=1 until the next scrub period lands.
     """
 
     def __init__(self, protector: txn_mod.Protector, period: int = 0,
-                 auto_repair: bool = True, engine=None):
+                 auto_repair: bool = True, engine=None,
+                 growth_commits: int = 0):
         self.protector = protector
         self.period = period          # 0 = disabled
         self.auto_repair = auto_repair
         self.engine = engine          # Optional[DeferredProtector]
+        self.growth_commits = int(growth_commits)   # 0 = scrub-only growth
         self._since = 0
+        self._clean_streak = 0
 
     def due(self) -> bool:
         if self.period <= 0:
             return False
         return self._since >= self.period
 
-    def on_commit(self):
+    def on_commit(self, clean: bool = True):
+        """Count a commit toward the scrub cadence.  `clean` is the
+        host-known verdict (the static canary / resolved commit ok): a
+        dirty commit resets the clean streak; a long enough streak
+        regrows the adaptive window under load."""
         self._since += 1
+        if not clean:
+            self._clean_streak = 0
+            return
+        self._clean_streak += 1
+        # growth lands only at an epoch boundary (no open window):
+        # stretching an already-open epoch would let redundancy lag past
+        # the cadence it opened under (report_pressure's invariant).
+        # The streak persists across a skipped boundary, so the first
+        # post-flush commit after the threshold grows the window.
+        if (self.engine is not None and self.growth_commits > 0
+                and self._clean_streak >= self.growth_commits
+                and self.engine.window < self.engine.max_window
+                and not self.engine.needs_flush):
+            self.engine.report_pressure(False)    # sustained clean load
+            self._clean_streak = 0
+
+    def note_suspect(self):
+        """Reset the clean streak (a failure event was handled)."""
+        self._clean_streak = 0
 
     def run(self, prot: txn_mod.ProtectedState,
             freeze: Optional[Callable] = None,
@@ -108,4 +138,6 @@ class Scrubber:
         if self.engine is not None:
             # adaptive window: errors shrink W toward 1, clean regrows it
             self.engine.report_pressure(report.suspect)
+            if report.suspect:
+                self._clean_streak = 0
         return prot, report

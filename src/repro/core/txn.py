@@ -519,6 +519,15 @@ class Protector:
         allocation-free steady state); the caller must then drop the old
         `prot` and keep only the returned one.
         """
+        return self.commit_program(
+            dirty_pages=dirty_pages, verify_old=verify_old,
+            donate=donate)(prot, state_new, **kw)
+
+    def commit_program(self, *, dirty_pages=None, verify_old=False,
+                       donate=False):
+        """The cached compiled commit for one (dirty set, verify, donate)
+        key — what `commit` dispatches and what the Pool facade routes
+        through (benchmarks lower it to assert facade == direct bytes)."""
         key = ("commit",
                tuple(int(p) for p in dirty_pages)
                if dirty_pages is not None else None,
@@ -532,7 +541,7 @@ class Protector:
                                  verify_old=verify_old),
                 donate_argnums=(0,) if donate else (),
                 static_argnames=("canary_ok",))
-        return self._jit_cache[key](prot, state_new, **kw)
+        return self._jit_cache[key]
 
     # -- scrub -------------------------------------------------------------------
 

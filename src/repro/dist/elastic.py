@@ -1,9 +1,10 @@
 """Elastic rescale: move protected state between meshes.
 
 Zone geometry is a function of the data-axis size G (row padding, parity
-segment length, page->owner mapping), so protection cannot move with the
-state — exactly as Pangolin rebuilds parity when chunk-row geometry
-changes.  The flow is:
+segment length, page->owner mapping, and — under redundancy=2 — Q's
+Vandermonde coefficients), so protection cannot move with the state —
+exactly as Pangolin rebuilds parity when chunk-row geometry changes.
+The flow is:
 
     state' = reshard_state(prot.state, new_mesh, new_specs)   # bit-exact
     prot'  = new_protector.init(state')                       # rebuild
@@ -11,6 +12,11 @@ changes.  The flow is:
 `reshard_state` round-trips through host memory, which works across
 arbitrary mesh shape changes (including device-count changes that XLA's
 device-to-device resharding cannot express).
+
+The public entry point is `Pool.rescale(new_mesh)` (repro/pool.py),
+which adds flush-before-rescale and the host step-counter carry on top
+of `reshard_state`; `rescale` / `rescale_windowed` below are the
+low-level engine forms it mirrors.
 """
 from __future__ import annotations
 

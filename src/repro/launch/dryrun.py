@@ -42,7 +42,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import WORKLOADS, get_config, workload_skips
 from repro.configs.base import ProtectConfig, TrainConfig
 from repro.configs.registry import list_archs
-from repro.core.txn import Mode, Protector
 from repro.launch import hlo_analysis as hlo
 from repro.launch import hlo_cost
 from repro.launch.mesh import make_production_mesh
@@ -129,8 +128,11 @@ def dryrun_cell(arch: str, wl_name: str, multi_pod: bool,
         optimizer = build_optimizer(train_cfg, cfg)
         abstract_state = api.abstract_train_state(model, optimizer)
         state_specs = api.train_state_specs(model, optimizer, mesh)
-        mode = Mode(protect)
-        protector = Protector(mesh, abstract_state, state_specs, mode=mode)
+        # a cold pool: layout + compiled programs, zero allocation
+        from repro.pool import Pool
+        pool = Pool(mesh, abstract_state, state_specs,
+                    ProtectConfig(mode=protect))
+        protector = pool.protector
         commit = protector.make_commit()
         train_step = api.make_train_step(model, optimizer, train_cfg)
 

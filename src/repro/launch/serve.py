@@ -23,6 +23,9 @@ def main(argv=None):
                     help="rank losses survived per zone: 1 = XOR parity, "
                          "2 = + GF(2^32) Q syndrome")
     ap.add_argument("--scrub-period", type=int, default=16)
+    ap.add_argument("--window", type=int, default=1,
+                    help="deferred-epoch window W for the KV cache "
+                         "(1 = synchronous per-commit protection)")
     ap.add_argument("--host-devices", type=int, default=8)
     args = ap.parse_args(argv)
 
@@ -46,7 +49,8 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
     srv = Server(cfg, ProtectConfig(mode=args.protect, block_words=256,
                                     scrub_period=args.scrub_period,
-                                    redundancy=args.redundancy),
+                                    redundancy=args.redundancy,
+                                    window=args.window),
                  mesh, batch=args.batch,
                  max_len=args.prompt_len + args.new_tokens + 1)
     srv.start(params)
@@ -57,9 +61,9 @@ def main(argv=None):
     dt = time.time() - t0
     print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
-    if srv.protector is not None:
+    if srv.pool is not None:
         print("cache protection overhead:",
-              srv.protector.overhead_report()["protection_fraction"])
+              srv.pool.overhead_report()["protection_fraction"])
     return 0
 
 

@@ -23,11 +23,17 @@ def main(argv=None):
     ap.add_argument("--data", type=int, default=4, help="data-axis size")
     ap.add_argument("--model", type=int, default=2, help="model-axis size")
     ap.add_argument("--protect", default="mlpc",
-                    choices=["none", "ml", "mlp", "mlpc", "replica"])
+                    choices=["none", "ml", "mlp", "mlpc", "replica",
+                             "mlp2", "mlpc2"])
     ap.add_argument("--redundancy", type=int, default=1, choices=[1, 2],
                     help="rank losses survived per zone: 1 = XOR parity, "
                          "2 = + GF(2^32) Q syndrome")
     ap.add_argument("--scrub-period", type=int, default=50)
+    ap.add_argument("--window", type=int, default=1,
+                    help="deferred-epoch window W (1 = synchronous "
+                         "per-commit protection)")
+    ap.add_argument("--overlap-commit", action="store_true",
+                    help="dispatch step t+1 before awaiting commit t")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--optimizer", default="adamw",
                     choices=["adamw", "adafactor"])
@@ -59,12 +65,13 @@ def main(argv=None):
                     microbatches=args.microbatches,
                     optimizer=args.optimizer),
         ProtectConfig(mode=args.protect, scrub_period=args.scrub_period,
-                      redundancy=args.redundancy),
+                      redundancy=args.redundancy, window=args.window,
+                      overlap_commit=args.overlap_commit),
         mesh, seq_len=args.seq_len, global_batch=args.global_batch,
         checkpoint_dir=args.ckpt_dir, seed=args.seed)
     trainer.initialize()
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} protect={args.protect} "
-          f"overhead={trainer.protector.overhead_report()}")
+          f"overhead={trainer.pool.overhead_report()}")
     outs = trainer.run(args.steps, checkpoint_every=args.ckpt_every)
     for o in outs[:: max(args.steps // 10, 1)]:
         print(f"step {o['step']:5d}  loss {o['loss']:.4f}")

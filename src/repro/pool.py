@@ -1,0 +1,535 @@
+"""`Pool` — the Pangolin-style front door to the whole protection stack.
+
+Pangolin's value proposition is a *small* persistent-object API
+(`pgl_open` / `pgl_tx_begin` / `pgl_tx_commit`) that hides checksums,
+parity, micro-buffering and recovery behind three calls.  This module is
+that surface for the reproduction: one facade that owns the engine
+choice (synchronous single-sweep vs deferred-epoch), the scrubber
+pressure loop, window-meta replication, and every recovery path, so
+callers never touch `Protector` / `DeferredProtector` / `Scrubber`
+plumbing directly.
+
+pgl -> Pool mapping (paper §3, Listing 2):
+
+    ================  =============================================
+    Pangolin          this library
+    ================  =============================================
+    pgl_open          Pool.open(state, specs, mesh=..., config=...)
+    pgl_begin/commit  with pool.transaction() as tx: tx.stage(new)
+                      (or pool.commit(new, ...) directly)
+    pgl_tx_abort      canary mismatch / exception inside the context
+    scrubbing thread  pool.maybe_scrub() on the commit cadence
+                      (pool.scrub() forces one)
+    SIGBUS handler    pool.recover(Fault.rank_loss(r))
+    corruption repair pool.recover(Fault.scribble(rank, pages))
+    (beyond paper)    pool.recover(Fault.double_loss(a, b)) — P+Q
+    pool resize       pool.rescale(new_mesh)
+    ================  =============================================
+
+Protection-mode ladder (paper Table 2), selected by `ProtectConfig`:
+`none < ml < mlp < mlpc` plus `replica` (2x baseline) and the
+dual-parity levels `mlp2`/`mlpc2` (normally reached via
+`redundancy=2`).  `config.window` selects the engine: 1 = the
+synchronous single-sweep commit, W>1 = the deferred-epoch engine whose
+parity/checksum refresh amortizes over W commits.  The facade routes
+both through the same jit caches as direct engine use, so a
+`Pool`-routed commit is bit-identical to — and compiles the very same
+program as — a hand-wired one (asserted in tests/test_pool.py).
+
+`Protector` and `DeferredProtector` stay importable as the low-level
+layer; `Pool` is the contract new subsystems plug into.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+
+from repro.configs.base import ProtectConfig
+from repro.core import microbuffer
+from repro.core import recovery as recovery_mod
+from repro.core.epoch import DeferredProtector, EngineHost
+from repro.core.scrub import ScrubReport, Scrubber
+from repro.core.txn import Mode, ProtectedState, Protector
+from repro.dist import elastic
+
+PyTree = Any
+
+
+def _is_abstract(state: PyTree) -> bool:
+    leaves = jax.tree.leaves(state)
+    return bool(leaves) and all(
+        isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One recovery request — the argument to `Pool.recover`.
+
+    Constructors mirror the failure taxonomy (runtime/failure.py):
+
+        Fault.rank_loss(r)         one data-rank's row lost (media error)
+        Fault.double_loss(a, b)    two ranks lost at once (needs P+Q)
+        Fault.scribble(rank, pages) silent corruption at (rank, page)s
+        Fault.from_event(event)    adapt a runtime FailureEvent
+    """
+    kind: str                                   # rank_loss | double_loss
+                                                # | scribble
+    rank: Optional[int] = None                  # rank_loss
+    ranks: Optional[Tuple[int, int]] = None     # double_loss
+    locations: Optional[Tuple[Tuple[int, int], ...]] = None  # scribble
+
+    @staticmethod
+    def rank_loss(rank: int) -> "Fault":
+        return Fault("rank_loss", rank=int(rank))
+
+    @staticmethod
+    def double_loss(a: int, b: int) -> "Fault":
+        a, b = sorted((int(a), int(b)))
+        if a == b:
+            raise ValueError("double loss needs two distinct ranks")
+        return Fault("double_loss", ranks=(a, b))
+
+    @staticmethod
+    def scribble(rank: int, pages: Sequence[int]) -> "Fault":
+        return Fault("scribble",
+                     locations=tuple((int(rank), int(p)) for p in pages))
+
+    @classmethod
+    def from_event(cls, event) -> "Fault":
+        """Adapt a runtime/failure.py FailureEvent (duck-typed)."""
+        if event.kind == "rank_loss":
+            return cls.rank_loss(event.lost_rank)
+        if event.kind == "double_loss":
+            return cls.double_loss(*event.lost_ranks)
+        if event.kind == "scribble":
+            return cls("scribble",
+                       locations=tuple((int(r), int(p))
+                                       for r, p in event.locations))
+        raise ValueError(f"no recovery path for fault kind {event.kind!r}")
+
+
+class Transaction:
+    """`pgl_tx_begin .. pgl_tx_commit` as a context manager.
+
+    Stage the micro-buffered update with `stage(new_state)`; register
+    canary-guarded staging buffers (microbuffer.guard/guard_nd) with
+    `watch(...)`.  On exit the canaries are verified host-side and the
+    staged state commits through the pool — a smashed canary (or an
+    explicit `abort()`) aborts the transaction without touching
+    protected state, exactly like `commit(..., canary_ok=False)`.  An
+    exception inside the block also aborts (nothing is committed) and
+    propagates.
+    """
+
+    def __init__(self, pool: "Pool", *, data_cursor=0, rng_key=None):
+        self._pool = pool
+        self._data_cursor = data_cursor
+        self._rng_key = rng_key
+        self._staged: Optional[PyTree] = None
+        self._commit_kw: dict = {}
+        self._guarded: list = []          # (buffer, nd) pairs
+        self._aborted = False
+        self._ok = None                   # device bool after commit
+
+    # -- staging ---------------------------------------------------------------
+
+    def stage(self, new_state: PyTree, *, dirty_pages=None,
+              dirty_words=None, verify_old: bool = False) -> None:
+        """Stage the transaction's result (the micro-buffer contents)."""
+        self._staged = new_state
+        self._commit_kw = {"dirty_pages": dirty_pages,
+                           "dirty_words": dirty_words,
+                           "verify_old": verify_old}
+
+    def watch(self, guarded: jax.Array, *, nd: bool = False) -> jax.Array:
+        """Register a canary-guarded staging buffer for verification at
+        commit; returns the buffer unchanged for chaining."""
+        self._guarded.append((guarded, nd))
+        return guarded
+
+    def guard(self, row: jax.Array) -> jax.Array:
+        """Append a canary page to a 1-D u32 staging buffer and watch it.
+
+        Functional staging: if kernels produce a *new* buffer from this
+        one, `watch` the final buffer too — the canary travels with it.
+        """
+        return self.watch(microbuffer.guard(row))
+
+    def abort(self) -> None:
+        """Abort explicitly: nothing commits when the block exits."""
+        self._aborted = True
+
+    # -- verdicts ---------------------------------------------------------------
+
+    @property
+    def canary_ok(self) -> bool:
+        """Host verdict over every watched guard page (True if none)."""
+        checks = [microbuffer.check_nd(b) if nd else microbuffer.check(b)
+                  for b, nd in self._guarded]
+        return all(bool(jax.device_get(c)) for c in checks)
+
+    @property
+    def aborted(self) -> bool:
+        return self._aborted
+
+    @property
+    def ok(self) -> bool:
+        """Did the commit land?  (Syncs on the commit program's verdict.)"""
+        if self._aborted or self._ok is None:
+            return False
+        return bool(jax.device_get(self._ok))
+
+    @property
+    def committed(self) -> bool:
+        """Alias of `ok` — True only when the commit actually landed,
+        including device-side verdicts (a verify-at-open failure aborts
+        on device after the host canary passed)."""
+        return self.ok
+
+    # -- context protocol -------------------------------------------------------
+
+    def __enter__(self) -> "Transaction":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is not None:
+            self._aborted = True          # exception == pgl_tx_abort
+            return False                  # propagate
+        if self._staged is None:
+            return False                  # nothing staged: a no-op tx
+        canary_ok = (not self._aborted) and self.canary_ok
+        self._ok = self._pool.commit(
+            self._staged, data_cursor=self._data_cursor,
+            rng_key=self._rng_key, canary_ok=canary_ok, **self._commit_kw)
+        if not canary_ok:
+            self._aborted = True
+        return False
+
+
+class Pool(EngineHost):
+    """The single public entry point over one protected state layout.
+
+    Construction wires the whole stack from `ProtectConfig` (the single
+    source of truth for mode / redundancy / window / scrub cadence):
+    the `Protector` for the zone layout, the `DeferredProtector` when
+    `config.window > 1`, the `Scrubber` with its adaptive-window
+    pressure loop, and window-meta replication for bulk engines.  The
+    protected snapshot itself (`ProtectedState` vs `EpochState`) is an
+    internal detail — callers see `pool.state` and `pool.step`.
+
+    Low-level escape hatches (`pool.protector`, `pool.engine`,
+    `pool.scrubber`) stay public for benchmarks and tests, but nothing
+    outside pool.py should *construct* those classes for a protected
+    runtime.
+    """
+
+    def __init__(self, mesh, abstract_state: PyTree, state_specs: PyTree,
+                 config: Optional[ProtectConfig] = None, *,
+                 data_axis: str = "data",
+                 dirty_leaf_idx: Optional[Sequence[int]] = None,
+                 dirty_capacity: Optional[int] = None,
+                 donate: bool = True,
+                 replicate_meta: Optional[bool] = None,
+                 on_freeze: Optional[Callable] = None,
+                 on_resume: Optional[Callable] = None):
+        self.config = config if config is not None else ProtectConfig()
+        self.mesh = mesh
+        self.abstract_state = abstract_state
+        self.state_specs = state_specs
+        self.donate = bool(donate)
+        self.on_freeze = on_freeze
+        self.on_resume = on_resume
+        self._open_kw = dict(data_axis=data_axis,
+                             dirty_leaf_idx=dirty_leaf_idx,
+                             dirty_capacity=dirty_capacity,
+                             donate=donate, replicate_meta=replicate_meta)
+        mode = self.config.resolved_mode
+        self.protector = Protector(
+            mesh, abstract_state, state_specs, data_axis=data_axis,
+            mode=mode, block_words=self.config.block_words,
+            hybrid_threshold=self.config.hybrid_threshold,
+            log_capacity=self.config.log_capacity)
+        # footprint arguments may be callables of the built zone layout
+        # (e.g. lambda lo: range(len(lo.slots))) so callers need not
+        # construct the layout twice just to size the deferred engine.
+        # _open_kw keeps the UNresolved forms: rescale re-resolves them
+        # against the new mesh's layout (zone geometry changes with G).
+        if callable(dirty_leaf_idx):
+            dirty_leaf_idx = dirty_leaf_idx(self.protector.layout)
+        if callable(dirty_capacity):
+            dirty_capacity = dirty_capacity(self.protector.layout)
+        self._engine: Optional[DeferredProtector] = None
+        self._est = None
+        self._prot: Optional[ProtectedState] = None
+        if self.config.window > 1:
+            # ProtectConfig.__post_init__ guarantees a parity/checksum
+            # mode whenever window > 1, so the engine always exists here.
+            # Bulk engines (whole state dirty per commit — training)
+            # replicate the window's dirty mask + digest across the pod
+            # so survivors of a mid-window loss can bound it; patch
+            # engines (decode) default it off, matching the runtimes.
+            if replicate_meta is None:
+                replicate_meta = dirty_leaf_idx is None
+            self._engine = DeferredProtector(
+                self.protector, window=self.config.window,
+                dirty_capacity=dirty_capacity,
+                dirty_leaf_idx=dirty_leaf_idx, donate=donate,
+                replicate_meta=replicate_meta)
+        self.scrubber = Scrubber(
+            self.protector, period=self.config.scrub_period,
+            engine=self._engine,
+            growth_commits=self.config.window_growth_commits)
+
+    # -- open -------------------------------------------------------------------
+
+    @classmethod
+    def open(cls, state: PyTree, specs: PyTree, *, mesh,
+             config: Optional[ProtectConfig] = None,
+             **kw) -> "Pool":
+        """The `pgl_open` analogue: protect `state` and return the pool.
+
+        `state` may be concrete (protection is built immediately) or a
+        ShapeDtypeStruct pytree (a *cold* pool: the layout and compiled
+        programs exist, call `pool.init(state)` to attach real state —
+        how the runtimes and the dry-run lowering use it).
+        """
+        abstract = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), state)
+        pool = cls(mesh, abstract, specs, config, **kw)
+        if not _is_abstract(state):
+            pool.init(state)
+        return pool
+
+    def init(self, state: PyTree) -> "Pool":
+        """Build parity/checksums/row for `state` (fresh protection)."""
+        self.prot = self.protector.init(state)
+        return self
+
+    # -- introspection ----------------------------------------------------------
+
+    @property
+    def mode(self) -> Mode:
+        return self.protector.mode
+
+    @property
+    def engine(self) -> Optional[DeferredProtector]:
+        """The deferred-epoch engine, or None on the synchronous cadence."""
+        return self._engine
+
+    @property
+    def state(self) -> Optional[PyTree]:
+        """The live protected state pytree."""
+        prot = self.prot
+        return None if prot is None else prot.state
+
+    @property
+    def step(self) -> int:
+        """Committed transaction count (host value)."""
+        return int(jax.device_get(self.prot.step))
+
+    def overhead_report(self) -> dict:
+        rep = self.protector.overhead_report()
+        rep["window"] = (self._engine.window if self._engine is not None
+                         else 1)
+        return rep
+
+    def commit_program(self, *, dirty_pages=None, verify_old: bool = False):
+        """The compiled synchronous-commit program the facade routes
+        through (for benchmarks asserting facade == direct bytes)."""
+        return self.protector.commit_program(
+            dirty_pages=dirty_pages, verify_old=verify_old,
+            donate=self.donate)
+
+    # -- commit -----------------------------------------------------------------
+
+    def commit(self, state_new: PyTree, *, dirty_pages=None,
+               dirty_words=None, data_cursor=0, rng_key=None,
+               canary_ok: bool = True, verify_old: bool = False):
+        """One transactional update; returns the commit verdict (device
+        bool — fetch it lazily to keep protection off the critical
+        path).
+
+        Routing is the facade's whole job: the deferred engine takes
+        `dirty_words` (per-leaf word indices, position-independent
+        shapes) and ignores `dirty_pages` — its page footprint is the
+        static `dirty_leaf_idx` from construction; the synchronous
+        engine takes `dirty_pages` (a static page set keying its own
+        compiled commit).  Callers pass whichever they know; the pool
+        feeds the right one to the engine it built.
+        """
+        assert self.prot is not None, "Pool.commit before init()"
+        if self._engine is not None:
+            assert not verify_old, \
+                "verify_old is a synchronous-engine feature (window=1)"
+            self._est, ok = self._engine.commit(
+                self._est, state_new, dirty_words=dirty_words,
+                data_cursor=data_cursor, rng_key=rng_key,
+                canary_ok=canary_ok)
+        else:
+            self._prot, ok = self.protector.commit(
+                self._prot, state_new, dirty_pages=dirty_pages,
+                verify_old=verify_old, donate=self.donate,
+                data_cursor=data_cursor, rng_key=rng_key,
+                canary_ok=canary_ok)
+        # the scrub cadence + clean-streak window growth ride on the
+        # host-known canary verdict (no device sync on the hot path)
+        self.scrubber.on_commit(clean=bool(canary_ok))
+        return ok
+
+    def transaction(self, *, data_cursor=0, rng_key=None) -> Transaction:
+        """`pgl_tx_begin`: returns the staging context manager."""
+        return Transaction(self, data_cursor=data_cursor, rng_key=rng_key)
+
+    # -- scrub ------------------------------------------------------------------
+
+    def scrub(self) -> ScrubReport:
+        """Force one scrub (flushing any open window first); repairs
+        detected scribbles in place and feeds the adaptive window."""
+        assert self.prot is not None
+        self.flush()                 # scrub must see current redundancy
+        prot, report = self.scrubber.run(
+            self.prot, freeze=self._freeze, resume=self._resume)
+        self.prot = prot
+        return report
+
+    def maybe_scrub(self) -> Optional[ScrubReport]:
+        """Run a scrub iff the cadence says one is due."""
+        if self.scrubber.due():
+            return self.scrub()
+        return None
+
+    # -- recovery ---------------------------------------------------------------
+
+    def recover(self, fault: Fault) -> recovery_mod.RecoveryReport:
+        """One recovery path for every fault (the SIGBUS-handler
+        analogue).  Flushes any open window first — the cached row is a
+        separate buffer the fault never touched, so the flushed
+        redundancy describes intended values and online reconstruction
+        proceeds exactly as in the synchronous engine.  Dual-parity
+        modes additionally solve `Fault.double_loss`.  After recovery
+        the deferred window collapses toward 1 (failure suspicion) and,
+        when window metadata was replicated, the report carries the
+        survivors' window bound.
+        """
+        assert self.prot is not None
+        if not isinstance(fault, Fault):
+            fault = Fault.from_event(fault)   # accept raw FailureEvents
+        # survivors' copy of the window metadata, captured BEFORE the
+        # flush mutates the window
+        meta = (self._engine.window_meta
+                if self._engine is not None else None)
+        self.flush()
+        if fault.kind == "rank_loss":
+            prot, rep = recovery_mod.recover_from_rank_loss(
+                self.protector, self.prot, fault.rank,
+                freeze=self._freeze, resume=self._resume)
+        elif fault.kind == "double_loss":
+            prot, rep = recovery_mod.recover_from_double_loss(
+                self.protector, self.prot, fault.ranks,
+                freeze=self._freeze, resume=self._resume)
+        elif fault.kind == "scribble":
+            prot, rep = recovery_mod.recover_from_scribble(
+                self.protector, self.prot, fault.locations,
+                freeze=self._freeze, resume=self._resume)
+        else:
+            raise ValueError(f"no recovery path for fault {fault.kind!r}")
+        self.prot = prot
+        if self._engine is not None:
+            self._engine.report_pressure(True)
+            self.scrubber.note_suspect()
+            if meta is not None:
+                rep.window_bound = {
+                    "pending": meta["pending"],
+                    "dirty_pages": meta["dirty_pages"],
+                    "digest_verified": self._engine.verify_window_bound(
+                        self._est),
+                }
+        return rep
+
+    # -- rescale ----------------------------------------------------------------
+
+    def rescale(self, new_mesh, *, into: Optional["Pool"] = None) -> "Pool":
+        """Move the pool to `new_mesh` (elastic resize), returning the
+        new pool.
+
+        Flush-before-rescale lands any open window, then the state
+        reshards bit-exactly through the host and protection is rebuilt
+        for the new zone geometry (G changes the row padding, the
+        page->owner map, and — under redundancy=2 — Q's Vandermonde
+        coefficients, so no syndrome can move with the state).  `into`
+        reuses a cold pool already built for the new mesh (a runtime's
+        own); otherwise a fresh pool with this one's config is built.
+        """
+        assert self.prot is not None
+        self.flush()
+        if into is None:
+            into = Pool(new_mesh, self.abstract_state, self.state_specs,
+                        self.config, **self._open_kw)
+        # elastic.rescale owns the reshard -> rebuild -> step-carry
+        # sequence; the facade adds flush-before-rescale and pool wiring
+        _, prot_new = elastic.rescale(
+            self.protector, self.prot, lambda _m: into.protector,
+            new_mesh)
+        into.prot = prot_new
+        return into
+
+    # -- freeze/resume hooks ----------------------------------------------------
+
+    def _freeze(self):
+        """Paper's pool freeze: drain outstanding work before repair."""
+        if self.on_freeze is not None:
+            self.on_freeze()
+        elif self.prot is not None:
+            jax.block_until_ready(jax.tree.leaves(self.prot.state)[0])
+
+    def _resume(self):
+        if self.on_resume is not None:
+            self.on_resume()
+
+
+class PoolHost:
+    """Mixin for runtimes that own `self.pool` (possibly None — an
+    unprotected runtime).  Delegates the low-level handles tests and
+    benchmarks poke (`protector`, `scrubber`, `prot`, `_engine`,
+    `_est`) plus `flush()`, so every host exposes the same surface
+    without re-implementing the shim."""
+
+    pool: Optional[Pool] = None
+
+    @property
+    def protector(self):
+        return self.pool.protector if self.pool is not None else None
+
+    @property
+    def scrubber(self):
+        return self.pool.scrubber if self.pool is not None else None
+
+    @property
+    def prot(self):
+        return self.pool.prot if self.pool is not None else None
+
+    @prot.setter
+    def prot(self, value):
+        if self.pool is not None:
+            self.pool.prot = value
+        else:
+            assert value is None, "unprotected host holds no prot"
+
+    @property
+    def _engine(self):
+        return self.pool.engine if self.pool is not None else None
+
+    @property
+    def _est(self):
+        return self.pool._est if self.pool is not None else None
+
+    @_est.setter
+    def _est(self, value):
+        self.pool._est = value
+
+    def flush(self) -> None:
+        """Bring deferred redundancy current (no-op when synchronous)."""
+        if self.pool is not None:
+            self.pool.flush()

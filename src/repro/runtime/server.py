@@ -10,24 +10,22 @@ block checksums refreshed incrementally and parity patched over dirty
 pages only.  A previous version jitted `make_commit()` with no dirty pages,
 silently sending every decode commit down the bulk path.
 
-Two protection cadences:
-
-  * `window=1` — synchronous: every step routes through
-    `Protector.commit(..., dirty_pages=...)` with the static per-position
-    page set (compiled once per distinct set, cached).
-  * `window=W>1` — deferred epochs (core/epoch.py): in-window steps pay
-    protection proportional to the *words* a decode step writes
-    (`layout.time_slice_words` — position-independent shapes, so one
-    compiled program serves every position) while the cached row stays
-    pinned at the epoch start; parity and the checksum table refresh
-    once per epoch from the unioned dirty pages.  The scrubber sees
-    flushed (current) redundancy: the engine flushes before every scrub.
+All engine selection lives in the `Pool` facade (repro/pool.py): the
+server builds one cold pool over the cache layout and feeds it both
+footprint spellings per step — `dirty_pages` (static page set, keying
+the synchronous engine's compiled commit at `window=1`) and
+`dirty_words` (position-independent word indices from
+`layout.time_slice_words`, the deferred engine's per-step footprint at
+`window=W>1`) — and the pool routes to whichever engine the config
+built.  The scrubber sees flushed (current) redundancy: `pool.scrub`
+flushes before every scrub.
 
 Both cadences donate the previous protected state into its successor, so
 steady-state decode allocates no row-sized buffers.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 import jax
@@ -37,16 +35,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ProtectConfig
 from repro.core import layout as layout_mod
-from repro.core.epoch import DeferredProtector, EngineHost
-from repro.core.scrub import Scrubber
-from repro.core.txn import Mode, Protector, resolve_mode
 from repro.models import api
 from repro.models.transformer import build_model
+from repro.pool import Pool, PoolHost
 
 PyTree = Any
 
 
-class Server(EngineHost):
+class Server(PoolHost):
     def __init__(self, cfg: ModelConfig, protect_cfg: ProtectConfig, mesh,
                  *, batch: int, max_len: int, protect_cache: bool = True,
                  window: Optional[int] = None):
@@ -60,38 +56,36 @@ class Server(EngineHost):
                           else protect_cfg.window)
 
         self.protect_cache = protect_cache and protect_cfg.mode != "none"
-        self.protector: Optional[Protector] = None
-        self._engine: Optional[DeferredProtector] = None
-        self._est = None
-        self._prot = None
+        if (self.protect_cache and window is not None
+                and window != protect_cfg.window):
+            # the kwarg is a per-server override folded back into the
+            # config — ProtectConfig stays the single source of truth
+            # (and validates it; folded only when a pool is actually
+            # built, so unprotected servers accept any window)
+            protect_cfg = dataclasses.replace(protect_cfg, window=window)
+        self.pool: Optional[Pool] = None
         if self.protect_cache:
             cache_abs = jax.eval_shape(
                 lambda: self.model._cache_defs(batch, max_len))
             cache_specs = self.model.cache_specs(batch, max_len, mesh)
-            self.protector = Protector(
-                mesh, cache_abs, cache_specs,
-                mode=resolve_mode(protect_cfg.mode,
-                                  protect_cfg.redundancy),
-                block_words=protect_cfg.block_words,
-                hybrid_threshold=protect_cfg.hybrid_threshold)
-            lo = self.protector.layout
-            self._dirty_cap = layout_mod.time_slice_page_capacity(
-                lo, max_len)
+            # decode's deferred engine spans every cache leaf, with the
+            # per-step page capacity sized from the layout the pool builds
+            self.pool = Pool(
+                mesh, cache_abs, cache_specs, protect_cfg,
+                dirty_leaf_idx=(
+                    None if self.window == 1
+                    else (lambda lo: range(len(lo.slots)))),
+                dirty_capacity=(
+                    None if self.window == 1
+                    else (lambda lo: layout_mod.time_slice_page_capacity(
+                        lo, max_len))))
             self._page_cache: dict = {}
             self._word_cache: dict = {}
-            mode = self.protector.mode
-            if self.window > 1 and (mode.has_parity or mode.has_cksums):
-                self._engine = DeferredProtector(
-                    self.protector, window=self.window,
-                    dirty_capacity=self._dirty_cap,
-                    dirty_leaf_idx=range(len(lo.slots)))
-            # scrub pressure feeds the adaptive window (engine=None inert)
-            self.scrubber = Scrubber(self.protector,
-                                     period=protect_cfg.scrub_period,
-                                     engine=self._engine)
 
-    # protected-state plumbing (prot property / flush) comes from
-    # core.epoch.EngineHost
+    # pool delegation (protector / scrubber / prot / flush) comes from
+    # repro.pool.PoolHost
+
+    # -- decode-footprint plumbing ----------------------------------------------
 
     def _dirty_pages(self, pos: int) -> np.ndarray:
         key = pos % self.max_len
@@ -114,13 +108,9 @@ class Server(EngineHost):
         cache = jax.device_put(cache, jax.tree.map(
             lambda s: NamedSharding(self.mesh, s), specs,
             is_leaf=lambda x: isinstance(x, P)))
-        if self.protect_cache:
-            if self._engine is not None:
-                self._est = self._engine.init(cache)
-            else:
-                self._prot = self.protector.init(cache)
+        if self.pool is not None:
+            self.pool.init(cache)
         else:
-            self.prot = None
             self.cache = cache
         self.pos = 0
 
@@ -132,22 +122,17 @@ class Server(EngineHost):
         next_tok, logits, new_cache = self._decode(
             self.params, tokens, self._current_cache(),
             jnp.asarray(self.pos, jnp.int32))
-        if self.prot is not None:
-            if self._engine is not None:
-                self._est, ok = self._engine.commit(
-                    self._est, new_cache,
-                    dirty_words=self._dirty_words(self.pos))
+        if self.pool is not None:
+            # only the built engine's footprint spelling is computed —
+            # the other would be host work cached for nothing
+            if self.pool.engine is not None:
+                self.pool.commit(new_cache,
+                                 dirty_words=self._dirty_words(self.pos))
             else:
-                self._prot, ok = self.protector.commit(
-                    self._prot, new_cache,
-                    dirty_pages=self._dirty_pages(self.pos).tolist(),
-                    donate=True)
-            self.scrubber.on_commit()
-            if self.scrubber.due():
-                if self._engine is not None:
-                    self._est = self._engine.flush_if_pending(self._est)
-                prot, _ = self.scrubber.run(self.prot)
-                self.prot = prot
+                self.pool.commit(
+                    new_cache,
+                    dirty_pages=self._dirty_pages(self.pos).tolist())
+            self.pool.maybe_scrub()
         else:
             self.cache = new_cache
         self.pos += 1

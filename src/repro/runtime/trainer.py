@@ -7,17 +7,13 @@ Per step:  batch <- deterministic pipeline(cursor)
            scrub every N commits; online recovery on failure events;
            async disk checkpoints as the backstop tier.
 
-Protection cadence (`ProtectConfig.window`):
-
-  * window=1 — synchronous: checksums + parity refresh inside every
-    commit (the single-sweep engine, core/txn.py).
-  * window=W>1 — deferred epochs (core/epoch.py): in-window commits keep
-    the row digest current and union the dirty-page set; parity and the
-    checksum table refresh once per epoch from the windowed delta.  The
-    redo log still persists per step and covers the window for crash
-    replay.  The engine flushes before scrubs and online recovery, and
-    donates the old protected state into its successor (allocation-free
-    steady state).
+All protection plumbing lives in the `Pool` facade (repro/pool.py): the
+trainer builds one cold pool from its `ProtectConfig` and routes every
+commit / scrub / recovery through it.  The config's `window` selects the
+engine (1 = synchronous single-sweep, W>1 = deferred epochs whose redo
+log still persists per step and covers the window for crash replay);
+`scrub_period` drives `pool.maybe_scrub()`; faults funnel through
+`pool.recover(Fault...)`, which flushes any open window first.
 
 `overlap_commit` keeps protection off the critical path: step t+1's
 compute is dispatched before step t's commit (and, at an epoch boundary,
@@ -44,18 +40,15 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ProtectConfig, TrainConfig
-from repro.core import recovery as recovery_mod
 from repro.core import redolog
-from repro.core.epoch import DeferredProtector, EngineHost
-from repro.core.scrub import Scrubber
-from repro.core.txn import Mode, ProtectedState, Protector, resolve_mode
 from repro.data.synthetic import batch_for
 from repro.models import api
 from repro.models.transformer import build_model
 from repro.optim import build_optimizer
+from repro.pool import Fault, Pool, PoolHost
 
 
-class Trainer(EngineHost):
+class Trainer(PoolHost):
     def __init__(self, cfg: ModelConfig, train_cfg: TrainConfig,
                  protect_cfg: ProtectConfig, mesh, *,
                  seq_len: int = 128, global_batch: int = 8,
@@ -76,30 +69,10 @@ class Trainer(EngineHost):
 
         abstract_state = api.abstract_train_state(self.model, self.optimizer)
         state_specs = api.train_state_specs(self.model, self.optimizer, mesh)
-        self.protector = Protector(
-            mesh, abstract_state, state_specs,
-            mode=resolve_mode(protect_cfg.mode, protect_cfg.redundancy),
-            block_words=protect_cfg.block_words,
-            hybrid_threshold=protect_cfg.hybrid_threshold,
-            log_capacity=protect_cfg.log_capacity)
-        mode = self.protector.mode
-        self._engine: Optional[DeferredProtector] = None
-        self._est = None
-        self._prot: Optional[ProtectedState] = None
-        if self.window > 1 and (mode.has_parity or mode.has_cksums):
-            # bulk engine: train steps dirty the whole row; the window's
-            # mask + digest mirror across the pod per commit so survivors
-            # of a mid-window loss bound it without checkpoint + replay
-            self._engine = DeferredProtector(self.protector,
-                                             window=self.window,
-                                             replicate_meta=True)
-        else:
-            self._commit = jax.jit(self.protector.make_commit(),
-                                   static_argnames=("canary_ok",))
-        # scrub pressure feeds the adaptive window (engine=None is inert)
-        self.scrubber = Scrubber(self.protector,
-                                 period=protect_cfg.scrub_period,
-                                 engine=self._engine)
+        # one cold pool: engine selection, scrub pressure loop and
+        # window-meta replication all wired from the ProtectConfig
+        self.pool = Pool(mesh, abstract_state, state_specs, protect_cfg,
+                         on_freeze=self.freeze, on_resume=self.resume)
 
         self._train_step = jax.jit(api.make_train_step(
             self.model, self.optimizer, train_cfg))
@@ -117,9 +90,13 @@ class Trainer(EngineHost):
         self.history: list = []
         self._frozen = False
         self._host_step = 0
+        # verify-at-open (paper's default policy): checksums of the old
+        # state verified inside every synchronous commit, abort on
+        # mismatch — a window=1 engine feature
+        self.verify_old = False
 
-    # protected-state plumbing (prot property / flush) comes from
-    # core.epoch.EngineHost
+    # pool delegation (protector / scrubber / prot / flush) comes from
+    # repro.pool.PoolHost
 
     # -- lifecycle ---------------------------------------------------------------
 
@@ -131,7 +108,7 @@ class Trainer(EngineHost):
                 lambda s: NamedSharding(self.mesh, s),
                 api.train_state_specs(self.model, self.optimizer, self.mesh),
                 is_leaf=lambda x: isinstance(x, P)))
-        self.prot = self.protector.init(state)
+        self.pool.init(state)
         self._host_step = 0
 
     def freeze(self):
@@ -157,14 +134,9 @@ class Trainer(EngineHost):
         rng = jax.random.fold_in(jax.random.PRNGKey(self.seed), self.cursor)
         cursor_before = self.cursor
         new_state, metrics = self._train_step(self.prot.state, batch)
-        if self._engine is not None:
-            self._est, ok = self._engine.commit(
-                self._est, new_state, data_cursor=self.cursor,
-                rng_key=rng, canary_ok=canary_ok)
-        else:
-            self._prot, ok = self._commit(self._prot, new_state,
-                                          data_cursor=self.cursor,
-                                          rng_key=rng, canary_ok=canary_ok)
+        ok = self.pool.commit(new_state, data_cursor=self.cursor,
+                              rng_key=rng, canary_ok=canary_ok,
+                              verify_old=self.verify_old)
         self.cursor += 1          # optimistic; rolled back on late abort
         return {"ok": ok, "loss": metrics["loss"],
                 "cursor_before": cursor_before}
@@ -176,16 +148,12 @@ class Trainer(EngineHost):
             self._host_step += 1
         else:
             self.cursor = pending["cursor_before"]
-        self.scrubber.on_commit()
         out = {"step": self._host_step,
                "loss": float(jax.device_get(pending["loss"])),
                "committed": committed}
         self.history.append(out)
-        if self.scrubber.due():
-            self.flush()          # scrub must see current redundancy
-            prot, report = self.scrubber.run(
-                self.prot, freeze=self.freeze, resume=self.resume)
-            self.prot = prot
+        report = self.pool.maybe_scrub()
+        if report is not None:
             out["scrub"] = dataclasses.asdict(report)
         return out
 
@@ -224,50 +192,19 @@ class Trainer(EngineHost):
     def on_failure(self, event) -> dict:
         """Online recovery entry point (the SIGBUS-handler analogue).
 
-        With a deferred window pending, the flush first brings parity and
-        checksums current *from the cached row* — the cache is a separate
-        buffer the failure's state corruption never touched, so the
-        refreshed redundancy describes the intended values and recovery
-        proceeds as in the synchronous engine.  (A full machine loss that
-        also takes the cache and accumulator down falls back to
-        checkpoint + redo-log replay — see EXPERIMENTS.md §Perf,
-        window-loss semantics.)
+        A thin adapter now: `Pool.recover` owns the whole sequence —
+        capture the survivors' replicated window metadata, flush any
+        open window (the cached row is a separate buffer the failure's
+        state corruption never touched, so the refreshed redundancy
+        describes intended values), dispatch the right reconstruction,
+        collapse the adaptive window, and bound the lost window from the
+        replicated mask + digest.  (A full machine loss that also takes
+        the cache and accumulator down falls back to checkpoint +
+        redo-log replay — see EXPERIMENTS.md §Perf, window-loss
+        semantics.)
         """
         assert self.prot is not None
-        # survivors' copy of the window metadata, captured BEFORE the
-        # flush mutates the window — this is what a real pod's surviving
-        # hosts would hold when the failing rank drops out mid-window
-        meta = (self._engine.window_meta
-                if self._engine is not None else None)
-        self.flush()
-        if event.kind == "rank_loss":
-            prot, rep = recovery_mod.recover_from_rank_loss(
-                self.protector, self.prot, event.lost_rank,
-                freeze=self.freeze, resume=self.resume)
-        elif event.kind == "double_loss":
-            prot, rep = recovery_mod.recover_from_double_loss(
-                self.protector, self.prot, event.lost_ranks,
-                freeze=self.freeze, resume=self.resume)
-        elif event.kind == "scribble":
-            prot, rep = recovery_mod.recover_from_scribble(
-                self.protector, self.prot, event.locations,
-                freeze=self.freeze, resume=self.resume)
-        else:
-            raise ValueError(event.kind)
-        self.prot = prot
-        if self._engine is not None:
-            # failure suspicion collapses the deferred window toward 1
-            self._engine.report_pressure(True)
-            if meta is not None:
-                # bound the lost window from the replicated mask+digest:
-                # digest_verified means the recovered pool matches what
-                # the survivors recorded — no checkpoint + log replay
-                rep.window_bound = {
-                    "pending": meta["pending"],
-                    "dirty_pages": meta["dirty_pages"],
-                    "digest_verified": self._engine.verify_window_bound(
-                        self._est),
-                }
+        rep = self.pool.recover(Fault.from_event(event))
         return dataclasses.asdict(rep)
 
     # -- checkpoint / crash recovery ------------------------------------------------

@@ -1,0 +1,354 @@
+"""Pool facade (repro/pool.py): the pgl-style front door must be a pure
+router — facade-routed commit / scrub / recover bit-identical to direct
+`Protector` / `DeferredProtector` use across the mode ladder
+(MLP/MLPC/MLP2/MLPC2) and window sizes, transactions abort cleanly on a
+smashed canary, recovery flushes any open window first, `ProtectConfig`
+rejects nonsense combos with actionable errors, and the adaptive window
+regrows under sustained clean-commit load."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ProtectConfig
+from repro.core.epoch import DeferredProtector
+from repro.core.scrub import Scrubber
+from repro.core.txn import Mode, Protector
+from repro.pool import Fault, Pool
+from repro.runtime import failure
+from tests.conftest import small_state
+
+
+@pytest.fixture(scope="module")
+def setup(mesh42):
+    state, specs, shardings = small_state(mesh42)
+    return mesh42, state, specs, shardings
+
+
+def _assert_protection_equal(pa, pb, mode):
+    np.testing.assert_array_equal(np.asarray(pa.parity),
+                                  np.asarray(pb.parity))
+    np.testing.assert_array_equal(np.asarray(pa.digest),
+                                  np.asarray(pb.digest))
+    np.testing.assert_array_equal(np.asarray(pa.row), np.asarray(pb.row))
+    if mode.has_cksums:
+        np.testing.assert_array_equal(np.asarray(pa.cksums),
+                                      np.asarray(pb.cksums))
+    if mode.has_qparity:
+        np.testing.assert_array_equal(np.asarray(pa.qparity),
+                                      np.asarray(pb.qparity))
+
+
+def _evolve(cur):
+    return jax.tree.map(lambda x: (x * 1.01 + 0.003).astype(x.dtype), cur)
+
+
+# -- facade == direct engines, whole ladder x window sizes --------------------
+
+@pytest.mark.parametrize("base,red", [("mlp", 1), ("mlpc", 1),
+                                      ("mlp", 2), ("mlpc", 2)])
+@pytest.mark.parametrize("window", [1, 4])
+def test_pool_routes_bit_identical(setup, base, red, window):
+    """ISSUE acceptance: commits, scrubs and recoveries routed through
+    `Pool` must land the exact protection bits direct engine use lands —
+    digest at every step, full protection at epoch boundaries, and
+    bit-exact reconstruction (single loss via P; double loss via P+Q in
+    the redundancy=2 modes)."""
+    mesh, state, specs, _ = setup
+    cfg = ProtectConfig(mode=base, redundancy=red, window=window,
+                        block_words=64)
+    mode = cfg.resolved_mode
+    pool = Pool.open(state, specs, mesh=mesh, config=cfg, donate=False)
+    assert pool.mode is mode
+
+    # the direct engines, hand-wired exactly as the runtimes used to
+    p = Protector(mesh, jax.eval_shape(lambda: state), specs, mode=mode,
+                  block_words=64)
+    if window == 1:
+        direct = p.init(state)
+        commit = jax.jit(p.make_commit(), static_argnames=("canary_ok",))
+        eng = None
+    else:
+        eng = DeferredProtector(p, window=window, donate=False)
+        est = eng.init(state)
+
+    cur = state
+    for i in range(2 * window):
+        cur = _evolve(cur)
+        key = jax.random.PRNGKey(i)
+        ok_f = pool.commit(cur, rng_key=key, data_cursor=i)
+        if eng is None:
+            direct, ok_d = commit(direct, cur, rng_key=key, data_cursor=i)
+        else:
+            est, ok_d = eng.commit(est, cur, rng_key=key, data_cursor=i)
+            direct = est.prot
+        assert bool(ok_f) and bool(ok_d)
+        np.testing.assert_array_equal(np.asarray(pool.prot.digest),
+                                      np.asarray(direct.digest))
+        if (i + 1) % window == 0:
+            _assert_protection_equal(pool.prot, direct, mode)
+    np.testing.assert_array_equal(np.asarray(pool.prot.log.digest),
+                                  np.asarray(direct.log.digest))
+
+    # scrub: facade flushes + scrubs + repairs; direct does it by hand
+    rep_f = pool.scrub()
+    if eng is not None:
+        est = eng.flush_if_pending(est)
+        direct = est.prot
+    direct, rep_d = Scrubber(p, period=1).run(direct)
+    assert rep_f.checked and rep_d.checked
+    assert rep_f.bad_locations == rep_d.bad_locations == []
+    assert rep_f.parity_ok is rep_d.parity_ok is True
+    _assert_protection_equal(pool.prot, direct, mode)
+
+    # recovery: the same loss injected into both, reconstructed both ways
+    want = np.asarray(pool.state["w1"]).copy()
+    if mode.has_qparity:
+        fault = Fault.double_loss(1, 3)
+        bad_f, _ = failure.inject_double_rank_loss(p, pool.prot, (1, 3))
+        bad_d, _ = failure.inject_double_rank_loss(p, direct, (1, 3))
+    else:
+        fault = Fault.rank_loss(2)
+        bad_f, _ = failure.inject_rank_loss(p, pool.prot, 2)
+        bad_d, _ = failure.inject_rank_loss(p, direct, 2)
+    if pool.engine is not None:
+        pool._est = dataclasses.replace(pool._est, prot=bad_f)
+    else:
+        pool._prot = bad_f
+    rep = pool.recover(fault)
+    if mode.has_qparity:
+        direct, ok_d = p.recover_two(bad_d, 1, 3)
+    else:
+        direct, ok_d = p.recover_rank(bad_d, 2)
+    assert rep.verified == bool(jax.device_get(ok_d))
+    assert rep.verified or not mode.has_cksums
+    np.testing.assert_array_equal(np.asarray(pool.state["w1"]), want)
+    np.testing.assert_array_equal(np.asarray(pool.state["w1"]),
+                                  np.asarray(direct.state["w1"]))
+    np.testing.assert_array_equal(np.asarray(pool.prot.row),
+                                  np.asarray(direct.row))
+
+
+def test_pool_commit_is_the_direct_program(setup):
+    """The facade adds zero compiled bytes: `pool.commit` routes through
+    the Protector's cached jit, whose lowered cost equals a hand-built
+    `jax.jit(p.make_commit())` exactly."""
+    mesh, state, specs, _ = setup
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", block_words=64),
+                     donate=False)
+    new = _evolve(state)
+    key = jax.random.PRNGKey(0)
+
+    def bytes_of(fn):
+        cost = fn.lower(pool.prot, new, rng_key=key).compile() \
+                 .cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return float(cost.get("bytes accessed", 0.0))
+
+    direct = jax.jit(pool.protector.make_commit(),
+                     static_argnames=("canary_ok",))
+    assert bytes_of(pool.commit_program()) == bytes_of(direct)
+    # and the facade's cached program IS the protector's cached program
+    assert pool.commit_program() is pool.protector.commit_program()
+
+
+# -- transactions --------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [1, 4])
+def test_transaction_abort_on_canary(setup, window):
+    """A staged buffer whose guard page was overrun must abort the
+    transaction: no state movement, no step advance, for both engines
+    (the deferred engine's abort is the compiled no-op variant)."""
+    mesh, state, specs, _ = setup
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", block_words=64,
+                                          window=window),
+                     donate=False)
+    cur = _evolve(state)
+    with pool.transaction(rng_key=jax.random.PRNGKey(0)) as tx:
+        tx.stage(cur)
+    assert tx.committed and tx.ok and pool.step == 1
+
+    before = np.asarray(pool.state["w1"]).copy()
+    with pool.transaction() as tx:
+        tx.watch(failure.smashed_canary_buffer(1024))
+        tx.stage(jax.tree.map(jnp.zeros_like, cur))
+    assert tx.aborted and not tx.ok and not tx.committed
+    assert pool.step == 1
+    np.testing.assert_array_equal(np.asarray(pool.state["w1"]), before)
+
+    # a clean guarded buffer commits
+    with pool.transaction(rng_key=jax.random.PRNGKey(1)) as tx:
+        tx.guard(jnp.zeros((256,), jnp.uint32))
+        tx.stage(_evolve(cur))
+    assert tx.committed and pool.step == 2
+
+
+def test_transaction_exception_aborts(setup):
+    mesh, state, specs, _ = setup
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", block_words=64),
+                     donate=False)
+    with pytest.raises(RuntimeError, match="kernel exploded"):
+        with pool.transaction() as tx:
+            tx.stage(_evolve(state))
+            raise RuntimeError("kernel exploded")
+    assert tx.aborted and not tx.committed and pool.step == 0
+
+
+# -- recovery flushes the open window ------------------------------------------
+
+def test_recover_flushes_open_window(setup):
+    """A rank loss strictly mid-window: `pool.recover` must flush first
+    (the cached row never saw the corruption), reconstruct bit-exactly,
+    and collapse the adaptive window to 1."""
+    mesh, state, specs, _ = setup
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", block_words=64,
+                                          window=4),
+                     donate=False)
+    cur = state
+    for i in range(2):                     # 2 of 4: strictly mid-window
+        cur = _evolve(cur)
+        pool.commit(cur, rng_key=jax.random.PRNGKey(i))
+    assert pool.engine.needs_flush
+    want = np.asarray(pool.state["w1"]).copy()
+    bad, event = failure.inject_rank_loss(pool.protector, pool.prot,
+                                          rank=2)
+    pool._est = dataclasses.replace(pool._est, prot=bad)
+    rep = pool.recover(Fault.from_event(event))
+    assert not pool.engine.needs_flush, "recover must have flushed"
+    assert rep.verified
+    assert pool.engine.window == 1, "failure suspicion collapses W"
+    np.testing.assert_array_equal(np.asarray(pool.state["w1"]), want)
+    # the refreshed redundancy is current: a fresh rebuild matches
+    fresh = pool.protector.init(pool.state)
+    _assert_protection_equal(fresh, pool.prot, Mode.MLPC)
+
+
+# -- config validation ---------------------------------------------------------
+
+def test_protect_config_rejects_nonsense_combos():
+    with pytest.raises(ValueError, match="redundancy=2"):
+        ProtectConfig(mode="replica", redundancy=2)
+    with pytest.raises(ValueError, match="window"):
+        ProtectConfig(mode="replica", window=4)
+    with pytest.raises(ValueError, match="window"):
+        ProtectConfig(mode="none", window=16)
+    with pytest.raises(ValueError, match="window"):
+        ProtectConfig(mode="ml", window=2)
+    with pytest.raises(ValueError, match="redundancy"):
+        ProtectConfig(mode="mlpc", redundancy=3)
+    with pytest.raises(ValueError, match="window_growth_commits"):
+        ProtectConfig(mode="mlpc", window_growth_commits=-1)
+    with pytest.raises(ValueError, match="not a protection"):
+        ProtectConfig(mode="mlcp")
+
+
+def test_protect_config_resolves_modes():
+    assert ProtectConfig(mode="mlpc").resolved_mode is Mode.MLPC
+    assert ProtectConfig(mode="mlp", redundancy=2).resolved_mode \
+        is Mode.MLP2
+    assert ProtectConfig(mode="mlpc", redundancy=2).resolved_mode \
+        is Mode.MLPC2
+    assert ProtectConfig(mode="mlpc2").resolved_mode is Mode.MLPC2
+    assert ProtectConfig(mode="mlpc2", redundancy=2).resolved_mode \
+        is Mode.MLPC2
+
+
+# -- adaptive window: growth under sustained clean-commit load -----------------
+
+def test_window_regrows_under_clean_commit_load(setup):
+    """ISSUE satellite: after suspicion collapses W to 1, N consecutive
+    clean commits (not only a clean scrub) must double it back toward
+    the ceiling."""
+    mesh, state, specs, _ = setup
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", block_words=64,
+                                          window=8,
+                                          window_growth_commits=3),
+                     donate=False)
+    eng = pool.engine
+    eng.report_pressure(True)              # failure suspicion: W -> 1
+    assert eng.window == 1
+    cur = state
+    seen = [1]
+    for i in range(12):
+        cur = _evolve(cur)
+        pool.commit(cur, rng_key=jax.random.PRNGKey(i))
+        # growth may only land at an epoch boundary — never stretch an
+        # epoch that opened under a smaller window
+        if seen[-1] != eng.window:
+            assert not eng.needs_flush, (i, seen, eng.window)
+        seen.append(eng.window)
+    assert eng.window == 8, seen           # 1 -> 2 -> 4 -> 8 under load
+    assert seen == sorted(seen) and set(seen) == {1, 2, 4, 8}, seen
+
+    # a dirty commit resets the streak: no growth past the ceiling reset
+    eng.report_pressure(True)          # suspicion collapses W...
+    pool.scrubber.note_suspect()       # ...and resets the clean streak
+    for i in range(2):
+        cur = _evolve(cur)
+        pool.commit(cur, rng_key=jax.random.PRNGKey(20 + i))
+    pool.commit(_evolve(cur), canary_ok=False)     # aborted commit
+    assert eng.window == 1, "streak must reset on a dirty commit"
+
+
+# -- rescale -------------------------------------------------------------------
+
+def test_pool_rescale_mid_window(setup, mesh81):
+    """`pool.rescale` must flush the open window, move the state
+    bit-exactly, rebuild P and Q for the new zone geometry (G: 4 -> 8)
+    and carry the step counter as a host value."""
+    mesh, state, specs, _ = setup
+    state = jax.tree.map(jnp.copy, state)
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", redundancy=2,
+                                          block_words=64, window=3),
+                     donate=False)
+    cur = state
+    for i in range(2):                     # strictly mid-window
+        cur = _evolve(cur)
+        pool.commit(cur, rng_key=jax.random.PRNGKey(i))
+    assert pool.engine.needs_flush
+    moved = pool.rescale(mesh81)
+    assert not pool.engine.needs_flush, "rescale must have flushed"
+    assert moved.protector.group_size == 8
+    assert moved.step == 2
+    for k, v in cur.items():
+        np.testing.assert_array_equal(np.asarray(moved.state[k]),
+                                      np.asarray(v))
+    fresh = moved.protector.init(moved.state)
+    _assert_protection_equal(fresh, moved.prot, Mode.MLPC2)
+    # the new zone still solves a double loss
+    want = np.asarray(moved.state["w1"]).copy()
+    bad, ev = failure.inject_double_rank_loss(moved.protector, moved.prot,
+                                              (2, 5))
+    moved._est = dataclasses.replace(moved._est, prot=bad)
+    rep = moved.recover(Fault.double_loss(*ev.lost_ranks))
+    assert rep.verified
+    np.testing.assert_array_equal(np.asarray(moved.state["w1"]), want)
+
+
+def test_pool_rescale_reresolves_footprint_callables(setup, mesh81):
+    """Callable footprint args (Server's decode sizing) are functions of
+    the zone layout, which changes with G — rescale must re-resolve them
+    against the NEW mesh's layout, not reuse the old resolution."""
+    mesh, state, specs, _ = setup
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", block_words=64,
+                                          window=2),
+                     dirty_leaf_idx=lambda lo: range(len(lo.slots)),
+                     dirty_capacity=lambda lo: lo.n_blocks,
+                     donate=False)
+    assert pool.engine.dirty_capacity == pool.protector.layout.n_blocks
+    moved = pool.rescale(mesh81)
+    new_nb = moved.protector.layout.n_blocks
+    assert new_nb != pool.protector.layout.n_blocks, \
+        "test needs geometries whose page counts differ"
+    assert moved.engine.dirty_capacity == new_nb, \
+        "capacity callable must re-resolve against the new layout"
