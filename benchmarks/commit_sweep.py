@@ -55,9 +55,14 @@ def make_unfused_commit(p: Protector, dirty_pages=None,
                         verify_old: bool = False):
     """The seed commit pipeline: independent sweeps, no row cache."""
     lo, ax, mode = p.layout, p.data_axis, p.mode
+    # the seed engine predates the syndrome stack and maintains S_0 only
+    assert p.redundancy == 1, \
+        "the unfused baseline models the single-parity seed engine"
 
-    def _protect(state_old, parity, cksums, state_new, canary_ok):
-        parity_l = p._unpack(parity) if parity is not None else None
+    def _protect(state_old, synd, cksums, state_new, canary_ok):
+        # the seed engine predates the syndrome stack: it maintains the
+        # single XOR parity, i.e. the stack's S_0 plane (r = 1 here)
+        parity_l = p._unpack(synd)[0] if synd is not None else None
         cksums_l = p._unpack(cksums) if cksums is not None else None
         row_new = layout_mod.flatten_row(lo, state_new)
         ok = canary_ok
@@ -74,7 +79,8 @@ def make_unfused_commit(p: Protector, dirty_pages=None,
                 row_old, row_new, parity_l, lo, ax,
                 dirty_page_idx=dirty_pages,
                 threshold_fraction=p.hybrid_threshold)
-            outs["parity"] = p._pack(jnp.where(ok, new_parity, parity_l))
+            outs["synd"] = p._pack(
+                jnp.where(ok, new_parity, parity_l)[None])
         if mode.has_cksums:
             if dirty_pages is not None and len(dirty_pages) < lo.n_blocks:
                 idx = jnp.asarray(np.asarray(dirty_pages), jnp.int32)
@@ -92,7 +98,7 @@ def make_unfused_commit(p: Protector, dirty_pages=None,
 
     out_specs = {"ok": P()}
     if mode.has_parity:
-        out_specs["parity"] = p._zone_spec
+        out_specs["synd"] = p._zone_spec
         out_specs["digest"] = p._zone_spec
     if mode.has_cksums:
         out_specs["cksums"] = p._zone_spec
@@ -107,7 +113,7 @@ def make_unfused_commit(p: Protector, dirty_pages=None,
                canary_ok=True):
         step = prot.step + U32(1)
         canary_ok = jnp.asarray(canary_ok, bool)
-        outs = protect(prot.state, prot.parity, prot.cksums, state_new,
+        outs = protect(prot.state, prot.synd, prot.cksums, state_new,
                        canary_ok)
         ok = outs["ok"]
         new_digest = outs.get("digest", prot.digest)
@@ -120,7 +126,7 @@ def make_unfused_commit(p: Protector, dirty_pages=None,
             log = tree_select(ok, redolog.commit_mark(log, step), log)
         new_state = tree_select(ok, state_new, prot.state)
         return ProtectedState(
-            state=new_state, parity=outs.get("parity", prot.parity),
+            state=new_state, synd=outs.get("synd", prot.synd),
             cksums=outs.get("cksums", prot.cksums), digest=new_digest,
             replica=prot.replica, log=log,
             step=jnp.where(ok, step, prot.step), row=prot.row), ok

@@ -65,6 +65,11 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
         payload["deferred"] = deferred_result["rows"]
     if recovery_result and recovery_result.get("double_loss"):
         payload["recovery"] = {"double_loss": recovery_result["double_loss"]}
+    if recovery_result and recovery_result.get("rs"):
+        # §rs: the generalized Reed-Solomon sweep — e = r losses per
+        # stack height, wall + exactness + storage ratio (gate:
+        # record-presence, syndrome_r_over_p <= r, wall pathology)
+        payload["rs"] = recovery_result["rs"]
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"commit benchmark record -> {path}")

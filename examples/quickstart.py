@@ -12,7 +12,8 @@ Pangolin's three-call API (paper Listing 2):
     scrubbing thread    ->  pool.scrub() / pool.maybe_scrub()
 
 `ProtectConfig` is the single knob: mode ladder (none < ml < mlp < mlpc,
-plus replica and the dual-parity levels via redundancy=2), the deferred
+plus replica), the Reed-Solomon syndrome stack height (redundancy r in
+1..4 — any e <= r simultaneous rank losses reconstruct), the deferred
 window W, and the scrub cadence.  This demo: build a pool over a sharded
 pytree, commit a transactional update, lose a rank, recover it online,
 scribble a page, scrub-detect + repair it, and abort a transaction whose

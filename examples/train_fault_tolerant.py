@@ -41,6 +41,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--mode", default="mlpc")
+    ap.add_argument("--redundancy", type=int, default=1,
+                    choices=[1, 2, 3],
+                    help="syndrome stack height r (losses survived per "
+                         "4-rank zone; r <= 3 here since G = 4)")
     ap.add_argument("--d-model", type=int, default=512)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
@@ -64,7 +68,8 @@ def main():
     trainer = Trainer(
         cfg, TrainConfig(learning_rate=1e-3, warmup_steps=20,
                          total_steps=args.steps),
-        ProtectConfig(mode=args.mode, scrub_period=50),
+        ProtectConfig(mode=args.mode, redundancy=args.redundancy,
+                      scrub_period=50),
         mesh, seq_len=args.seq_len, global_batch=args.batch,
         checkpoint_dir=args.ckpt_dir, seed=0)
     trainer.initialize()
@@ -92,11 +97,22 @@ def main():
             print(f"[{step}] scrub: bad={rep.bad_locations} "
                   f"repaired={rep.repaired} verified={rep.repair_ok}")
         elif fault == "rank_loss":
-            trainer.prot, ev = failure.inject_rank_loss(
-                trainer.protector, trainer.prot, rank=2)
-            rep = trainer.on_failure(ev)
-            print(f"[{step}] rank 2 lost -> online recovery "
-                  f"verified={rep['verified']}")
+            r = trainer.protector.redundancy
+            if r >= 2:
+                # a syndrome stack survives r simultaneous losses: take
+                # down r ranks at once and solve them all
+                dead = tuple(range(r))
+                trainer.prot, ev = failure.inject_multi_rank_loss(
+                    trainer.protector, trainer.prot, dead)
+                rep = trainer.on_failure(ev)
+                print(f"[{step}] ranks {list(dead)} lost -> online "
+                      f"e={r}-erasure recovery verified={rep['verified']}")
+            else:
+                trainer.prot, ev = failure.inject_rank_loss(
+                    trainer.protector, trainer.prot, rank=2)
+                rep = trainer.on_failure(ev)
+                print(f"[{step}] rank 2 lost -> online recovery "
+                      f"verified={rep['verified']}")
         elif fault == "canary":
             out = trainer.step(canary_ok=False)
             print(f"[{step}] canary smash -> commit aborted "

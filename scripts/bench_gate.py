@@ -124,6 +124,28 @@ def check(fresh: dict, base: dict, wall_tol: float,
             bad.append(f"recovery.double_loss{key}: double_recover_ms "
                        f"{row['double_recover_ms']} vs baseline "
                        f"{ref['double_recover_ms']} (> {1 + wall_tol:.1f}x)")
+
+    # -- §rs: generalized Reed-Solomon sweep -----------------------------------
+    frs = _index(fresh.get("rs", []), ("r",))
+    brs = _index(base.get("rs", []), ("r",))
+    if brs and not frs:
+        bad.append("rs: record missing from fresh run (the r-sweep is no "
+                   "longer measured)")
+    for key, row in frs.items():
+        # structural: the stack's storage tax is exactly r parity rows —
+        # anything above r means a syndrome buffer grew beyond one
+        # seg_words row per rank
+        if row["syndrome_r_over_p"] > row["r"] + 1e-9:
+            bad.append(f"rs{key}: syndrome_r_over_p "
+                       f"{row['syndrome_r_over_p']} > r={row['r']} — the "
+                       "stack blew past its r-parity-rows budget")
+        ref = brs.get(key)
+        # wall: pathology catch-all only (same rule as the other walls)
+        if ref and (row["recover_ms"]
+                    > ref["recover_ms"] * (1 + wall_tol)):
+            bad.append(f"rs{key}: recover_ms {row['recover_ms']} vs "
+                       f"baseline {ref['recover_ms']} "
+                       f"(> {1 + wall_tol:.1f}x)")
     return bad
 
 
@@ -154,6 +176,7 @@ def main():
           f"{len(fresh.get('ab_interleaved', []))} A/B cells, "
           f"{len(fresh.get('recovery', {}).get('double_loss', []))} "
           "double-loss cells, "
+          f"{len(fresh.get('rs', []))} rs cells, "
           f"{len(fresh.get('facade', []))} facade cells, "
           f"wall tol {args.wall_tol}, bytes tol {args.bytes_tol})")
     return 0

@@ -26,6 +26,8 @@ echo "== examples: Pool facade (quickstart + --smoke passes) =="
 python examples/quickstart.py
 python examples/serve_protected.py --smoke
 python examples/train_fault_tolerant.py --smoke
+# one r=3 cell: triple-loss survival through the Reed-Solomon stack
+python examples/train_fault_tolerant.py --smoke --redundancy 3
 python examples/elastic_rescale.py --smoke
 
 if [[ "${1:-}" != "--no-bench" ]]; then

@@ -126,8 +126,8 @@ _PROTECT_MODES = ("none", "ml", "mlp", "mlpc", "replica", "mlp2", "mlpc2")
 @dataclasses.dataclass(frozen=True)
 class ProtectConfig:
     mode: str = "mlpc"                # none | ml | mlp | mlpc | replica
-                                      # (mlp2/mlpc2 = dual-parity levels,
-                                      # normally reached via redundancy=2)
+                                      # (mlp2/mlpc2 = legacy dual-parity
+                                      # aliases for redundancy=2)
     block_words: int = 1024
     hybrid_threshold: float = 0.5
     scrub_period: int = 0             # transactions between scrubs; 0 = off
@@ -136,21 +136,36 @@ class ProtectConfig:
                                       # epoch t's protection program
     window: int = 1                   # deferred-epoch window W; 1 = the
                                       # synchronous per-commit engine
-    redundancy: int = 1               # simultaneous rank losses survived:
-                                      # 1 = XOR parity P, 2 = P + GF(2^32)
-                                      # Q syndrome (two-rank reconstruction)
+    redundancy: int = 1               # syndrome stack height r (1..4) =
+                                      # simultaneous rank losses survived:
+                                      # S_0 = XOR parity P, S_1 = GF(2^32)
+                                      # Q, S_2/S_3 = higher Vandermonde
+                                      # rows (any e <= r losses solve)
     window_growth_commits: int = 32   # consecutive clean commits before a
                                       # shrunken adaptive window regrows
                                       # under load (0 = grow on clean
                                       # scrubs only)
+    full_scrub_every: int = 1         # 1 = every due scrub is global; N>1
+                                      # runs the rank-local syndrome
+                                      # pre-check on due scrubs and pays
+                                      # for the global collective only
+                                      # every Nth (or when the pre-check
+                                      # flags the pool suspect)
 
     @property
     def resolved_mode(self):
-        """The effective protection Mode — (mode, redundancy) folded onto
-        the ladder (mlp + redundancy=2 -> mlp2, ...).  This is the single
-        source of truth; `core.txn.resolve_mode` is an internal detail."""
-        from repro.core.txn import resolve_mode
-        return resolve_mode(self.mode, self.redundancy)
+        """The effective base protection Mode (aliases folded: mlp2 ->
+        MLP).  This is the single source of truth together with
+        `resolved_redundancy`; `core.txn.resolved_mode` is the resolver."""
+        from repro.core.txn import resolved_mode
+        return resolved_mode(self.mode, self.redundancy)[0]
+
+    @property
+    def resolved_redundancy(self) -> int:
+        """The effective syndrome stack height (aliases folded: mlp2 ->
+        max(redundancy, 2))."""
+        from repro.core.txn import resolved_mode
+        return resolved_mode(self.mode, self.redundancy)[1]
 
     def __post_init__(self):
         if self.mode not in _PROTECT_MODES:
@@ -169,30 +184,43 @@ class ProtectConfig:
                 f"ProtectConfig.scrub_period={self.scrub_period} — use 0 "
                 "to disable scrubbing or a positive transaction count "
                 "between scrubs")
-        if self.redundancy not in (1, 2):
+        # single source of truth for the stack-height bound (core.txn
+        # enforces the same limit inside resolved_mode); imported lazily
+        # so building a config never drags jax in before XLA flags land
+        from repro.core.txn import MAX_REDUNDANCY
+        if not 1 <= self.redundancy <= MAX_REDUNDANCY:
             raise ValueError(
-                f"ProtectConfig.redundancy={self.redundancy} — a zone "
-                "holds at most two syndromes: 1 (XOR parity, one rank "
-                "loss) or 2 (P + GF(2^32) Q, any two rank losses)")
-        if self.redundancy == 2 and self.mode not in ("mlp", "mlpc",
-                                                      "mlp2", "mlpc2"):
+                f"ProtectConfig.redundancy={self.redundancy} — the "
+                f"syndrome stack holds 1 to {MAX_REDUNDANCY} rows "
+                "(1 = XOR parity P, 2 adds the GF(2^32) Q row, higher "
+                "values add higher Vandermonde rows); note it must also "
+                "stay <= num_ranks - 1 on the zone, which the Protector "
+                "checks against the mesh")
+        if self.redundancy > 1 and self.mode not in ("mlp", "mlpc",
+                                                     "mlp2", "mlpc2"):
             raise ValueError(
-                f"ProtectConfig.redundancy=2 with mode={self.mode!r} — "
-                "the Q syndrome extends parity, so redundancy=2 requires "
-                "a parity mode (mlp or mlpc)")
+                f"ProtectConfig.redundancy={self.redundancy} with "
+                f"mode={self.mode!r} — extra syndromes extend parity, so "
+                "redundancy>1 requires a parity mode (mlp or mlpc)")
         if self.window > 1 and self.mode in ("none", "ml", "replica"):
             raise ValueError(
                 f"ProtectConfig.window={self.window} with "
                 f"mode={self.mode!r} — the deferred-epoch window batches "
                 "parity/checksum refreshes, which this mode does not "
-                "maintain; use a parity/checksum mode (mlp, mlpc, mlp2, "
-                "mlpc2) or window=1")
+                "maintain; use a parity/checksum mode (mlp or mlpc) or "
+                "window=1")
         if self.window_growth_commits < 0:
             raise ValueError(
                 f"ProtectConfig.window_growth_commits="
                 f"{self.window_growth_commits} — use 0 to regrow the "
                 "adaptive window on clean scrubs only, or a positive "
                 "count of consecutive clean commits")
+        if self.full_scrub_every < 1:
+            raise ValueError(
+                f"ProtectConfig.full_scrub_every={self.full_scrub_every} "
+                "— 1 makes every due scrub global; N > 1 runs the cheap "
+                "rank-local pre-check and goes global every Nth scrub "
+                "(or as soon as the pre-check flags corruption)")
         if self.block_words < 1:
             raise ValueError(
                 f"ProtectConfig.block_words={self.block_words} — the "

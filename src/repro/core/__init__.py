@@ -1,10 +1,10 @@
 """Pangolin-JAX core: the paper's contribution as composable JAX modules."""
 
 from repro.core.txn import (  # noqa: F401
-    Mode, ProtectedState, Protector, resolve_mode)
+    Mode, ProtectedState, Protector, resolved_mode)
 from repro.core.scrub import Scrubber, ScrubReport  # noqa: F401
 from repro.core.recovery import (  # noqa: F401
-    RecoveryReport, recover_from_double_loss, recover_from_rank_loss,
-    recover_from_scribble)
+    RecoveryReport, recover_from_double_loss, recover_from_e_loss,
+    recover_from_rank_loss, recover_from_scribble)
 from repro.core import (  # noqa: F401
     checksum, gf, layout, microbuffer, parity, redolog)

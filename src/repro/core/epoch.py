@@ -410,11 +410,10 @@ class DeferredProtector:
                                      outs["digest"].reshape(-1, 2)[0])
                 log = redolog.commit_mark(log, step)
             new_prot = ProtectedState(
-                state=state_new, parity=prot.parity, cksums=prot.cksums,
+                state=state_new, synd=prot.synd, cksums=prot.cksums,
                 digest=outs["digest"], replica=prot.replica, log=log,
                 step=step,
-                row=prot.row if patch else outs["row"],
-                qparity=prot.qparity)
+                row=prot.row if patch else outs["row"])
             return (new_prot, outs.get("dirty", dirty),
                     pending + U32(1), jnp.ones((), bool))
 
@@ -434,19 +433,19 @@ class DeferredProtector:
         """
         p, lo = self.p, self.p.layout
         mode, ax, bw = self.p.mode, self.p.data_axis, self.p.layout.block_words
+        r = self.p.redundancy
         nb = lo.n_blocks
         kf = self.flush_capacity
         fpatch = self.flush_patch
         patch = self.patch
         dirty_leaves = self.dirty_leaf_idx
 
-        def _flush(row_cache, parity, qparity, cksums, state, dirty):
+        def _flush(row_cache, synd, cksums, state, dirty):
             base = p._unpack(row_cache)
-            parity_l = p._unpack(parity) if parity is not None else None
-            qparity_l = p._unpack(qparity) if qparity is not None else None
+            synd_l = p._unpack(synd) if synd is not None else None
             cksums_l = p._unpack(cksums) if cksums is not None else None
-            coeff = (gf.rank_coeff(p.group_size, ax)
-                     if mode.has_qparity else None)
+            coeffs = (gf.rank_syndrome_coeffs(p.group_size, r, ax)
+                      if (mode.has_parity and r > 1) else None)
             outs = {}
             if patch:
                 row = layout_mod.update_row(lo, base, state, dirty_leaves)
@@ -460,46 +459,33 @@ class DeferredProtector:
                 g = jnp.minimum(idx, nb - 1)
                 old_p = parity_mod.gather_pages(base, g, bw)
                 new_p = parity_mod.gather_pages(row, g, bw)
-                qdelta_p = None
                 if mode.has_cksums:
-                    if mode.has_qparity:
-                        # Q rides the same telescoped epoch delta: the
-                        # fused PQ sweep weights it by g^me in VMEM
-                        delta_p, qdelta_p, fresh = kops.fused_commit_pq(
-                            old_p, new_p, coeff)
-                    else:
-                        delta_p, fresh = kops.fused_commit(old_p, new_p)
+                    # every syndrome rides the same telescoped epoch
+                    # delta: the fused sweep weights it by g^(k·me) in
+                    # VMEM (r=1 routes to the single-parity kernel)
+                    sdelta_p, fresh = kops.fused_commit_s(old_p, new_p,
+                                                          coeffs)
                     sidx = jnp.where(valid, g, nb)
                     outs["cksums"] = p._pack(
                         cksums_l.at[sidx].set(fresh, mode="drop"))
                 else:
                     delta_p = kops.xor_delta(old_p, new_p)
-                    if mode.has_qparity:
-                        qdelta_p = kops.gf_scale(delta_p, coeff)
+                    sdelta_p = kops.syndrome_scale(delta_p, coeffs)
                 if mode.has_parity:
-                    delta_p = jnp.where(valid[:, None], delta_p, 0)
+                    sdelta_p = jnp.where(valid[None, :, None], sdelta_p, 0)
                     # fill slots must route to the out-of-range sentinel,
                     # NOT the clamped page: a clamped fill would collide
                     # with a genuinely-dirty last page and its zero-delta
                     # scatter entry could overwrite the real patch
-                    outs["parity"] = p._pack(parity_mod.patch_parity_delta(
-                        parity_l, delta_p, jnp.where(valid, g, nb), lo,
+                    outs["synd"] = p._pack(parity_mod.patch_syndrome_delta(
+                        synd_l, sdelta_p, jnp.where(valid, g, nb), lo,
                         ax))
-                if mode.has_qparity:
-                    qdelta_p = jnp.where(valid[:, None], qdelta_p, 0)
-                    outs["qparity"] = p._pack(
-                        parity_mod.patch_qparity_delta(
-                            qparity_l, qdelta_p, jnp.where(valid, g, nb),
-                            lo, ax))
             else:
-                # bulk: parity rebuilt from the current row — equal to
-                # parity_start ^ rs(telescoped delta) by XOR linearity
+                # bulk: the stack rebuilt from the current row — equal to
+                # S_start ^ rs(telescoped weighted delta) by XOR linearity
                 if mode.has_parity:
-                    outs["parity"] = p._pack(
-                        parity_mod.build_parity(row, ax))
-                if mode.has_qparity:
-                    outs["qparity"] = p._pack(
-                        parity_mod.build_qparity(row, ax))
+                    outs["synd"] = p._pack(
+                        parity_mod.build_syndromes(row, r, ax))
                 if mode.has_cksums:
                     outs["cksums"] = p._pack(kops.fletcher_blocks(
                         parity_mod.page_view(row, bw)))
@@ -510,24 +496,21 @@ class DeferredProtector:
         z = p._zone_spec
         out_specs = {}
         if mode.has_parity:
-            out_specs["parity"] = z
-        if mode.has_qparity:
-            out_specs["qparity"] = z
+            out_specs["synd"] = z
         if mode.has_cksums:
             out_specs["cksums"] = z
         if patch:
             out_specs["row"] = z
             out_specs["dirty"] = z
-        fn = p._smap(_flush, in_specs=(z, z, z, z, p.state_specs, z),
+        fn = p._smap(_flush, in_specs=(z, z, z, p.state_specs, z),
                      out_specs=out_specs)
 
         def flush(est: EpochState) -> EpochState:
             prot = est.prot
-            outs = fn(prot.row, prot.parity, prot.qparity, prot.cksums,
+            outs = fn(prot.row, prot.synd, prot.cksums,
                       prot.state, est.dirty)
             new_prot = dataclasses.replace(
-                prot, parity=outs.get("parity", prot.parity),
-                qparity=outs.get("qparity", prot.qparity),
+                prot, synd=outs.get("synd", prot.synd),
                 cksums=outs.get("cksums", prot.cksums),
                 row=outs.get("row", prot.row))
             return EpochState(prot=new_prot, dirty=outs.get("dirty"),

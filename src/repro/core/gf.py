@@ -1,22 +1,23 @@
-"""GF(2^32) arithmetic for the dual-parity (P+Q) erasure code.
+"""GF(2^32) arithmetic for the generalized Reed-Solomon syndrome stack.
 
 Pangolin's zone holds a single XOR parity row, so a zone tolerates exactly
-one concurrent failure (§3.1).  The second syndrome Q extends the scheme to
-any TWO simultaneous rank losses, Reed-Solomon style, while staying linear
-over XOR — so every piece of the existing parity machinery (delta
+one concurrent failure (§3.1).  The syndrome stack extends the scheme to
+any r <= 4 simultaneous rank losses, Reed-Solomon style, while staying
+linear over XOR — so every piece of the existing parity machinery (delta
 telescoping, patch scatters, deferred-epoch batching) applies verbatim:
 
-    P = row_0 ^ row_1 ^ ... ^ row_{G-1}
-    Q = g^0·row_0 ^ g^1·row_1 ^ ... ^ g^{G-1}·row_{G-1}
+    S_k = g^(k·0)·row_0 ^ g^(k·1)·row_1 ^ ... ^ g^(k·(G-1))·row_{G-1}
 
-with multiplication in GF(2^32) over the word lanes.  Losing ranks a < b
-leaves the 2x2 Vandermonde system
+for k = 0..r-1, with multiplication in GF(2^32) over the word lanes
+(S_0 is classic XOR parity P, S_1 the former Q).  Losing e <= r ranks
+a_0 < ... < a_{e-1} leaves the e x e Vandermonde system
 
-    P ^ S_p = A ^ B              S_p, S_q = survivor syndromes
-    Q ^ S_q = g^a·A ^ g^b·B      A, B    = the lost rows
+    S_k ^ s_k = XOR_j g^(k·a_j) · X_j          k = 0..e-1
 
-whose determinant g^a ^ g^b is nonzero for a != b because g is a
-*primitive* element — so the solve below always succeeds.
+(s_k = survivor syndromes, X_j = the lost rows) whose matrix
+V[k][j] = g^(k·a_j) is Vandermonde in the distinct nonzero points g^a_j,
+hence invertible for any distinct ranks because g is a *primitive*
+element — so the solve below always succeeds for any e <= r <= G-1.
 
 Field choice: the word size IS the lane width (u32), so parity words and
 Q words are the same shape and every XOR kernel is reusable.  The reduction
@@ -111,7 +112,7 @@ def pow_g_int(k: int) -> int:
 
 @functools.lru_cache(maxsize=None)
 def pow_g_table(g: int) -> tuple:
-    """(g^0, ..., g^{G-1}) — per-rank Q coefficients for a zone of size G."""
+    """(g^0, ..., g^{G-1}) — per-rank S_1 coefficients for a zone of size G."""
     out, cur = [], 1
     for _ in range(g):
         out.append(cur)
@@ -124,11 +125,72 @@ def pow_g_array(g: int) -> np.ndarray:
     return np.asarray(pow_g_table(g), np.uint32)
 
 
+@functools.lru_cache(maxsize=None)
+def syndrome_table(g: int, r: int) -> tuple:
+    """Per-rank syndrome coefficients for a zone of size G, r syndromes.
+
+    Entry [i][k] = g^(k·i): rank i's weight in syndrome S_k.  Column 0 is
+    all-ones (S_0 = XOR parity); column 1 is `pow_g_table` (the former Q).
+    """
+    return tuple(tuple(pow_g_int(k * i) for k in range(r))
+                 for i in range(g))
+
+
+def syndrome_array(g: int, r: int) -> np.ndarray:
+    """`syndrome_table` as a (G, r) u32 ndarray (axis_index lookup)."""
+    return np.asarray(syndrome_table(g, r), np.uint32)
+
+
 def solve_two_int(p: int, q: int, rank_a: int, rank_b: int) -> tuple:
     """Host oracle for the 2x2 Vandermonde solve (tests)."""
-    ga, gb = pow_g_int(rank_a), pow_g_int(rank_b)
-    b = mul_int(q ^ mul_int(ga, p), inv_int(ga ^ gb))
-    return p ^ b, b
+    return tuple(solve_e_int((p, q), (rank_a, rank_b)))
+
+
+# ---------------------------------------------------------------------------
+# general e x e Vandermonde solve (host-exact constants)
+# ---------------------------------------------------------------------------
+
+def vandermonde_int(lost_ranks) -> tuple:
+    """V[k][j] = g^(k·a_j) for the erased ranks a_j (rows = syndromes)."""
+    ranks = tuple(int(a) for a in lost_ranks)
+    e = len(ranks)
+    return tuple(tuple(pow_g_int(k * a) for a in ranks) for k in range(e))
+
+
+@functools.lru_cache(maxsize=None)
+def inv_vandermonde_int(lost_ranks: tuple) -> tuple:
+    """Exact inverse of the erasure Vandermonde matrix, host integers.
+
+    Gauss-Jordan over GF(2^32): addition is XOR, so elimination is
+    row_i ^= factor · row_pivot with exact `mul_int`/`inv_int`.  The
+    matrix is Vandermonde in distinct nonzero points g^a_j (g primitive,
+    a_j distinct), so a nonzero pivot always exists and the inverse is
+    exact — no numerics anywhere.
+    """
+    ranks = tuple(int(a) for a in lost_ranks)
+    assert len(set(ranks)) == len(ranks), (
+        f"erased ranks must be distinct, got {ranks}")
+    e = len(ranks)
+    m = [list(row) + [1 if i == k else 0 for i in range(e)]
+         for k, row in enumerate(vandermonde_int(ranks))]
+    for col in range(e):
+        piv = next(i for i in range(col, e) if m[i][col])
+        m[col], m[piv] = m[piv], m[col]
+        scale = inv_int(m[col][col])
+        m[col] = [mul_int(scale, v) for v in m[col]]
+        for i in range(e):
+            if i != col and m[i][col]:
+                f = m[i][col]
+                m[i] = [v ^ mul_int(f, w) for v, w in zip(m[i], m[col])]
+    return tuple(tuple(row[e:]) for row in m)
+
+
+def solve_e_int(deficits, lost_ranks) -> list:
+    """Host oracle for the general solve: scalar syndromes -> lost words."""
+    inv = inv_vandermonde_int(tuple(int(a) for a in lost_ranks))
+    return [functools.reduce(
+        lambda acc, kv: acc ^ mul_int(kv[1], deficits[kv[0]]),
+        enumerate(row), 0) for row in inv]
 
 
 # ---------------------------------------------------------------------------
@@ -175,30 +237,46 @@ def mul_pow_g(x: jax.Array, k: int) -> jax.Array:
     return x
 
 
-def rank_coeff(group_size: int, axis_name: str) -> jax.Array:
-    """This rank's Q Vandermonde coefficient g^me (shard_map-only).
+def rank_syndrome_coeffs(group_size: int, r: int,
+                         axis_name: str) -> jax.Array:
+    """This rank's syndrome coefficient vector (g^(k·me))_{k<r}.
 
-    One table lookup by `lax.axis_index` — the single place the
+    One (G, r) table lookup by `lax.axis_index` — the single place the
     coefficient scheme lives, shared by the commit engines, the epoch
-    flush, and the GF collective.
+    flush, and the syndrome collective.  Entry 0 is always 1 (S_0 is
+    plain XOR parity); consumers statically skip the k=0 multiply.
     """
     from jax import lax
-    table = jnp.asarray(pow_g_array(group_size))
+    table = jnp.asarray(syndrome_array(group_size, r))
     return table[lax.axis_index(axis_name)]
 
 
-def solve_two(p: jax.Array, q: jax.Array, rank_a: int, rank_b: int) -> tuple:
-    """Solve the double-loss Vandermonde system element-wise.
+def solve_e(deficits: jax.Array, lost_ranks) -> tuple:
+    """Solve the e-erasure Vandermonde system element-wise.
 
-    `p` = P ^ S_p (= A ^ B) and `q` = Q ^ S_q (= g^a·A ^ g^b·B) for lost
-    ranks a != b (static ints).  The scalar constants — g^a and the
-    determinant inverse — are exact host integers folded into the program,
-    so the device does two constant multiplies and two XORs per word.
-    Returns (A, B), the lost rows' segments.
+    `deficits` is the (e, n) stack of syndrome deficits
+    S_k ^ s_k = XOR_j g^(k·a_j)·X_j for the erased ranks a_j (static,
+    distinct ints).  The inverse matrix constants are exact host
+    integers folded into the program, so the device does e constant
+    multiplies and e-1 XORs per word per lost row.  Returns the e lost
+    rows' segments (X_0, ..., X_{e-1}) in `lost_ranks` order.
     """
+    ranks = tuple(int(a) for a in lost_ranks)
+    e = len(ranks)
+    assert deficits.shape[0] == e, (deficits.shape, ranks)
+    inv = inv_vandermonde_int(ranks)
+    out = []
+    for row in inv:
+        acc = None
+        for k, c in enumerate(row):
+            term = mul_const(deficits[k], c) if c != 1 else deficits[k]
+            acc = term if acc is None else acc ^ term
+        out.append(acc)
+    return tuple(out)
+
+
+def solve_two(p: jax.Array, q: jax.Array, rank_a: int, rank_b: int) -> tuple:
+    """The e=2 specialization of `solve_e` (P+Q double-loss solve)."""
     rank_a, rank_b = int(rank_a), int(rank_b)
     assert rank_a != rank_b, "double-loss solve needs two distinct ranks"
-    ga = pow_g_int(rank_a)
-    det_inv = inv_int(ga ^ pow_g_int(rank_b))
-    b = mul_const(q ^ mul_const(p, ga), det_inv)
-    return p ^ b, b
+    return solve_e(jnp.stack([p, q]), (rank_a, rank_b))

@@ -16,8 +16,19 @@ Three update paths, mirroring the paper's hybrid scheme:
 
 Reconstruction (§3.6): lost row r = XOR of surviving rows XOR parity,
 computed online by all survivors.
+
+Beyond the paper, the same three paths generalize to the Reed-Solomon
+syndrome stack S_0..S_{r-1} (S_k = XOR_i g^(k·i)·row_i over GF(2^32),
+core/gf.py): `build_syndromes` / `apply_sdelta` / `patch_syndrome_delta`
+are the stack forms of build / bulk-delta / patch, `verify_syndromes`
+the per-syndrome invariant, and `reconstruct_e` solves any e <= r
+simultaneous rank losses through the e x e Vandermonde inverse.  S_0 IS
+the parity above — the single-parity functions are kept for the
+r=1-specialized paths (single-loss reconstruction, page repair).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -85,98 +96,114 @@ def patch_parity_delta(parity_seg: jax.Array, delta_pages: jax.Array,
 
     The fused commit sweep emits delta pages as a by-product of its single
     pass over (old, new); this entry point applies them without re-reading
-    either operand.
+    either operand.  The r=1 view of `patch_syndrome_delta`, so the
+    owner-scatter semantics live in exactly one place.
+    """
+    return patch_syndrome_delta(parity_seg[None], delta_pages[None],
+                                page_idx, layout, axis_name)[0]
+
+
+# ---------------------------------------------------------------------------
+# syndrome stack: generalized Reed-Solomon S_0..S_{r-1} (beyond paper)
+# ---------------------------------------------------------------------------
+
+def build_syndromes(row: jax.Array, r: int, axis_name: str) -> jax.Array:
+    """Full stack build: (r, seg) — one overlapped collective for all r.
+
+    S_k = XOR_i g^(k·i)·row_i; S_0 is classic XOR parity, so
+    `build_syndromes(row, 1, ax)[0] == build_parity(row, ax)` bit-exactly
+    (and lowers to the same program).
+    """
+    return coll.syndrome_reduce_scatter(row, r, axis_name)
+
+
+def apply_sdelta(synd: jax.Array, sdelta_rows: jax.Array,
+                 axis_name: str) -> jax.Array:
+    """Bulk stack delta: synd ^= reduce-scatter of pre-weighted deltas.
+
+    `sdelta_rows` is the (r, n) stack the fused commit sweep emits —
+    row k already weighted by g^(k·me) — so the combine is the plain XOR
+    collective (GF addition IS XOR), batched across syndromes.
+    """
+    return coll.syndrome_apply_delta(synd, sdelta_rows, axis_name)
+
+
+def patch_syndrome_delta(synd: jax.Array, sdelta_pages: jax.Array,
+                         page_idx: jax.Array, layout: ZoneLayout,
+                         axis_name: str) -> jax.Array:
+    """Incremental stack patch for pre-weighted dirty-page deltas.
+
+    `synd`: (r, seg_words) stack; `sdelta_pages`: (r, k, bw) — syndrome
+    k's deltas weighted by g^(k·me).  Every syndrome is linear over XOR
+    once the rank scaled its delta, so ONE batched XOR all-reduce
+    combines all r patch sets and the owner-scatter routing (computed
+    once from `page_idx`) applies across the stack.
     """
     bw = layout.block_words
-    patch = coll.xor_all_reduce(delta_pages, axis_name)  # (k, bw) on all ranks
-    # Page p lives in parity segment of rank p // pages_per_seg.
+    r = synd.shape[0]
+    patch = coll.xor_all_reduce(sdelta_pages, axis_name)     # (r, k, bw)
+    # Page p lives in the segment of rank p // pages_per_seg.
     pages_per_seg = layout.seg_words // bw
     me = lax.axis_index(axis_name)
     owner = page_idx // pages_per_seg
     local_page = page_idx % pages_per_seg
     mine = (owner == me)
-    seg_pages = parity_seg.reshape(pages_per_seg, bw)
-    # Scatter-XOR with O(k) work: page indices within one commit are unique,
-    # so gather -> xor -> scatter-set is exact; non-owned rows route to the
-    # out-of-range sentinel and are dropped by the scatter itself (an
-    # earlier version concatenated a dummy row and sliced it back off,
-    # which copied the whole parity segment per patch).  This is the
-    # "atomic XOR" application — commutativity already did the cross-rank
-    # combining in the all-reduce above.
+    seg_pages = synd.reshape(r, pages_per_seg, bw)
+    # Scatter-XOR with O(k) work per syndrome: page indices within one
+    # commit are unique, so gather -> xor -> scatter-set is exact;
+    # non-owned rows route to the out-of-range sentinel and are dropped
+    # by the scatter itself (an earlier version concatenated a dummy row
+    # and sliced it back off, which copied the whole segment per patch).
+    # This is the "atomic XOR" application — commutativity already did
+    # the cross-rank combining in the all-reduce above.
     scatter_idx = jnp.where(mine, local_page, pages_per_seg)
-    cur = seg_pages[jnp.minimum(scatter_idx, pages_per_seg - 1)]
-    out = seg_pages.at[scatter_idx].set(cur ^ patch, mode="drop")
-    return out.reshape(-1)
+    cur = seg_pages[:, jnp.minimum(scatter_idx, pages_per_seg - 1)]
+    out = seg_pages.at[:, scatter_idx].set(cur ^ patch, mode="drop")
+    return out.reshape(r, -1)
 
 
-# ---------------------------------------------------------------------------
-# dual parity: the GF(2^32) Q syndrome (beyond paper — two-rank erasure)
-# ---------------------------------------------------------------------------
+def verify_syndromes(row: jax.Array, synd: jax.Array,
+                     axis_name: str) -> jax.Array:
+    """Zone invariant per syndrome: returns (r,) bool, zone-agreed.
 
-def build_qparity(row: jax.Array, axis_name: str) -> jax.Array:
-    """Full Q build: GF-weighted XOR reduce-scatter (rank i adds g^i·row_i)."""
-    return coll.gf_reduce_scatter(row, axis_name)
-
-
-def apply_qdelta(qparity_seg: jax.Array, qdelta_row: jax.Array,
-                 axis_name: str) -> jax.Array:
-    """Bulk Q delta path: qparity ^= XOR-reduce-scatter(g^me · delta).
-
-    `qdelta_row` is the *pre-weighted* delta (the fused PQ sweep emits
-    g^me·(old^new) directly), so the combine is the plain XOR collective —
-    GF addition is XOR, and the weighting already happened in VMEM.
+    Entry k is True iff XOR_i g^(k·i)·row_i equals the stored S_k on
+    every rank (entry 0 is the classic parity invariant).
     """
-    return qparity_seg ^ coll.xor_reduce_scatter(qdelta_row, axis_name)
-
-
-def patch_qparity_delta(qparity_seg: jax.Array, qdelta_pages: jax.Array,
-                        page_idx: jax.Array, layout: ZoneLayout,
-                        axis_name: str) -> jax.Array:
-    """Incremental Q patch for pre-weighted dirty-page deltas.
-
-    Identical algebra to the P patch — Q is linear over XOR once each
-    rank has scaled its delta by g^i — so the owner-scatter machinery is
-    shared verbatim.  `qdelta_pages`: (k, bw) g^me-weighted deltas.
-    """
-    return patch_parity_delta(qparity_seg, qdelta_pages, page_idx, layout,
-                              axis_name)
-
-
-def verify_qparity(row: jax.Array, qparity_seg: jax.Array,
-                   axis_name: str) -> jax.Array:
-    """Zone invariant: GF-weighted XOR of all rows equals Q.  Returns bool."""
-    fresh = coll.gf_reduce_scatter(row, axis_name)
-    ok_local = jnp.all(fresh == qparity_seg)
+    r = synd.shape[0]
+    fresh = coll.syndrome_reduce_scatter(row, r, axis_name)
+    ok_local = jnp.all(fresh == synd, axis=-1)               # (r,)
     return lax.pmin(ok_local.astype(jnp.int32), axis_name) > 0
 
 
-def reconstruct_two(row: jax.Array, parity_seg: jax.Array,
-                    qparity_seg: jax.Array, lost_a: int, lost_b: int,
-                    axis_name: str) -> tuple:
-    """Rebuild TWO lost ranks' rows online from P + Q (2x2 Vandermonde).
+def reconstruct_e(row: jax.Array, synd: jax.Array, lost_ranks,
+                  axis_name: str) -> tuple:
+    """Rebuild e <= r lost ranks' rows online from the syndrome stack.
 
-    `lost_a` / `lost_b` are *static* distinct rank indices (recovery is
-    rare; one compiled program per pair).  Survivors contribute their rows
-    to both syndromes; the lost ranks contribute zeros, so
+    `lost_ranks` are *static* distinct rank indices (recovery is rare;
+    one compiled program per erasure set).  Survivors contribute their
+    rows to the first e syndromes; the lost ranks contribute zeros, so
 
-        P ^ S_p = A ^ B,     Q ^ S_q = g^a·A ^ g^b·B
+        S_k ^ s_k = XOR_j g^(k·a_j) · X_j        k = 0..e-1
 
-    which `gf.solve_two` inverts with exact host-integer constants.  Every
-    rank returns both reconstructed rows (the lost ranks replace their
-    state; survivors may verify or discard).  Also covers a rank loss with
-    an outstanding scribbled rank: name the scribbled rank as the second
-    loss and both come back to intended values.
+    which `gf.solve_e` inverts with exact host-integer constants.  Every
+    rank returns all e reconstructed rows in `lost_ranks` order (the
+    lost ranks replace their state; survivors may verify or discard).
+    Also covers e-1 losses with an outstanding scribbled rank: name the
+    scribbled rank as the extra loss and all come back to intended
+    values.
     """
-    lost_a, lost_b = int(lost_a), int(lost_b)
+    ranks = tuple(int(a) for a in lost_ranks)
+    e = len(ranks)
+    assert e >= 1 and len(set(ranks)) == e, ranks
+    assert e <= synd.shape[0], (
+        f"{e} erasures need {e} syndromes; stack holds {synd.shape[0]}")
     me = lax.axis_index(axis_name)
-    lost = (me == lost_a) | (me == lost_b)
+    lost = functools.reduce(jnp.logical_or,
+                            [me == a for a in ranks])
     contrib = jnp.where(lost, jnp.zeros_like(row), row)
-    s_p = coll.xor_reduce_scatter(contrib, axis_name)
-    s_q = coll.gf_reduce_scatter(contrib, axis_name)
-    a_seg, b_seg = gf.solve_two(parity_seg ^ s_p, qparity_seg ^ s_q,
-                                lost_a, lost_b)
-    return (coll.all_gather_row(a_seg, axis_name),
-            coll.all_gather_row(b_seg, axis_name))
+    survivors = coll.syndrome_reduce_scatter(contrib, e, axis_name)
+    segs = gf.solve_e(synd[:e] ^ survivors, ranks)
+    return tuple(coll.all_gather_row(s, axis_name) for s in segs)
 
 
 # ---------------------------------------------------------------------------

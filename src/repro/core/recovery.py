@@ -5,6 +5,10 @@ Two entry points, both funneling into the Protector's reconstruction ops:
   * `recover_from_rank_loss`  — media-error path: a failure event reports a
     lost rank (the analogue of SIGBUS reporting a poisoned page); the pool
     freezes, survivors rebuild the row from parity, the pool resumes.
+  * `recover_from_e_loss`     — the generalized form: any e <= redundancy
+    simultaneous rank losses solve through the syndrome stack's e x e
+    Vandermonde inverse (beyond paper; `recover_from_double_loss` is the
+    e=2 back-compat alias).
   * `recover_from_scribble`   — corruption path: checksum mismatches (from a
     scrub or a verify-at-open) identify (rank, page) victims; targeted page
     reconstruction repairs them in place.
@@ -28,12 +32,12 @@ from repro.core import txn as txn_mod
 
 @dataclasses.dataclass
 class RecoveryReport:
-    kind: str                    # "rank_loss" | "double_loss" | "scribble"
+    kind: str                    # "rank_loss" | "multi_loss" | "scribble"
     lost_rank: Optional[int]
     pages: list
     verified: bool               # post-repair checksum verification passed
     frozen: bool
-    lost_ranks: Optional[list] = None     # double-loss: both ranks
+    lost_ranks: Optional[list] = None     # multi-loss: every lost rank
     # survivors' replicated window metadata bound (deferred engine):
     # {"pending", "dirty_pages", "digest_verified"} or None
     window_bound: Optional[dict] = None
@@ -58,36 +62,55 @@ def recover_from_rank_loss(protector: txn_mod.Protector,
                                 freeze is not None)
 
 
+def recover_from_e_loss(protector: txn_mod.Protector,
+                        prot: txn_mod.ProtectedState,
+                        lost_ranks: Sequence[int],
+                        freeze: Optional[Callable] = None,
+                        resume: Optional[Callable] = None):
+    """Rebuild e <= r lost data-ranks' rows from the syndrome stack.
+
+    Requires redundancy >= e: the e x e Vandermonde solve over GF(2^32)
+    inverts every loss at once (core/parity.reconstruct_e).  Also the
+    escape hatch for losses while a scribbled page is still unrepaired —
+    name the scribbled rank as an extra loss and all come back to
+    intended values (single-parity Pangolin cannot untangle that
+    overlap).  Idempotent like the single-loss path: pure reconstruction
+    from surviving rows + the stack.
+    """
+    ranks = sorted(int(a) for a in lost_ranks)
+    e = len(ranks)
+    r = protector.redundancy if protector.mode.has_parity else 0
+    if r < e:
+        raise RuntimeError(
+            f"{e} simultaneous rank losses with mode "
+            f"{protector.mode.value} (redundancy={r}) — a zone solves at "
+            "most its syndrome count online; run a parity mode with "
+            f"redundancy>={e} (<= 4) or restore from checkpoint")
+    if freeze is not None:
+        freeze()
+    if e == 1:
+        prot, ok = protector.recover_rank(prot, ranks[0])
+    else:
+        prot, ok = protector.recover_e(prot, ranks)
+    verified = bool(jax.device_get(ok))
+    if resume is not None:
+        resume()
+    if e == 1:
+        return prot, RecoveryReport("rank_loss", ranks[0], [], verified,
+                                    freeze is not None)
+    return prot, RecoveryReport("multi_loss", None, [], verified,
+                                freeze is not None, lost_ranks=ranks)
+
+
 def recover_from_double_loss(protector: txn_mod.Protector,
                              prot: txn_mod.ProtectedState,
                              lost_ranks: Sequence[int],
                              freeze: Optional[Callable] = None,
                              resume: Optional[Callable] = None):
-    """Rebuild TWO lost data-ranks' rows from P + Q, online.
-
-    Requires a dual-parity mode (redundancy=2): the 2x2 Vandermonde solve
-    over GF(2^32) inverts both losses at once (core/parity.reconstruct_two).
-    Also the escape hatch for a rank loss while a scribbled page is still
-    unrepaired — name the scribbled rank as the second loss and both come
-    back to intended values (single-parity Pangolin cannot untangle that
-    overlap).  Idempotent like the single-loss path: pure reconstruction
-    from surviving rows + both syndromes.
-    """
-    if not protector.mode.has_qparity:
-        raise RuntimeError(
-            f"mode {protector.mode.value} has no Q syndrome; a double "
-            "rank loss is unrecoverable online — run redundancy=2 "
-            "(mlp2/mlpc2) or restore from checkpoint")
+    """Back-compat alias: the e=2 erasure recovery."""
     a, b = (int(r) for r in lost_ranks)
-    if freeze is not None:
-        freeze()
-    prot, ok = protector.recover_two(prot, a, b)
-    verified = bool(jax.device_get(ok))
-    if resume is not None:
-        resume()
-    return prot, RecoveryReport("double_loss", None, [], verified,
-                                freeze is not None,
-                                lost_ranks=sorted((a, b)))
+    return recover_from_e_loss(protector, prot, (a, b), freeze=freeze,
+                               resume=resume)
 
 
 def recover_from_scribble(protector: txn_mod.Protector,

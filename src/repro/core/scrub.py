@@ -25,13 +25,19 @@ class ScrubReport:
     repaired: bool
     repair_ok: Optional[bool]
     row_cache_ok: Optional[bool] = None   # cached row == flatten(state)
-    qparity_ok: Optional[bool] = None     # GF Q syndrome invariant holds
+    # per-syndrome invariant verdicts, index k = S_k (entry 0 mirrors
+    # parity_ok); None when the mode keeps no syndromes
+    synd_ok: Optional[list] = None
+    # True when this report came from the rank-local pre-check (folded
+    # syndrome compare, no full-row collective) rather than a global scrub
+    local_only: bool = False
 
     @property
     def suspect(self) -> bool:
         """Any signal that the pool (or its redundancy) is unhealthy."""
         return (bool(self.bad_locations) or self.parity_ok is False
-                or self.qparity_ok is False or self.row_cache_ok is False)
+                or (self.synd_ok is not None and not all(self.synd_ok))
+                or self.row_cache_ok is False)
 
 
 class Scrubber:
@@ -89,6 +95,63 @@ class Scrubber:
         """Reset the clean streak (a failure event was handled)."""
         self._clean_streak = 0
 
+    def mark_checked(self):
+        """Restart the scrub cadence: a check stood in for a full scrub
+        (e.g. a clean rank-local pre-check on the pool's cadence)."""
+        self._since = 0
+
+    def _host_report(self, prot, out: dict, *, local: bool) -> tuple:
+        """Fetch the scrub outputs in one device_get; build the report."""
+        out = dict(out)
+        out["step"] = prot.step
+        host = jax.device_get(out)
+        bad_locations = []
+        if "bad_pages" in host:
+            # (*mesh_dims, n_blocks) -> (G, n_blocks): a page is bad if
+            # any non-data mesh coordinate flags it (vectorized union)
+            bad = np.asarray(host["bad_pages"])
+            data_pos = self.protector.axis_names.index(
+                self.protector.data_axis)
+            bad = np.moveaxis(bad, data_pos, 0)
+            bad = bad.any(axis=tuple(range(1, bad.ndim - 1)))
+            ranks, pages = np.nonzero(bad)
+            bad_locations = list(zip(ranks.tolist(), pages.tolist()))
+        synd_ok = ([bool(v) for v in np.asarray(host["synd_ok"])]
+                   if "synd_ok" in host else None)
+        parity_ok = synd_ok[0] if synd_ok else None
+        row_cache_ok = (bool(host["row_cache_ok"])
+                        if "row_cache_ok" in host else None)
+        return bad_locations, ScrubReport(
+            int(host["step"]), True, bad_locations, parity_ok, False,
+            None, row_cache_ok=row_cache_ok, synd_ok=synd_ok,
+            local_only=local)
+
+    def precheck(self, prot: txn_mod.ProtectedState) -> ScrubReport:
+        """Rank-local scrub: the cheap pre-check before a global scrub.
+
+        Verifies this rank's state blocks against the checksum table,
+        the row cache against the live state, and this rank's syndrome
+        segments against everyone's rows via the folded-syndrome compare
+        (Protector.make_local_scrub) — zone traffic O(r·G) words instead
+        of the r full-row reduce-scatters.  No repair and no cadence
+        reset: a suspect pre-check should escalate to `run`.  The
+        adaptive window IS fed either way — a clean pre-check standing
+        in for a scrub must regrow a shrunken window exactly like a
+        clean global scrub would, or full_scrub_every=N would slow
+        regrowth by N.
+        """
+        mode = self.protector.mode
+        if not (mode.has_cksums or mode.has_parity):
+            return ScrubReport(int(prot.step), False, [], None, False,
+                               None, local_only=True)
+        _, report = self._host_report(
+            prot, self.protector.local_scrub(prot), local=True)
+        if self.engine is not None:
+            self.engine.report_pressure(report.suspect)
+            if report.suspect:
+                self._clean_streak = 0
+        return report
+
     def run(self, prot: txn_mod.ProtectedState,
             freeze: Optional[Callable] = None,
             resume: Optional[Callable] = None):
@@ -103,38 +166,16 @@ class Scrubber:
         # one transfer for every scrub output (plus the step counter) —
         # the old code issued a device_get per field and then walked
         # np.argwhere rows in Python
-        out = dict(self.protector.scrub(prot))
-        out["step"] = prot.step
-        host = jax.device_get(out)
-        bad_locations = []
-        if "bad_pages" in host:
-            # (*mesh_dims, n_blocks) -> (G, n_blocks): a page is bad if
-            # any non-data mesh coordinate flags it (vectorized union)
-            bad = np.asarray(host["bad_pages"])
-            data_pos = self.protector.axis_names.index(
-                self.protector.data_axis)
-            bad = np.moveaxis(bad, data_pos, 0)
-            bad = bad.any(axis=tuple(range(1, bad.ndim - 1)))
-            ranks, pages = np.nonzero(bad)
-            bad_locations = list(zip(ranks.tolist(), pages.tolist()))
-        parity_ok = (bool(host["parity_ok"]) if "parity_ok" in host
-                     else None)
-        qparity_ok = (bool(host["qparity_ok"]) if "qparity_ok" in host
-                      else None)
-        row_cache_ok = (bool(host["row_cache_ok"])
-                        if "row_cache_ok" in host else None)
-        repaired, repair_ok = False, None
+        bad_locations, report = self._host_report(
+            prot, self.protector.scrub(prot), local=False)
         if bad_locations and self.auto_repair and mode.has_parity:
             ranks = [r for r, _ in bad_locations]
             pages = [p for _, p in bad_locations]
             prot, ok = self.protector.repair_pages(prot, ranks, pages)
-            repaired, repair_ok = True, bool(jax.device_get(ok))
+            report.repaired = True
+            report.repair_ok = bool(jax.device_get(ok))
         if resume is not None:
             resume()
-        report = ScrubReport(int(host["step"]), True, bad_locations,
-                             parity_ok, repaired, repair_ok,
-                             row_cache_ok=row_cache_ok,
-                             qparity_ok=qparity_ok)
         if self.engine is not None:
             # adaptive window: errors shrink W toward 1, clean regrows it
             self.engine.report_pressure(report.suspect)

@@ -23,6 +23,14 @@ Protection-mode ladder mirrors the paper's evaluation (Table 2):
   MLP    ~ + XOR parity (media-error recovery; compare w/ REPLICA)
   MLPC   ~ + object checksums (scribble detection)
   REPLICA~ libpmemobj's replicated mode (2x storage, the paper's baseline)
+
+Orthogonal to the ladder, `redundancy` r (1..4) selects the syndrome
+stack height of the parity modes: S_0 is the XOR parity above, and each
+extra syndrome S_k = XOR_i g^(k·i)·row_i (GF(2^32) Reed-Solomon,
+core/gf.py) buys one more simultaneous rank loss at one more parity
+fraction of storage — any e <= r losses reconstruct online
+(`recover_e`).  The former MLP2/MLPC2 dual-parity modes dissolved into
+(mlp|mlpc, redundancy=2); `resolved_mode` keeps the aliases working.
 """
 from __future__ import annotations
 
@@ -54,71 +62,76 @@ U32 = jnp.uint32
 class Mode(enum.Enum):
     NONE = "none"          # micro-buffering + canary only (pgl baseline)
     ML = "ml"              # + redo-log/metadata replication
-    MLP = "mlp"            # + parity
+    MLP = "mlp"            # + parity (syndrome stack, height = redundancy)
     MLPC = "mlpc"          # + checksums
     REPLICA = "replica"    # full replica (Pmemobj-R analogue)
-    # dual-parity levels (beyond paper): a second, GF(2^32) Reed-Solomon
-    # syndrome Q alongside XOR parity P — any TWO simultaneous rank
-    # losses in a zone reconstruct (core/gf.py, parity.reconstruct_two)
-    MLP2 = "mlp2"          # + Q syndrome (no checksums)
-    MLPC2 = "mlpc2"        # + Q syndrome + checksums
 
     @property
     def has_parity(self) -> bool:
-        return self in (Mode.MLP, Mode.MLPC, Mode.MLP2, Mode.MLPC2)
+        return self in (Mode.MLP, Mode.MLPC)
 
     @property
     def has_cksums(self) -> bool:
-        return self in (Mode.MLPC, Mode.MLPC2)
-
-    @property
-    def has_qparity(self) -> bool:
-        return self in (Mode.MLP2, Mode.MLPC2)
+        return self is Mode.MLPC
 
     @property
     def has_log(self) -> bool:
-        return self in (Mode.ML, Mode.MLP, Mode.MLPC, Mode.MLP2,
-                        Mode.MLPC2)
+        return self in (Mode.ML, Mode.MLP, Mode.MLPC)
 
     @property
     def has_replica(self) -> bool:
         return self is Mode.REPLICA
 
-    @property
-    def redundancy(self) -> int:
-        """Simultaneous rank losses a zone survives online."""
-        return 2 if self.has_qparity else (1 if self.has_parity else 0)
+
+# redundancy is orthogonal to the ladder now: a parity mode carries a
+# syndrome stack S_0..S_{r-1} (S_0 = XOR parity; S_1 the former Q), and
+# r = ProtectConfig.redundancy selects its height.  The old dual-parity
+# mode names survive only as config aliases.
+MAX_REDUNDANCY = 4
+_MODE_ALIASES = {"mlp2": ("mlp", 2), "mlpc2": ("mlpc", 2)}
 
 
-def resolve_mode(mode, redundancy: int = 1) -> Mode:
-    """Map (base mode, ProtectConfig.redundancy) onto the Mode ladder.
+def resolved_mode(mode, redundancy: int = 1) -> tuple:
+    """Resolve (mode-or-alias, redundancy) to the (Mode, r) pair.
 
-    redundancy=1 returns the base mode unchanged; redundancy=2 promotes a
-    parity mode to its dual-parity level (mlp -> mlp2, mlpc -> mlpc2).
+    The former dual-parity Mode members dissolved into this: "mlp2" /
+    "mlpc2" resolve to their base mode with redundancy >= 2 (an explicit
+    higher `redundancy` wins, so `("mlp2", 3)` means a 3-syndrome MLP
+    stack).  Raises with an actionable message for r outside 1..4 or a
+    redundancy > 1 on a mode that keeps no parity to stack onto.
     """
-    m = mode if isinstance(mode, Mode) else Mode(mode)
-    r = int(redundancy)
-    if r == 1:
-        return m
-    if r == 2:
-        if m is Mode.MLP:
-            return Mode.MLP2
-        if m is Mode.MLPC:
-            return Mode.MLPC2
-        if m.has_qparity:
-            return m
+    implied = 1
+    if isinstance(mode, Mode):
+        m = mode
+    else:
+        name, implied = _MODE_ALIASES.get(mode, (mode, 1))
+        m = Mode(name)
+    r = max(int(redundancy), implied)
+    if not 1 <= int(redundancy) <= MAX_REDUNDANCY or \
+            not 1 <= r <= MAX_REDUNDANCY:
         raise ValueError(
-            f"redundancy=2 needs a parity mode (mlp or mlpc), got "
-            f"'{m.value}' — the Q syndrome extends parity, it cannot "
-            "replace it")
-    raise ValueError(f"redundancy must be 1 or 2, got {redundancy}")
+            f"redundancy={redundancy} — the syndrome stack holds 1 to "
+            f"{MAX_REDUNDANCY} syndromes (1 = XOR parity P, 2 adds the "
+            "GF(2^32) Q row, 3-4 add higher Vandermonde rows); larger "
+            "stacks exceed the validated Reed-Solomon configuration")
+    if r > 1 and not m.has_parity:
+        raise ValueError(
+            f"redundancy={r} with mode='{m.value}' — extra syndromes "
+            "extend parity, they cannot replace it; use a parity mode "
+            "(mlp or mlpc)")
+    return m, r
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class ProtectedState:
     state: PyTree
-    parity: Optional[jax.Array]      # (*mesh_dims, seg_words) u32
+    # Syndrome stack, (*mesh_dims, r, seg_words) u32 — parity modes only.
+    # Plane k holds this rank's segment of S_k = XOR_i g^(k·i)·row_i over
+    # GF(2^32) (core/gf.py); plane 0 is classic XOR parity, plane 1 the
+    # former Q.  Any e <= r simultaneous rank losses solve through the
+    # e x e Vandermonde inverse (parity.reconstruct_e).
+    synd: Optional[jax.Array]
     cksums: Optional[jax.Array]      # (*mesh_dims, n_blocks, 2) u32
     digest: Optional[jax.Array]      # (*mesh_dims, 2) u32 whole-row digest
     replica: Optional[PyTree]
@@ -129,15 +142,15 @@ class ProtectedState:
     # commits diff rows directly instead of re-flattening the whole state
     # every step.  Rebuilt (never trusted) by recovery and repair.
     row: Optional[jax.Array] = None
-    # Q syndrome segment, (*mesh_dims, seg_words) u32 — dual-parity modes
-    # only (Mode.has_qparity).  Q = XOR_i g^i·row_i over GF(2^32); with P
-    # it solves any two simultaneous rank losses (core/gf.py).
-    qparity: Optional[jax.Array] = None
+
+    @property
+    def parity(self) -> Optional[jax.Array]:
+        """The S_0 (XOR parity) plane of the syndrome stack, read-only."""
+        return None if self.synd is None else self.synd[..., 0, :]
 
     def tree_flatten(self):
-        return ((self.state, self.parity, self.cksums, self.digest,
-                 self.replica, self.log, self.step, self.row,
-                 self.qparity), None)
+        return ((self.state, self.synd, self.cksums, self.digest,
+                 self.replica, self.log, self.step, self.row), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -163,15 +176,25 @@ class Protector:
 
     def __init__(self, mesh: Mesh, abstract_state: PyTree, state_specs: PyTree,
                  *, data_axis: str = "data", mode: Mode = Mode.MLPC,
+                 redundancy: int = 1,
                  block_words: int = layout_mod.PAGE_WORDS,
                  hybrid_threshold: float = 0.5,
                  log_capacity: int = 64):
+        mode, redundancy = resolved_mode(mode, redundancy)
         self.mesh = mesh
         self.mode = mode
         self.data_axis = data_axis
         self.axis_names = tuple(mesh.axis_names)
         self.n_axes = len(self.axis_names)
         self.group_size = mesh.shape[data_axis]
+        if mode.has_parity and redundancy > self.group_size - 1:
+            raise ValueError(
+                f"redundancy={redundancy} on a zone of "
+                f"{self.group_size} data ranks — at most "
+                f"num_ranks - 1 = {self.group_size - 1} simultaneous "
+                "losses are solvable (the erasure system needs at least "
+                "one survivor); shrink redundancy or grow the data axis")
+        self.redundancy = redundancy if mode.has_parity else 1
         self.hybrid_threshold = hybrid_threshold
         self.log_capacity = log_capacity
         self.state_specs = state_specs
@@ -199,8 +222,8 @@ class Protector:
         def sds(shape, dtype=U32):
             return jax.ShapeDtypeStruct(shape, dtype)
 
-        parity = sds(zdims + (lo.seg_words,)) if mode.has_parity else None
-        qparity = sds(zdims + (lo.seg_words,)) if mode.has_qparity else None
+        synd = (sds(zdims + (self.redundancy, lo.seg_words))
+                if mode.has_parity else None)
         cksums = sds(zdims + (lo.n_blocks, 2)) if mode.has_cksums else None
         dig = (sds(zdims + (2,))
                if (mode.has_parity or mode.has_cksums) else None)
@@ -211,10 +234,9 @@ class Protector:
             if mode.has_replica else None)
         log = (jax.eval_shape(lambda: redolog.make(self.log_capacity))
                if mode.has_log else None)
-        return ProtectedState(state=abstract_state, parity=parity,
+        return ProtectedState(state=abstract_state, synd=synd,
                               cksums=cksums, digest=dig, replica=replica,
-                              log=log, step=sds((), U32), row=row,
-                              qparity=qparity)
+                              log=log, step=sds((), U32), row=row)
 
     def protected_specs(self) -> ProtectedState:
         """PartitionSpec tree matching ProtectedState."""
@@ -226,13 +248,12 @@ class Protector:
                if mode.has_log else None)
         return ProtectedState(
             state=self.state_specs,
-            parity=z if mode.has_parity else None,
+            synd=z if mode.has_parity else None,
             cksums=z if mode.has_cksums else None,
             digest=z if (mode.has_parity or mode.has_cksums) else None,
             replica=self.state_specs if mode.has_replica else None,
             log=log, step=P(),
-            row=z if (mode.has_parity or mode.has_cksums) else None,
-            qparity=z if mode.has_qparity else None)
+            row=z if (mode.has_parity or mode.has_cksums) else None)
 
     def _pack(self, x: jax.Array) -> jax.Array:
         """Local per-rank value -> shard_map output layout (leading 1s)."""
@@ -249,16 +270,14 @@ class Protector:
 
     def init(self, state: PyTree, *, jit: bool = True) -> ProtectedState:
         lo, ax = self.layout, self.data_axis
-        mode = self.mode
+        mode, r = self.mode, self.redundancy
 
         def _init(state):
             row = layout_mod.flatten_row(lo, state)
             outs = {}
             if mode.has_parity:
-                outs["parity"] = self._pack(parity_mod.build_parity(row, ax))
-            if mode.has_qparity:
-                outs["qparity"] = self._pack(
-                    parity_mod.build_qparity(row, ax))
+                outs["synd"] = self._pack(
+                    parity_mod.build_syndromes(row, r, ax))
             if mode.has_cksums:
                 cks = ck.block_checksums(row, lo.block_words)
                 outs["cksums"] = self._pack(cks)
@@ -271,9 +290,7 @@ class Protector:
 
         out_specs = {}
         if mode.has_parity:
-            out_specs["parity"] = self._zone_spec
-        if mode.has_qparity:
-            out_specs["qparity"] = self._zone_spec
+            out_specs["synd"] = self._zone_spec
         if mode.has_cksums:
             out_specs["cksums"] = self._zone_spec
         if mode.has_parity or mode.has_cksums:
@@ -287,10 +304,9 @@ class Protector:
         replica = jax.tree.map(jnp.copy, state) if mode.has_replica else None
         log = redolog.make(self.log_capacity) if mode.has_log else None
         return ProtectedState(
-            state=state, parity=outs.get("parity"), cksums=outs.get("cksums"),
+            state=state, synd=outs.get("synd"), cksums=outs.get("cksums"),
             digest=outs.get("digest"), replica=replica, log=log,
-            step=jnp.zeros((), U32), row=outs.get("row"),
-            qparity=outs.get("qparity"))
+            step=jnp.zeros((), U32), row=outs.get("row"))
 
     # -- commit ------------------------------------------------------------------
 
@@ -325,6 +341,7 @@ class Protector:
         (dirty) pages on the patch path.
         """
         lo, ax, mode = self.layout, self.data_axis, self.mode
+        r = self.redundancy
         thresh = self.hybrid_threshold
         bw = lo.block_words
         # static path choice, the paper's atomic-XOR/plain-XOR crossover
@@ -336,16 +353,15 @@ class Protector:
         dirty_idx = (np.asarray(list(dirty_pages), np.int32)
                      if patch else None)
 
-        def _protect(state_old, row_cache, parity, qparity, cksums, digest,
+        def _protect(state_old, row_cache, synd, cksums, digest,
                      state_new, canary_ok):
-            parity_l = self._unpack(parity) if parity is not None else None
-            qparity_l = (self._unpack(qparity)
-                         if qparity is not None else None)
+            synd_l = self._unpack(synd) if synd is not None else None
             cksums_l = self._unpack(cksums) if cksums is not None else None
             digest_l = self._unpack(digest)
-            # this rank's Q Vandermonde coefficient g^me (dual parity)
-            coeff = (gf.rank_coeff(self.group_size, ax)
-                     if mode.has_qparity else None)
+            # this rank's syndrome coefficient vector (g^(k·me))_k; None
+            # for r=1 keeps the single-parity kernels and their program
+            coeffs = (gf.rank_syndrome_coeffs(self.group_size, r, ax)
+                      if r > 1 else None)
             row_old = (layout_mod.flatten_row(lo, state_old) if verify_old
                        else self._unpack(row_cache))
             if meta_only or patch:
@@ -354,79 +370,52 @@ class Protector:
             else:
                 row_new = layout_mod.flatten_row(lo, state_new)
             ok = canary_ok
-            new_parity, new_cksums, new_digest = parity_l, cksums_l, digest_l
-            new_qparity = qparity_l
+            new_synd, new_cksums, new_digest = synd_l, cksums_l, digest_l
             if meta_only:
                 pass          # the paper's "free" metadata-only transaction
             elif patch:
                 idx = jnp.asarray(dirty_idx)
                 old_pages = parity_mod.gather_pages(row_old, idx, bw)
                 new_pages = parity_mod.gather_pages(row_new, idx, bw)
-                qdelta_p = None
                 if mode.has_cksums:
                     if verify_old:
-                        if mode.has_qparity:
-                            delta_p, qdelta_p, fresh, bad = \
-                                kops.fused_verify_commit_pq(
-                                    old_pages, new_pages, cksums_l[idx],
-                                    coeff)
-                        else:
-                            delta_p, fresh, bad = kops.fused_verify_commit(
-                                old_pages, new_pages, cksums_l[idx])
+                        sdelta_p, fresh, bad = kops.fused_verify_commit_s(
+                            old_pages, new_pages, cksums_l[idx], coeffs)
                         ok = _zone_clean(ok, bad, ax)
-                    elif mode.has_qparity:
-                        delta_p, qdelta_p, fresh = kops.fused_commit_pq(
-                            old_pages, new_pages, coeff)
                     else:
-                        delta_p, fresh = kops.fused_commit(old_pages,
-                                                           new_pages)
+                        sdelta_p, fresh = kops.fused_commit_s(
+                            old_pages, new_pages, coeffs)
                     new_cksums = ck.set_blocks(cksums_l, fresh, idx)
                     new_digest = ck.combine(new_cksums, bw)
                 else:
-                    if mode.has_qparity:
-                        delta_p, qdelta_p, fresh, old_ck = \
-                            kops.fused_commit_old_terms_pq(
-                                old_pages, new_pages, coeff)
-                    else:
-                        delta_p, fresh, old_ck = kops.fused_commit_old_terms(
-                            old_pages, new_pages)
+                    sdelta_p, fresh, old_ck = kops.fused_commit_old_terms_s(
+                        old_pages, new_pages, coeffs)
                     new_digest = ck.update_digest(digest_l, old_ck, fresh,
                                                   idx, lo.n_blocks, bw)
                 if mode.has_parity:
-                    new_parity = parity_mod.patch_parity_delta(
-                        parity_l, delta_p, idx, lo, ax)
-                if mode.has_qparity:
-                    new_qparity = parity_mod.patch_qparity_delta(
-                        qparity_l, qdelta_p, idx, lo, ax)
+                    new_synd = parity_mod.patch_syndrome_delta(
+                        synd_l, sdelta_p, idx, lo, ax)
             else:
                 pages_new = parity_mod.page_view(row_new, bw)
                 if verify_old and mode.has_cksums:
                     # old must be swept for verify anyway: the fused kernel
-                    # shares that read with the parity delta, and parity
-                    # consumes the delta (parity ^ rs(delta) == rs(new))
+                    # shares that read with all r syndrome deltas, and the
+                    # stack consumes them (S ^ rs(sdelta) == rs-stack(new))
                     pages_old = parity_mod.page_view(row_old, bw)
-                    if mode.has_qparity:
-                        delta, qdelta, fresh, bad = \
-                            kops.fused_verify_commit_pq(
-                                pages_old, pages_new, cksums_l, coeff)
-                        new_qparity = parity_mod.apply_qdelta(
-                            qparity_l, qdelta.reshape(-1), ax)
-                    else:
-                        delta, fresh, bad = kops.fused_verify_commit(
-                            pages_old, pages_new, cksums_l)
+                    sdelta, fresh, bad = kops.fused_verify_commit_s(
+                        pages_old, pages_new, cksums_l, coeffs)
                     ok = _zone_clean(ok, bad, ax)
                     if mode.has_parity:
-                        new_parity = parity_mod.apply_delta(
-                            parity_l, delta.reshape(-1), ax)
+                        new_synd = parity_mod.apply_sdelta(
+                            synd_l, sdelta.reshape(r, -1), ax)
                 else:
                     # without verify the old row is not read at all: a
                     # delta here would cost a write+read of a row-sized
                     # buffer for nothing — reduce-scatter the new row
                     fresh = kops.fletcher_blocks(pages_new)
                     if mode.has_parity:
-                        new_parity = parity_mod.build_parity(row_new, ax)
-                    if mode.has_qparity:
-                        new_qparity = parity_mod.build_qparity(row_new, ax)
+                        new_synd = parity_mod.build_syndromes(row_new, r,
+                                                              ax)
                 if mode.has_cksums:
                     new_cksums = fresh
                 new_digest = ck.combine(fresh, bw)
@@ -435,11 +424,7 @@ class Protector:
                     "digest": self._pack(jnp.where(ok, new_digest,
                                                    digest_l))}
             if mode.has_parity:
-                outs["parity"] = self._pack(
-                    jnp.where(ok, new_parity, parity_l))
-            if mode.has_qparity:
-                outs["qparity"] = self._pack(
-                    jnp.where(ok, new_qparity, qparity_l))
+                outs["synd"] = self._pack(jnp.where(ok, new_synd, synd_l))
             if mode.has_cksums:
                 outs["cksums"] = self._pack(
                     jnp.where(ok, new_cksums, cksums_l))
@@ -448,15 +433,13 @@ class Protector:
         out_specs = {"ok": P(), "row": self._zone_spec,
                      "digest": self._zone_spec}
         if mode.has_parity:
-            out_specs["parity"] = self._zone_spec
-        if mode.has_qparity:
-            out_specs["qparity"] = self._zone_spec
+            out_specs["synd"] = self._zone_spec
         if mode.has_cksums:
             out_specs["cksums"] = self._zone_spec
         protect = self._smap(
             _protect,
             in_specs=(self.state_specs, self._zone_spec, self._zone_spec,
-                      self._zone_spec, self._zone_spec, self._zone_spec,
+                      self._zone_spec, self._zone_spec,
                       self.state_specs, P()),
             out_specs=out_specs)
 
@@ -467,23 +450,21 @@ class Protector:
             log = prot.log
             digest_for_log = jnp.zeros((2,), U32)
             new_row = prot.row
-            new_qparity = prot.qparity
             if mode.has_parity or mode.has_cksums:
-                outs = protect(prot.state, prot.row, prot.parity,
-                               prot.qparity, prot.cksums, prot.digest,
+                outs = protect(prot.state, prot.row, prot.synd,
+                               prot.cksums, prot.digest,
                                state_new, canary_ok)
                 ok = outs["ok"]
                 new_row = outs["row"]
-                new_parity = outs.get("parity", prot.parity)
-                new_qparity = outs.get("qparity", prot.qparity)
+                new_synd = outs.get("synd", prot.synd)
                 new_cksums = outs.get("cksums", prot.cksums)
                 new_digest = outs["digest"]
                 digest_for_log = new_digest.reshape(-1, 2)[0]
             else:
                 ok = canary_ok
-                new_parity, new_cksums, new_digest = (prot.parity,
-                                                      prot.cksums,
-                                                      prot.digest)
+                new_synd, new_cksums, new_digest = (prot.synd,
+                                                    prot.cksums,
+                                                    prot.digest)
             # paper ordering: log record (replicated) persists before object
             # writes; the commit mark follows the protected update.
             if mode.has_log:
@@ -498,10 +479,9 @@ class Protector:
                 replica = tree_select(ok, jax.tree.map(jnp.copy, state_new),
                                       prot.replica)
             return ProtectedState(
-                state=new_state, parity=new_parity, cksums=new_cksums,
+                state=new_state, synd=new_synd, cksums=new_cksums,
                 digest=new_digest, replica=replica, log=log,
-                step=jnp.where(ok, step, prot.step), row=new_row,
-                qparity=new_qparity), ok
+                step=jnp.where(ok, step, prot.step), row=new_row), ok
 
         return commit
 
@@ -556,7 +536,7 @@ class Protector:
         lo, ax = self.layout, self.data_axis
         mode = self.mode
 
-        def _scrub(state, row_cache, parity, qparity, cksums):
+        def _scrub(state, row_cache, synd, cksums):
             row = layout_mod.flatten_row(lo, state)
             out = {}
             if mode.has_cksums:
@@ -564,11 +544,9 @@ class Protector:
                                        lo.block_words)
                 out["bad_pages"] = self._pack(bad)
             if mode.has_parity:
-                out["parity_ok"] = parity_mod.verify_parity(
-                    row, self._unpack(parity), ax)
-            if mode.has_qparity:
-                out["qparity_ok"] = parity_mod.verify_qparity(
-                    row, self._unpack(qparity), ax)
+                # every syndrome invariant from one overlapped collective
+                out["synd_ok"] = parity_mod.verify_syndromes(
+                    row, self._unpack(synd), ax)
             if mode.has_parity or mode.has_cksums:
                 same = jnp.all(row == self._unpack(row_cache))
                 out["row_cache_ok"] = (
@@ -579,19 +557,15 @@ class Protector:
         if mode.has_cksums:
             out_specs["bad_pages"] = self._zone_spec
         if mode.has_parity:
-            out_specs["parity_ok"] = P()
-        if mode.has_qparity:
-            out_specs["qparity_ok"] = P()
+            out_specs["synd_ok"] = P()
         if mode.has_parity or mode.has_cksums:
             out_specs["row_cache_ok"] = P()
         fn = self._smap(_scrub, in_specs=(self.state_specs, self._zone_spec,
-                                          self._zone_spec, self._zone_spec,
-                                          self._zone_spec),
+                                          self._zone_spec, self._zone_spec),
                         out_specs=out_specs)
 
         def scrub(prot: ProtectedState):
-            return fn(prot.state, prot.row, prot.parity, prot.qparity,
-                      prot.cksums)
+            return fn(prot.state, prot.row, prot.synd, prot.cksums)
 
         return scrub
 
@@ -600,6 +574,81 @@ class Protector:
             self._jit_cache["scrub"] = jax.jit(self.make_scrub())
         return self._jit_cache["scrub"](prot)
 
+    def make_local_scrub(self):
+        """Rank-local pre-check: no full-row collective anywhere.
+
+        The global scrub's dominant cost is the syndrome reduce-scatter
+        (r full-row weighted collectives).  This program verifies the
+        same three surfaces with zone traffic of O(r·G) *words*:
+
+          * this rank's state blocks against the checksum table — pure
+            local compute, catches scribbles exactly like the global
+            scrub does;
+          * the cached row against the live state — local compare;
+          * this rank's syndrome segments against everyone's rows via a
+            *folded* syndrome: each rank XOR-folds its weighted row
+            per (syndrome, owner-segment) into an (r, G) word matrix,
+            one tiny XOR all-reduce combines them (fold commutes with
+            the XOR sum across ranks), and each owner compares the
+            fold of its stored segments.  A fold catches any single
+            corruption; only colliding corruptions that cancel in the
+            fold escape to the global scrub — which is why this is the
+            cheap pre-check, not a replacement.
+
+        Outputs mirror `make_scrub` (bad_pages / synd_ok /
+        row_cache_ok) so the Scrubber consumes either.
+        """
+        lo, ax = self.layout, self.data_axis
+        mode, r, g = self.mode, self.redundancy, self.group_size
+
+        def _local(state, row_cache, synd, cksums):
+            row = layout_mod.flatten_row(lo, state)
+            out = {}
+            if mode.has_cksums:
+                bad = ck.verify_blocks(row, self._unpack(cksums),
+                                       lo.block_words)
+                out["bad_pages"] = self._pack(bad)
+            if mode.has_parity:
+                synd_l = self._unpack(synd)
+                coeffs = (gf.rank_syndrome_coeffs(g, r, ax)
+                          if r > 1 else None)
+                weighted = [row] + [gf.mul_const(row, coeffs[k])
+                                    for k in range(1, r)]
+                segs = jnp.stack(weighted).reshape(r, g, -1)
+                folds = coll.xor_fold(segs, axis=2)          # (r, G)
+                want = coll.xor_all_reduce(folds, ax)        # (r, G)
+                me = lax.axis_index(ax)
+                mine = coll.xor_fold(synd_l, axis=1)         # (r,)
+                ok = mine == want[:, me]
+                out["synd_ok"] = (
+                    lax.pmin(ok.astype(jnp.int32), ax) > 0)
+            if mode.has_parity or mode.has_cksums:
+                same = jnp.all(row == self._unpack(row_cache))
+                out["row_cache_ok"] = (
+                    lax.pmin(same.astype(jnp.int32), self.axis_names) > 0)
+            return out
+
+        out_specs = {}
+        if mode.has_cksums:
+            out_specs["bad_pages"] = self._zone_spec
+        if mode.has_parity:
+            out_specs["synd_ok"] = P()
+        if mode.has_parity or mode.has_cksums:
+            out_specs["row_cache_ok"] = P()
+        fn = self._smap(_local, in_specs=(self.state_specs, self._zone_spec,
+                                          self._zone_spec, self._zone_spec),
+                        out_specs=out_specs)
+
+        def local_scrub(prot: ProtectedState):
+            return fn(prot.state, prot.row, prot.synd, prot.cksums)
+
+        return local_scrub
+
+    def local_scrub(self, prot):
+        if "local_scrub" not in self._jit_cache:
+            self._jit_cache["local_scrub"] = jax.jit(self.make_local_scrub())
+        return self._jit_cache["local_scrub"](prot)
+
     # -- recovery ------------------------------------------------------------------
 
     def make_recover_rank(self):
@@ -607,12 +656,12 @@ class Protector:
         lo, ax = self.layout, self.data_axis
         mode = self.mode
 
-        def _recover(state, parity, cksums, lost):
+        def _recover(state, synd, cksums, lost):
             # flatten the live (damaged) state — the row cache is rebuilt,
             # never trusted, across recovery
             row = layout_mod.flatten_row(lo, state)
             rebuilt = parity_mod.reconstruct_row(
-                row, self._unpack(parity), lost, ax)
+                row, self._unpack(synd)[0], lost, ax)
             me = lax.axis_index(ax)
             row_out = jnp.where(me == lost, rebuilt, row)
             out = {"state": layout_mod.unflatten_row(lo, row_out),
@@ -634,7 +683,7 @@ class Protector:
                         out_specs=out_specs)
 
         def recover(prot: ProtectedState, lost_rank):
-            out = fn(prot.state, prot.parity, prot.cksums,
+            out = fn(prot.state, prot.synd, prot.cksums,
                      jnp.asarray(lost_rank, jnp.int32))
             return dataclasses.replace(prot, state=out["state"],
                                        row=out["row"]), out["ok"]
@@ -646,30 +695,37 @@ class Protector:
             self._jit_cache["recover"] = jax.jit(self.make_recover_rank())
         return self._jit_cache["recover"](prot, lost_rank)
 
-    def make_recover_two(self, lost_a: int, lost_b: int):
-        """Online reconstruction of TWO lost data-ranks' rows from P + Q.
+    def make_recover_e(self, lost_ranks):
+        """Online reconstruction of e <= r lost data-ranks' rows.
 
-        The pair is static (recovery is rare; one compiled program per
-        pair) so the Vandermonde constants fold in as exact host
-        integers.  Also the rank-loss-with-outstanding-scribble path:
-        name the scribbled rank as the second loss.
+        The erasure set is static (recovery is rare; one compiled
+        program per set) so the Vandermonde inverse folds in as exact
+        host integers.  Also the losses-with-outstanding-scribble path:
+        name the scribbled rank as an extra loss.
         """
         lo, ax = self.layout, self.data_axis
         mode = self.mode
-        assert mode.has_qparity, (
-            f"mode {mode.value} has no Q syndrome; double loss is "
-            "unrecoverable online (redundancy=2 adds it)")
+        ranks = tuple(sorted(int(a) for a in lost_ranks))
+        e = len(ranks)
+        assert len(set(ranks)) == e, (
+            f"erasure recovery needs distinct ranks, got {ranks}")
+        if e > self.redundancy:
+            raise RuntimeError(
+                f"{e} simultaneous rank losses exceed redundancy="
+                f"{self.redundancy} — a zone solves at most r losses "
+                "online (raise ProtectConfig.redundancy, or restore "
+                "from checkpoint)")
 
-        def _recover(state, parity, qparity, cksums):
+        def _recover(state, synd, cksums):
             # flatten the live (damaged) state — the row cache is rebuilt,
             # never trusted, across recovery
             row = layout_mod.flatten_row(lo, state)
-            row_a, row_b = parity_mod.reconstruct_two(
-                row, self._unpack(parity), self._unpack(qparity),
-                lost_a, lost_b, ax)
+            rebuilt = parity_mod.reconstruct_e(
+                row, self._unpack(synd), ranks, ax)
             me = lax.axis_index(ax)
-            row_out = jnp.where(me == lost_a, row_a,
-                                jnp.where(me == lost_b, row_b, row))
+            row_out = row
+            for a, row_a in zip(ranks, rebuilt):
+                row_out = jnp.where(me == a, row_a, row_out)
             out = {"state": layout_mod.unflatten_row(lo, row_out),
                    "row": self._pack(row_out)}
             if mode.has_cksums:
@@ -685,23 +741,28 @@ class Protector:
                      "row": self._zone_spec}
         fn = self._smap(_recover,
                         in_specs=(self.state_specs, self._zone_spec,
-                                  self._zone_spec, self._zone_spec),
+                                  self._zone_spec),
                         out_specs=out_specs)
 
         def recover(prot: ProtectedState):
-            out = fn(prot.state, prot.parity, prot.qparity, prot.cksums)
+            out = fn(prot.state, prot.synd, prot.cksums)
             return dataclasses.replace(prot, state=out["state"],
                                        row=out["row"]), out["ok"]
 
         return recover
 
+    def recover_e(self, prot, lost_ranks):
+        ranks = tuple(sorted(int(a) for a in lost_ranks))
+        key = ("recover_e", ranks)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(self.make_recover_e(ranks))
+        return self._jit_cache[key](prot)
+
     def recover_two(self, prot, lost_a, lost_b):
+        """Back-compat alias: the e=2 erasure recovery."""
         a, b = sorted((int(lost_a), int(lost_b)))
         assert a != b, "double-loss recovery needs two distinct ranks"
-        key = ("recover2", a, b)
-        if key not in self._jit_cache:
-            self._jit_cache[key] = jax.jit(self.make_recover_two(a, b))
-        return self._jit_cache[key](prot)
+        return self.recover_e(prot, (a, b))
 
     def make_repair_pages(self, n_pages: int):
         """Targeted scribble repair: fix `n_pages` (rank, page) locations."""
@@ -710,7 +771,7 @@ class Protector:
         bw = lo.block_words
         pages_per_seg = lo.seg_words // bw
 
-        def _repair(state, parity, cksums, bad_rank, bad_page):
+        def _repair(state, synd, cksums, bad_rank, bad_page):
             row = layout_mod.flatten_row(lo, state)
             pages = parity_mod.page_view(row, bw)
             me = lax.axis_index(ax)
@@ -718,11 +779,11 @@ class Protector:
             contents = pages[bad_page]                       # (k, bw)
             contrib = jnp.where(mine_bad[:, None], 0, contents)
             others = coll.xor_all_reduce(contrib, ax)        # (k, bw)
-            # broadcast each bad page's parity from its owner via XOR trick
+            # broadcast each bad page's parity (the stack's S_0 plane)
+            # from its owner via the XOR trick
             owner = bad_page // pages_per_seg
             local_idx = bad_page % pages_per_seg
-            seg_pages = parity.reshape(pages_per_seg, bw) if parity.ndim == 1 \
-                else self._unpack(parity).reshape(pages_per_seg, bw)
+            seg_pages = self._unpack(synd)[0].reshape(pages_per_seg, bw)
             par_contrib = jnp.where((owner == me)[:, None],
                                     seg_pages[local_idx], 0)
             par_pages = coll.xor_all_reduce(par_contrib, ax)  # (k, bw)
@@ -748,7 +809,7 @@ class Protector:
         def repair(prot: ProtectedState, bad_rank, bad_page):
             bad_rank = jnp.asarray(bad_rank, jnp.int32).reshape(n_pages)
             bad_page = jnp.asarray(bad_page, jnp.int32).reshape(n_pages)
-            out = fn(prot.state, prot.parity, prot.cksums, bad_rank, bad_page)
+            out = fn(prot.state, prot.synd, prot.cksums, bad_rank, bad_page)
             return dataclasses.replace(prot, state=out["state"],
                                        row=out["row"]), out["ok"]
 
@@ -767,21 +828,18 @@ class Protector:
         rep = self.layout.overhead_report()
         rep["mode"] = self.mode.value
         rep["group_size"] = self.group_size
-        rep["redundancy"] = self.mode.redundancy
-        # Q is one more seg_words row per rank — same bytes as P, so the
-        # dual-parity storage tax is exactly 2x the parity fraction
-        rep["qparity_bytes_per_rank"] = (rep["parity_bytes_per_rank"]
-                                         if self.mode.has_qparity else 0)
-        rep["qparity_fraction"] = (rep["parity_fraction"]
-                                   if self.mode.has_qparity else 0.0)
+        r = self.redundancy if self.mode.has_parity else 0
+        rep["redundancy"] = r
+        # every syndrome is one seg_words row per rank — same bytes as P —
+        # so the stack's storage tax is exactly r x the parity fraction
+        rep["syndrome_rows"] = r
+        rep["syndrome_bytes_per_rank"] = r * rep["parity_bytes_per_rank"]
+        rep["syndrome_fraction"] = r * rep["parity_fraction"]
+        rep["syndrome_r_over_p"] = float(r) if r else 0.0
         if self.mode.has_replica:
             rep["protection_fraction"] = 1.0
         else:
-            frac = 0.0
-            if self.mode.has_parity:
-                frac += rep["parity_fraction"]
-            if self.mode.has_qparity:
-                frac += rep["qparity_fraction"]
+            frac = rep["syndrome_fraction"]
             if self.mode.has_cksums:
                 frac += rep["checksum_fraction"]
             rep["protection_fraction"] = frac

@@ -64,19 +64,54 @@ def xor_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     return full[:n].reshape(shape)
 
 
-def gf_reduce_scatter(row: jax.Array, axis_name: str) -> jax.Array:
-    """GF(2^32)-weighted XOR reduce-scatter: rank i contributes g^i · row_i.
+def syndrome_reduce_scatter(row: jax.Array, r: int,
+                            axis_name: str) -> jax.Array:
+    """All r syndrome reduce-scatters as ONE overlapped collective.
 
-    The Q-syndrome collective of the dual-parity scheme (core/gf.py):
-    each rank scales its row by its Vandermonde coefficient g^i — a local
-    branch-free clmul, no extra communication — and the combine is the
-    same XOR reduce-scatter P uses, because GF(2^32) addition IS XOR.
-    Rank i keeps segment i of Q = XOR_j g^j · row_j.
+    Returns the (r, n // G) stack: rank i keeps segment i of every
+    S_k = XOR_j g^(k·j) · row_j, k = 0..r-1.  Sequencing r separate
+    reduce-scatters would serialize r all-to-alls on the same ring; here
+    the r weighted rows ride a single batched all-to-all (split over the
+    rank axis of the (r, G, seg) stack), so the syndromes share one
+    communication launch and the interconnect overlaps their transfers —
+    the "independent communication streams" of the ROADMAP follow-up,
+    expressed as collective batching.  The k=0 row skips the clmul
+    entirely (g^0 = 1), so r=1 degenerates to `xor_reduce_scatter`
+    exactly.
     """
     from repro.core import gf          # lazy: core.parity imports this module
+    r = int(r)
+    assert r >= 1, r
+    if r == 1:
+        return xor_reduce_scatter(row, axis_name)[None]
     g = lax.psum(1, axis_name)
-    coeff = gf.rank_coeff(g, axis_name)
-    return xor_reduce_scatter(gf.mul_const(row, coeff), axis_name)
+    n = row.shape[0]
+    assert n % g == 0, (n, g)
+    coeffs = gf.rank_syndrome_coeffs(g, r, axis_name)
+    weighted = jnp.stack(
+        [row] + [gf.mul_const(row, coeffs[k]) for k in range(1, r)])
+    segs = weighted.reshape(r, g, n // g)
+    gathered = lax.all_to_all(segs, axis_name, split_axis=1, concat_axis=1)
+    return xor_fold(gathered, axis=1)
+
+
+def syndrome_apply_delta(synd: jax.Array, sdelta: jax.Array,
+                         axis_name: str) -> jax.Array:
+    """Bulk syndrome delta: synd ^= reduce-scatter of pre-weighted deltas.
+
+    `synd`: (r, seg) stack; `sdelta`: (r, n) pre-weighted delta rows (the
+    fused commit sweep emits g^(k·me)·(old^new) directly), so the combine
+    is the plain XOR collective — batched over all r syndromes in one
+    all-to-all, exactly like `syndrome_reduce_scatter`.
+    """
+    r = synd.shape[0]
+    if r == 1:
+        return synd ^ xor_reduce_scatter(sdelta.reshape(-1), axis_name)[None]
+    g = lax.psum(1, axis_name)
+    n = sdelta.shape[-1]
+    segs = sdelta.reshape(r, g, n // g)
+    gathered = lax.all_to_all(segs, axis_name, split_axis=1, concat_axis=1)
+    return synd ^ xor_fold(gathered, axis=1)
 
 
 def xor_tree_reduce(x: jax.Array, axis_name: str) -> jax.Array:

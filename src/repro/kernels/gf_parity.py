@@ -1,30 +1,36 @@
-"""Pallas TPU kernels: GF(2^32)-weighted parity sweeps (dual-parity Q).
+"""Pallas TPU kernels: GF(2^32)-weighted syndrome sweeps (Reed-Solomon).
 
-The Q syndrome is Q = XOR_i g^i·row_i with multiplication in GF(2^32)
-(core/gf.py), so a commit that already sweeps (old, new) for the XOR delta
-can emit the Q delta from the same VMEM tiles: qdelta = g^me · (old ^ new),
-a 32-step branch-free clmul per word — pure VPU bit-ops, no extra HBM
-traffic.  The kernels here fuse that weighting with the existing
+The syndrome stack is S_k = XOR_i g^(k·i)·row_i, k = 0..r-1, with
+multiplication in GF(2^32) (core/gf.py), so a commit that already sweeps
+(old, new) for the XOR delta can emit ALL r weighted deltas from the
+same VMEM tiles: sdelta_k = g^(k·me) · (old ^ new), a 32-step branch-free
+clmul per word per extra syndrome — pure VPU bit-ops, no extra HBM
+reads.  The kernels here fuse that weighting with the existing
 verify+checksum sweep (kernels/commit_fused.py):
 
-  * `gf_scale`                 — standalone element-wise y = coeff · x
-    (epoch-flush Q patches for parity-only modes).
-  * `fused_commit_pq`          — one sweep over (old, new) emitting
-    (delta, qdelta, new Fletcher terms).
-  * `fused_verify_commit_pq`   — additionally folds verify-at-open over
+  * `gf_scale`               — standalone element-wise y = coeff · x
+    (epoch-flush syndrome patches for parity-only modes).
+  * `fused_commit_s`         — one sweep over (old, new) emitting
+    ((r, n, bw) weighted deltas, new Fletcher terms).
+  * `fused_verify_commit_s`  — additionally folds verify-at-open over
     the old tile (terms XOR stored, all-zero == clean).
-  * `fused_commit_old_terms_pq`— the stored=0 specialization whose
-    mismatch output is the raw old terms (MLP2's incremental digest).
+  * `fused_commit_old_terms_s` — the stored=0 specialization whose
+    mismatch output is the raw old terms (MLP's incremental digest).
 
-HBM traffic per page is unchanged from the single-parity fused sweep
-(r old + r new + w delta) plus the unavoidable w qdelta — the GF weighting
-itself is free, which is what makes redundancy=2 cost one extra write
-stream rather than a second pass.
+Syndrome 0's weight is g^0 = 1 by construction, so the k=0 plane is the
+raw delta written without any clmul — r=1 costs exactly what the
+single-parity fused sweep costs (and kernels/ops.py routes r=1 straight
+to the commit_fused family, keeping the compiled program byte-identical
+to the pre-stack engine).  HBM traffic per page is r-proportional only
+in the unavoidable weighted-delta *writes* (r old + r new reads never
+happen — one read each); the GF weighting itself is free, which is what
+makes redundancy=r cost r-1 extra write streams rather than extra
+passes.
 
-The per-rank coefficient g^me is a *traced* scalar (axis_index lookup), fed
-to the kernel as a (1, 1) u32 operand so one compiled program serves every
-rank of the zone.  `kernels/ref.py` carries the jnp oracles these must
-match bit-for-bit.
+The per-rank coefficient vector (g^(k·me))_k is a *traced* operand (one
+axis_index table lookup), fed to the kernel as an (r, 1) u32 operand so
+one compiled program serves every rank of the zone.  `kernels/ref.py`
+carries the jnp oracles these must match bit-for-bit.
 """
 from __future__ import annotations
 
@@ -85,105 +91,97 @@ def gf_scale(x: jax.Array, coeff: jax.Array, *, interpret: bool = False
 
 
 # ---------------------------------------------------------------------------
-# fused P+Q commit sweeps
+# fused r-syndrome commit sweeps
 # ---------------------------------------------------------------------------
 
-def _pq_kernel(coeff_ref, old_ref, new_ref, delta_ref, qdelta_ref, ck_ref):
-    old = old_ref[...]
-    new = new_ref[...]
-    d = old ^ new
-    delta_ref[...] = d
-    # the delta tile is already in VMEM: its GF weighting is free
-    qdelta_ref[...] = _gf_mul_tile(d, coeff_ref[0, 0])
-    bw = new.shape[-1]
+def _fletcher_terms(x):
+    bw = x.shape[-1]
     w = U32(bw) - jax.lax.broadcasted_iota(U32, (1, bw), 1)
-    a = jnp.sum(new, axis=-1, dtype=U32)
-    b = jnp.sum(new * w, axis=-1, dtype=U32)
-    ck_ref[...] = jnp.stack([a, b], axis=-1)
+    a = jnp.sum(x, axis=-1, dtype=U32)
+    b = jnp.sum(x * w, axis=-1, dtype=U32)
+    return jnp.stack([a, b], axis=-1)
 
 
-def _pq_verify_kernel(coeff_ref, old_ref, new_ref, stored_ref, delta_ref,
-                      qdelta_ref, ck_ref, mism_ref):
-    old = old_ref[...]
-    new = new_ref[...]
-    d = old ^ new
-    delta_ref[...] = d
-    qdelta_ref[...] = _gf_mul_tile(d, coeff_ref[0, 0])
-    bw = new.shape[-1]
-    w = U32(bw) - jax.lax.broadcasted_iota(U32, (1, bw), 1)
-    a_old = jnp.sum(old, axis=-1, dtype=U32)
-    b_old = jnp.sum(old * w, axis=-1, dtype=U32)
-    mism_ref[...] = jnp.stack([a_old, b_old], axis=-1) ^ stored_ref[...]
-    a = jnp.sum(new, axis=-1, dtype=U32)
-    b = jnp.sum(new * w, axis=-1, dtype=U32)
-    ck_ref[...] = jnp.stack([a, b], axis=-1)
+def _make_s_kernel(r: int, verify: bool):
+    """Kernel body: delta + r-1 weighted planes [+ verify] + checksums.
+
+    The delta tile is computed once in VMEM; plane 0 writes it raw
+    (g^0 = 1 statically), planes 1..r-1 each run one clmul over the
+    same registers — no tile is re-read.
+    """
+    def kernel(coeff_ref, old_ref, new_ref, *refs):
+        if verify:
+            stored_ref, sdelta_ref, ck_ref, mism_ref = refs
+        else:
+            sdelta_ref, ck_ref = refs
+        old = old_ref[...]
+        new = new_ref[...]
+        d = old ^ new
+        sdelta_ref[0] = d
+        for k in range(1, r):
+            sdelta_ref[k] = _gf_mul_tile(d, coeff_ref[k, 0])
+        if verify:
+            mism_ref[...] = _fletcher_terms(old) ^ stored_ref[...]
+        ck_ref[...] = _fletcher_terms(new)
+    return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fused_commit_pq(old: jax.Array, new: jax.Array, coeff: jax.Array, *,
-                    interpret: bool = False):
-    """One sweep over (old, new): (delta, coeff·delta, new Fletcher terms)."""
+def _s_call(old, new, stored, coeffs, r, interpret):
     assert old.shape == new.shape and old.dtype == U32 == new.dtype
     n, bw = old.shape
     tb = _pick_tile(n, TILE_BLOCKS)
-    coeff = jnp.asarray(coeff, U32).reshape(1, 1)
+    coeffs = jnp.asarray(coeffs, U32).reshape(r, 1)
+    verify = stored is not None
+    in_specs = [pl.BlockSpec((r, 1), lambda i: (0, 0)),
+                pl.BlockSpec((tb, bw), lambda i: (i, 0)),
+                pl.BlockSpec((tb, bw), lambda i: (i, 0))]
+    operands = [coeffs, old, new]
+    out_specs = [pl.BlockSpec((r, tb, bw), lambda i: (0, i, 0)),
+                 pl.BlockSpec((tb, 2), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((r, n, bw), U32),
+                 jax.ShapeDtypeStruct((n, 2), U32)]
+    if verify:
+        assert stored.shape == (n, 2) and stored.dtype == U32, stored.shape
+        in_specs.append(pl.BlockSpec((tb, 2), lambda i: (i, 0)))
+        operands.append(stored)
+        out_specs.append(pl.BlockSpec((tb, 2), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((n, 2), U32))
     return pl.pallas_call(
-        _pq_kernel,
+        _make_s_kernel(r, verify),
         grid=(n // tb,),
-        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
-                  pl.BlockSpec((tb, bw), lambda i: (i, 0)),
-                  pl.BlockSpec((tb, bw), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((tb, bw), lambda i: (i, 0)),
-                   pl.BlockSpec((tb, bw), lambda i: (i, 0)),
-                   pl.BlockSpec((tb, 2), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((n, bw), U32),
-                   jax.ShapeDtypeStruct((n, bw), U32),
-                   jax.ShapeDtypeStruct((n, 2), U32)],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(coeff, old, new)
-
-
-def _pq_verify_call(old, new, stored, coeff, interpret):
-    assert old.shape == new.shape and old.dtype == U32 == new.dtype
-    n, bw = old.shape
-    assert stored.shape == (n, 2) and stored.dtype == U32, stored.shape
-    tb = _pick_tile(n, TILE_BLOCKS)
-    coeff = jnp.asarray(coeff, U32).reshape(1, 1)
-    return pl.pallas_call(
-        _pq_verify_kernel,
-        grid=(n // tb,),
-        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
-                  pl.BlockSpec((tb, bw), lambda i: (i, 0)),
-                  pl.BlockSpec((tb, bw), lambda i: (i, 0)),
-                  pl.BlockSpec((tb, 2), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((tb, bw), lambda i: (i, 0)),
-                   pl.BlockSpec((tb, bw), lambda i: (i, 0)),
-                   pl.BlockSpec((tb, 2), lambda i: (i, 0)),
-                   pl.BlockSpec((tb, 2), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((n, bw), U32),
-                   jax.ShapeDtypeStruct((n, bw), U32),
-                   jax.ShapeDtypeStruct((n, 2), U32),
-                   jax.ShapeDtypeStruct((n, 2), U32)],
-        interpret=interpret,
-    )(coeff, old, new, stored)
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def fused_verify_commit_pq(old: jax.Array, new: jax.Array, stored: jax.Array,
-                           coeff: jax.Array, *, interpret: bool = False):
-    """Verify + delta + qdelta + new checksums from one sweep.
+def fused_commit_s(old: jax.Array, new: jax.Array, coeffs: jax.Array, *,
+                   interpret: bool = False):
+    """One sweep over (old, new): ((r, n, bw) sdeltas, new Fletcher terms)."""
+    r = coeffs.shape[0]
+    sdelta, ck = _s_call(old, new, None, coeffs, r, interpret)
+    return sdelta, ck
 
-    Returns (delta, qdelta, new_cksums, bad) with bad True where the old
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_verify_commit_s(old: jax.Array, new: jax.Array, stored: jax.Array,
+                          coeffs: jax.Array, *, interpret: bool = False):
+    """Verify + r sdeltas + new checksums from one sweep.
+
+    Returns (sdelta, new_cksums, bad) with bad True where the old
     block's recomputed Fletcher terms no longer match `stored`.
     """
-    delta, qdelta, ck, mism = _pq_verify_call(old, new, stored, coeff,
-                                              interpret)
-    return delta, qdelta, ck, jnp.any(mism != 0, axis=-1)
+    r = coeffs.shape[0]
+    sdelta, ck, mism = _s_call(old, new, stored, coeffs, r, interpret)
+    return sdelta, ck, jnp.any(mism != 0, axis=-1)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def fused_commit_old_terms_pq(old: jax.Array, new: jax.Array,
-                              coeff: jax.Array, *, interpret: bool = False):
-    """(delta, qdelta, new cksums, old cksums) — the MLP2 patch sweep."""
+def fused_commit_old_terms_s(old: jax.Array, new: jax.Array,
+                             coeffs: jax.Array, *, interpret: bool = False):
+    """(sdelta, new cksums, old cksums) — the MLP-ladder patch sweep."""
+    r = coeffs.shape[0]
     zeros = jnp.zeros((old.shape[0], 2), U32)
-    return _pq_verify_call(old, new, zeros, coeff, interpret)
+    return _s_call(old, new, zeros, coeffs, r, interpret)

@@ -93,25 +93,60 @@ def gf_scale(x: jax.Array, coeff, *,
     return _gf.gf_scale(x, coeff, interpret=p)
 
 
-def fused_commit_pq(old: jax.Array, new: jax.Array, coeff, *,
-                    interpret: Optional[bool] = None):
+def syndrome_scale(delta: jax.Array, coeffs, *,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """(r, *delta.shape) weighted-delta stack; coeffs None means r=1.
+
+    Plane 0 is the raw delta (g^0 = 1, statically skipped); plane k a
+    GF(2^32) scale — the standalone form of the weighting the fused
+    syndrome sweeps do in VMEM, for callers that already hold a delta
+    (the epoch flush's parity-only patch path).
+    """
+    if coeffs is None:
+        return delta[None]
     p = _pallas_path(interpret)
     if p is None:
-        return _ref.fused_commit_pq_ref(old, new, coeff)
-    return _gf.fused_commit_pq(old, new, coeff, interpret=p)
+        return _ref.sdelta_stack_ref(delta, coeffs)
+    r = coeffs.shape[0]
+    return jnp.stack([delta] + [_gf.gf_scale(delta, coeffs[k], interpret=p)
+                                for k in range(1, r)])
 
 
-def fused_verify_commit_pq(old: jax.Array, new: jax.Array, stored: jax.Array,
-                           coeff, *, interpret: Optional[bool] = None):
+# The fused syndrome sweeps take the rank's coefficient vector
+# (g^(k·me))_{k<r} — or None for r=1, which routes to the single-parity
+# commit_fused kernels so the r=1 program stays byte-identical to the
+# pre-stack engine (the delta plane is reshaped, never recomputed).
+
+def fused_commit_s(old: jax.Array, new: jax.Array, coeffs=None, *,
+                   interpret: Optional[bool] = None):
+    if coeffs is None:
+        delta, ck = fused_commit(old, new, interpret=interpret)
+        return delta[None], ck
     p = _pallas_path(interpret)
     if p is None:
-        return _ref.fused_verify_commit_pq_ref(old, new, stored, coeff)
-    return _gf.fused_verify_commit_pq(old, new, stored, coeff, interpret=p)
+        return _ref.fused_commit_s_ref(old, new, coeffs)
+    return _gf.fused_commit_s(old, new, coeffs, interpret=p)
 
 
-def fused_commit_old_terms_pq(old: jax.Array, new: jax.Array, coeff, *,
-                              interpret: Optional[bool] = None):
+def fused_verify_commit_s(old: jax.Array, new: jax.Array, stored: jax.Array,
+                          coeffs=None, *, interpret: Optional[bool] = None):
+    if coeffs is None:
+        delta, ck, bad = fused_verify_commit(old, new, stored,
+                                             interpret=interpret)
+        return delta[None], ck, bad
     p = _pallas_path(interpret)
     if p is None:
-        return _ref.fused_commit_old_terms_pq_ref(old, new, coeff)
-    return _gf.fused_commit_old_terms_pq(old, new, coeff, interpret=p)
+        return _ref.fused_verify_commit_s_ref(old, new, stored, coeffs)
+    return _gf.fused_verify_commit_s(old, new, stored, coeffs, interpret=p)
+
+
+def fused_commit_old_terms_s(old: jax.Array, new: jax.Array, coeffs=None, *,
+                             interpret: Optional[bool] = None):
+    if coeffs is None:
+        delta, new_ck, old_ck = fused_commit_old_terms(old, new,
+                                                       interpret=interpret)
+        return delta[None], new_ck, old_ck
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_commit_old_terms_s_ref(old, new, coeffs)
+    return _gf.fused_commit_old_terms_s(old, new, coeffs, interpret=p)

@@ -65,35 +65,47 @@ def fused_commit_old_terms_ref(old: jax.Array, new: jax.Array):
 
 
 def gf_scale_ref(x: jax.Array, coeff) -> jax.Array:
-    """Element-wise GF(2^32) multiply by a scalar coefficient (dual parity)."""
+    """Element-wise GF(2^32) multiply by a scalar coefficient."""
     from repro.core import gf
     return gf.mul_const(x, coeff)
 
 
-def fused_commit_pq_ref(old: jax.Array, new: jax.Array, coeff):
-    """Dual-parity commit sweep: (delta, coeff·delta, new cksums).
+def sdelta_stack_ref(delta: jax.Array, coeffs: jax.Array) -> jax.Array:
+    """The (r, *delta.shape) weighted-delta stack of the syndrome sweep.
 
-    The Q syndrome delta is the GF(2^32)-weighted XOR delta — weighted by
-    the committing rank's g^i so the zone collective can combine it with
-    plain XOR (core/gf.py).
+    Plane k is coeffs[k]·delta in GF(2^32); plane 0 is the raw delta
+    (coeffs[0] is g^0 = 1 by construction, so the multiply is skipped —
+    semantics AND cost of the kernels' k=0 fast path).
+    """
+    r = coeffs.shape[0]
+    return jnp.stack([delta] + [gf_scale_ref(delta, coeffs[k])
+                                for k in range(1, r)])
+
+
+def fused_commit_s_ref(old: jax.Array, new: jax.Array, coeffs):
+    """Syndrome commit sweep: ((r, n, bw) sdeltas, new cksums).
+
+    Syndrome k's delta is the GF(2^32)-weighted XOR delta — weighted by
+    the committing rank's g^(k·me) so the zone collective can combine it
+    with plain XOR (core/gf.py).
     """
     d = xor_delta_ref(old, new)
-    return d, gf_scale_ref(d, coeff), fletcher_blocks_ref(new)
+    return sdelta_stack_ref(d, coeffs), fletcher_blocks_ref(new)
 
 
-def fused_verify_commit_pq_ref(old: jax.Array, new: jax.Array,
-                               stored: jax.Array, coeff):
-    """Verify + delta + qdelta + new checksums, one logical sweep."""
+def fused_verify_commit_s_ref(old: jax.Array, new: jax.Array,
+                              stored: jax.Array, coeffs):
+    """Verify + r sdeltas + new checksums, one logical sweep."""
     assert stored.shape == (old.shape[0], 2) and stored.dtype == U32
     bad = jnp.any(fletcher_blocks_ref(old) != stored, axis=-1)
     d = xor_delta_ref(old, new)
-    return d, gf_scale_ref(d, coeff), fletcher_blocks_ref(new), bad
+    return sdelta_stack_ref(d, coeffs), fletcher_blocks_ref(new), bad
 
 
-def fused_commit_old_terms_pq_ref(old: jax.Array, new: jax.Array, coeff):
-    """(delta, qdelta, new cksums, old cksums) — MLP2's patch sweep."""
+def fused_commit_old_terms_s_ref(old: jax.Array, new: jax.Array, coeffs):
+    """(sdeltas, new cksums, old cksums) — the stacked patch sweep."""
     d = xor_delta_ref(old, new)
-    return (d, gf_scale_ref(d, coeff), fletcher_blocks_ref(new),
+    return (sdelta_stack_ref(d, coeffs), fletcher_blocks_ref(new),
             fletcher_blocks_ref(old))
 
 

@@ -19,9 +19,12 @@ def main(argv=None):
     ap.add_argument("--data", type=int, default=4)
     ap.add_argument("--model", type=int, default=2)
     ap.add_argument("--protect", default="mlpc")
-    ap.add_argument("--redundancy", type=int, default=1, choices=[1, 2],
-                    help="rank losses survived per zone: 1 = XOR parity, "
-                         "2 = + GF(2^32) Q syndrome")
+    ap.add_argument("--redundancy", type=int, default=1,
+                    choices=[1, 2, 3, 4],
+                    help="syndrome stack height r = rank losses survived "
+                         "per zone: 1 = XOR parity, 2 adds the GF(2^32) "
+                         "Q row, 3-4 add higher Vandermonde rows "
+                         "(requires r <= data-axis size - 1)")
     ap.add_argument("--scrub-period", type=int, default=16)
     ap.add_argument("--window", type=int, default=1,
                     help="deferred-epoch window W for the KV cache "

@@ -25,9 +25,12 @@ def main(argv=None):
     ap.add_argument("--protect", default="mlpc",
                     choices=["none", "ml", "mlp", "mlpc", "replica",
                              "mlp2", "mlpc2"])
-    ap.add_argument("--redundancy", type=int, default=1, choices=[1, 2],
-                    help="rank losses survived per zone: 1 = XOR parity, "
-                         "2 = + GF(2^32) Q syndrome")
+    ap.add_argument("--redundancy", type=int, default=1,
+                    choices=[1, 2, 3, 4],
+                    help="syndrome stack height r = rank losses survived "
+                         "per zone: 1 = XOR parity, 2 adds the GF(2^32) "
+                         "Q row, 3-4 add higher Vandermonde rows "
+                         "(requires r <= data-axis size - 1)")
     ap.add_argument("--scrub-period", type=int, default=50)
     ap.add_argument("--window", type=int, default=1,
                     help="deferred-epoch window W (1 = synchronous "

@@ -22,14 +22,17 @@ pgl -> Pool mapping (paper §3, Listing 2):
                       (pool.scrub() forces one)
     SIGBUS handler    pool.recover(Fault.rank_loss(r))
     corruption repair pool.recover(Fault.scribble(rank, pages))
-    (beyond paper)    pool.recover(Fault.double_loss(a, b)) — P+Q
+    (beyond paper)    pool.recover(Fault.multi_loss(*ranks)) — any
+                      e <= redundancy simultaneous losses via the
+                      Reed-Solomon syndrome stack
     pool resize       pool.rescale(new_mesh)
     ================  =============================================
 
 Protection-mode ladder (paper Table 2), selected by `ProtectConfig`:
-`none < ml < mlp < mlpc` plus `replica` (2x baseline) and the
-dual-parity levels `mlp2`/`mlpc2` (normally reached via
-`redundancy=2`).  `config.window` selects the engine: 1 = the
+`none < ml < mlp < mlpc` plus `replica` (2x baseline); `redundancy`
+r ∈ {1..4} stacks r Reed-Solomon syndromes onto the parity modes
+(the legacy `mlp2`/`mlpc2` names alias redundancy=2).
+`config.window` selects the engine: 1 = the
 synchronous single-sweep commit, W>1 = the deferred-epoch engine whose
 parity/checksum refresh amortizes over W commits.  The facade routes
 both through the same jit caches as direct engine use, so a
@@ -70,14 +73,16 @@ class Fault:
     Constructors mirror the failure taxonomy (runtime/failure.py):
 
         Fault.rank_loss(r)         one data-rank's row lost (media error)
-        Fault.double_loss(a, b)    two ranks lost at once (needs P+Q)
+        Fault.multi_loss(*ranks)   e ranks lost at once (needs
+                                   redundancy >= e syndromes)
+        Fault.double_loss(a, b)    the e=2 alias
         Fault.scribble(rank, pages) silent corruption at (rank, page)s
         Fault.from_event(event)    adapt a runtime FailureEvent
     """
-    kind: str                                   # rank_loss | double_loss
+    kind: str                                   # rank_loss | multi_loss
                                                 # | scribble
     rank: Optional[int] = None                  # rank_loss
-    ranks: Optional[Tuple[int, int]] = None     # double_loss
+    ranks: Optional[Tuple[int, ...]] = None     # multi_loss
     locations: Optional[Tuple[Tuple[int, int], ...]] = None  # scribble
 
     @staticmethod
@@ -85,11 +90,16 @@ class Fault:
         return Fault("rank_loss", rank=int(rank))
 
     @staticmethod
+    def multi_loss(*ranks: int) -> "Fault":
+        dead = tuple(sorted(int(r) for r in ranks))
+        if len(set(dead)) != len(dead) or len(dead) < 2:
+            raise ValueError(
+                f"multi loss needs >= 2 distinct ranks, got {ranks}")
+        return Fault("multi_loss", ranks=dead)
+
+    @staticmethod
     def double_loss(a: int, b: int) -> "Fault":
-        a, b = sorted((int(a), int(b)))
-        if a == b:
-            raise ValueError("double loss needs two distinct ranks")
-        return Fault("double_loss", ranks=(a, b))
+        return Fault.multi_loss(a, b)
 
     @staticmethod
     def scribble(rank: int, pages: Sequence[int]) -> "Fault":
@@ -101,8 +111,8 @@ class Fault:
         """Adapt a runtime/failure.py FailureEvent (duck-typed)."""
         if event.kind == "rank_loss":
             return cls.rank_loss(event.lost_rank)
-        if event.kind == "double_loss":
-            return cls.double_loss(*event.lost_ranks)
+        if event.kind in ("multi_loss", "double_loss"):
+            return cls.multi_loss(*event.lost_ranks)
         if event.kind == "scribble":
             return cls("scribble",
                        locations=tuple((int(r), int(p))
@@ -248,9 +258,11 @@ class Pool(EngineHost):
         mode = self.config.resolved_mode
         self.protector = Protector(
             mesh, abstract_state, state_specs, data_axis=data_axis,
-            mode=mode, block_words=self.config.block_words,
+            mode=mode, redundancy=self.config.resolved_redundancy,
+            block_words=self.config.block_words,
             hybrid_threshold=self.config.hybrid_threshold,
             log_capacity=self.config.log_capacity)
+        self._due_scrubs = 0          # full_scrub_every cadence counter
         # footprint arguments may be callables of the built zone layout
         # (e.g. lambda lo: range(len(lo.slots))) so callers need not
         # construct the layout twice just to size the deferred engine.
@@ -312,6 +324,11 @@ class Pool(EngineHost):
     @property
     def mode(self) -> Mode:
         return self.protector.mode
+
+    @property
+    def redundancy(self) -> int:
+        """Syndrome stack height r — simultaneous rank losses survived."""
+        return self.protector.redundancy
 
     @property
     def engine(self) -> Optional[DeferredProtector]:
@@ -385,8 +402,9 @@ class Pool(EngineHost):
     # -- scrub ------------------------------------------------------------------
 
     def scrub(self) -> ScrubReport:
-        """Force one scrub (flushing any open window first); repairs
-        detected scribbles in place and feeds the adaptive window."""
+        """Force one global scrub (flushing any open window first);
+        repairs detected scribbles in place and feeds the adaptive
+        window."""
         assert self.prot is not None
         self.flush()                 # scrub must see current redundancy
         prot, report = self.scrubber.run(
@@ -394,11 +412,35 @@ class Pool(EngineHost):
         self.prot = prot
         return report
 
+    def precheck(self) -> ScrubReport:
+        """The rank-local syndrome scrub (flushing any open window
+        first): state blocks vs checksums, row-cache coherence, and the
+        folded-syndrome compare — no full-row collective."""
+        assert self.prot is not None
+        self.flush()
+        return self.scrubber.precheck(self.prot)
+
     def maybe_scrub(self) -> Optional[ScrubReport]:
-        """Run a scrub iff the cadence says one is due."""
-        if self.scrubber.due():
-            return self.scrub()
-        return None
+        """Run a scrub iff the cadence says one is due.
+
+        With `config.full_scrub_every = N > 1`, a due scrub first runs
+        the rank-local pre-check; only every Nth due scrub — or any
+        pre-check that flags the pool suspect — pays for the global
+        syndrome collectives (and their repair path).  N = 1 keeps the
+        classic always-global cadence.
+        """
+        if not self.scrubber.due():
+            return None
+        n = self.config.full_scrub_every
+        self._due_scrubs += 1
+        if n > 1 and self._due_scrubs % n:
+            report = self.precheck()
+            if not report.suspect:
+                # clean local pass counts toward the cadence; the next
+                # global scrub still lands on the full_scrub_every beat
+                self.scrubber.mark_checked()
+                return report
+        return self.scrub()
 
     # -- recovery ---------------------------------------------------------------
 
@@ -407,8 +449,9 @@ class Pool(EngineHost):
         analogue).  Flushes any open window first — the cached row is a
         separate buffer the fault never touched, so the flushed
         redundancy describes intended values and online reconstruction
-        proceeds exactly as in the synchronous engine.  Dual-parity
-        modes additionally solve `Fault.double_loss`.  After recovery
+        proceeds exactly as in the synchronous engine.  Stacks with
+        redundancy >= e additionally solve `Fault.multi_loss` of e
+        ranks.  After recovery
         the deferred window collapses toward 1 (failure suspicion) and,
         when window metadata was replicated, the report carries the
         survivors' window bound.
@@ -425,8 +468,8 @@ class Pool(EngineHost):
             prot, rep = recovery_mod.recover_from_rank_loss(
                 self.protector, self.prot, fault.rank,
                 freeze=self._freeze, resume=self._resume)
-        elif fault.kind == "double_loss":
-            prot, rep = recovery_mod.recover_from_double_loss(
+        elif fault.kind == "multi_loss":
+            prot, rep = recovery_mod.recover_from_e_loss(
                 self.protector, self.prot, fault.ranks,
                 freeze=self._freeze, resume=self._resume)
         elif fault.kind == "scribble":
@@ -457,8 +500,9 @@ class Pool(EngineHost):
         Flush-before-rescale lands any open window, then the state
         reshards bit-exactly through the host and protection is rebuilt
         for the new zone geometry (G changes the row padding, the
-        page->owner map, and — under redundancy=2 — Q's Vandermonde
-        coefficients, so no syndrome can move with the state).  `into`
+        page->owner map, and every syndrome's Vandermonde coefficients
+        g^(k·i), so no plane of the stack can move with the state).
+        `into`
         reuses a cold pool already built for the new mesh (a runtime's
         own); otherwise a fresh pool with this one's config is built.
         """

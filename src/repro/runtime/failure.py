@@ -18,6 +18,7 @@ work at any mesh size.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence
 
 import jax
@@ -34,11 +35,11 @@ from repro.core.txn import ProtectedState, Protector
 
 @dataclasses.dataclass
 class FailureEvent:
-    kind: str                  # "rank_loss" | "double_loss" | "scribble"
+    kind: str                  # "rank_loss" | "multi_loss" | "scribble"
                                # | "canary"
     lost_rank: Optional[int] = None
     locations: Optional[list] = None   # [(rank, page)] for scribbles
-    lost_ranks: Optional[list] = None  # both ranks for double_loss
+    lost_ranks: Optional[list] = None  # every lost rank for multi_loss
 
 
 def inject_rank_loss(protector: Protector, prot: ProtectedState,
@@ -62,23 +63,25 @@ def inject_rank_loss(protector: Protector, prot: ProtectedState,
             FailureEvent("rank_loss", lost_rank=rank))
 
 
-def inject_double_rank_loss(protector: Protector, prot: ProtectedState,
-                            ranks) -> tuple:
-    """Garble TWO data-ranks' shards at once (overlapping failures).
+def inject_multi_rank_loss(protector: Protector, prot: ProtectedState,
+                           ranks) -> tuple:
+    """Garble e data-ranks' shards at once (overlapping failures).
 
-    The pod-scale scenario single-parity zones cannot survive: both rows
-    gone before either could be rebuilt.  Returns (prot, event) with a
-    "double_loss" event carrying both ranks.
+    The pod-scale scenario an (e-1)-syndrome zone cannot survive: all e
+    rows gone before any could be rebuilt.  Returns (prot, event) with a
+    "multi_loss" event carrying every lost rank.
     """
-    a, b = (int(r) for r in ranks)
-    assert a != b, "double loss needs two distinct ranks"
+    dead = sorted({int(r) for r in ranks})
+    assert len(dead) == len(list(ranks)) and len(dead) >= 2, (
+        f"multi loss needs >= 2 distinct ranks, got {list(ranks)}")
     lo, ax = protector.layout, protector.data_axis
 
     def _garble(state):
         row = layout_mod.flatten_row(lo, state)
         me = lax.axis_index(ax)
         garbage = row ^ jnp.uint32(0xA5A5A5A5)
-        out = jnp.where((me == a) | (me == b), garbage, row)
+        lost = functools.reduce(jnp.logical_or, [me == a for a in dead])
+        out = jnp.where(lost, garbage, row)
         return layout_mod.unflatten_row(lo, out)
 
     fn = jax.jit(shard_map(_garble, mesh=protector.mesh,
@@ -87,7 +90,14 @@ def inject_double_rank_loss(protector: Protector, prot: ProtectedState,
                            check_vma=False))
     bad_state = fn(prot.state)
     return (dataclasses.replace(prot, state=bad_state),
-            FailureEvent("double_loss", lost_ranks=sorted((a, b))))
+            FailureEvent("multi_loss", lost_ranks=dead))
+
+
+def inject_double_rank_loss(protector: Protector, prot: ProtectedState,
+                            ranks) -> tuple:
+    """Back-compat alias: the e=2 multi-rank loss."""
+    a, b = (int(r) for r in ranks)
+    return inject_multi_rank_loss(protector, prot, (a, b))
 
 
 def inject_scribble(protector: Protector, prot: ProtectedState,

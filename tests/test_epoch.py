@@ -30,25 +30,24 @@ def setup(mesh42):
 
 
 def _assert_protection_equal(pa, pb, mode):
-    np.testing.assert_array_equal(np.asarray(pa.parity), np.asarray(pb.parity))
+    # the whole syndrome stack (every S_k plane) must match bit-for-bit
+    np.testing.assert_array_equal(np.asarray(pa.synd), np.asarray(pb.synd))
     np.testing.assert_array_equal(np.asarray(pa.digest), np.asarray(pb.digest))
     np.testing.assert_array_equal(np.asarray(pa.row), np.asarray(pb.row))
     if mode.has_cksums:
         np.testing.assert_array_equal(np.asarray(pa.cksums),
                                       np.asarray(pb.cksums))
-    if mode.has_qparity:
-        np.testing.assert_array_equal(np.asarray(pa.qparity),
-                                      np.asarray(pb.qparity))
 
 
-@pytest.mark.parametrize("mode", [Mode.MLPC, Mode.MLP, Mode.MLPC2])
-def test_bulk_engine_matches_sync_at_boundaries(setup, mode):
+@pytest.mark.parametrize("mode,red", [(Mode.MLPC, 1), (Mode.MLP, 1),
+                                      (Mode.MLPC, 2), (Mode.MLPC, 3)])
+def test_bulk_engine_matches_sync_at_boundaries(setup, mode, red):
     """W full-state commits + one flush must land exactly where W
-    synchronous commits land: parity, cksums, digest, row AND the redo
-    log's per-step digests (the engine keeps the digest current inside
-    the window, so every record stays replay-verifiable)."""
+    synchronous commits land: syndromes, cksums, digest, row AND the
+    redo log's per-step digests (the engine keeps the digest current
+    inside the window, so every record stays replay-verifiable)."""
     mesh, state, specs, _ = setup
-    p = make_protector(mesh, state, specs, mode)
+    p = make_protector(mesh, state, specs, mode, redundancy=red)
     prot_sync = p.init(state)
     eng = DeferredProtector(p, window=4, donate=False)
     est = eng.init(state)
@@ -76,16 +75,17 @@ def test_bulk_engine_matches_sync_at_boundaries(setup, mode):
                                   np.asarray(cur["w1"]))
 
 
-@pytest.mark.parametrize("mode", [Mode.MLPC, Mode.MLP, Mode.MLPC2])
+@pytest.mark.parametrize("mode,red", [(Mode.MLPC, 1), (Mode.MLP, 1),
+                                      (Mode.MLPC, 2), (Mode.MLPC, 3)])
 @pytest.mark.parametrize("words", ["full", "dynamic"])
-def test_patch_engine_matches_sync(setup, mode, words):
+def test_patch_engine_matches_sync(setup, mode, red, words):
     """The decode-style engine commits against a static dirty-leaf set —
     either wholly-dirty leaves or a dynamic word-index array (one
     compiled program for every position) — and must match the
     static-dirty-set synchronous commit bit-for-bit, including at epoch
-    boundaries where the flush lands parity and checksums."""
+    boundaries where the flush lands the syndrome stack and checksums."""
     mesh, state, specs, _ = setup
-    p = make_protector(mesh, state, specs, mode)
+    p = make_protector(mesh, state, specs, mode, redundancy=red)
     prot_sync = p.init(state)
     lo = p.layout
     pages = layout_mod.leaf_pages(lo, 1).tolist()      # w1's page columns
@@ -386,16 +386,15 @@ def trainer_cfg():
         compute_dtype="float32")
 
 
-def test_elastic_rescale_windowed_rebuilds_p_and_q(setup, mesh81):
+def test_elastic_rescale_windowed_rebuilds_all_syndromes(setup, mesh81):
     """ISSUE satellite: elastic rescale under W>1 must flush-before-
-    rescale, then rebuild P AND Q bit-exactly on the new mesh geometry
-    (G changes 4 -> 8: new segment lengths, new page->owner map, new
-    Vandermonde coefficients for Q)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    rescale, then rebuild EVERY syndrome bit-exactly on the new mesh
+    geometry (G changes 4 -> 8: new segment lengths, new page->owner
+    map, new Vandermonde coefficients g^(k·i) for all r rows)."""
     from repro.dist import elastic
     mesh, state, specs, _ = setup
     state = jax.tree.map(jnp.copy, state)
-    p = make_protector(mesh, state, specs, Mode.MLPC2)
+    p = make_protector(mesh, state, specs, Mode.MLPC, redundancy=3)
     eng = DeferredProtector(p, window=3, donate=False)
     est = eng.init(state)
     cur = state
@@ -406,7 +405,8 @@ def test_elastic_rescale_windowed_rebuilds_p_and_q(setup, mesh81):
     assert eng.needs_flush
 
     def make_protector_new(new_mesh):
-        return make_protector(new_mesh, state, specs, Mode.MLPC2)
+        return make_protector(new_mesh, state, specs, Mode.MLPC,
+                              redundancy=3)
 
     p_new, prot_new = elastic.rescale_windowed(eng, est,
                                                make_protector_new, mesh81)
@@ -416,18 +416,19 @@ def test_elastic_rescale_windowed_rebuilds_p_and_q(setup, mesh81):
     for k, v in cur.items():
         np.testing.assert_array_equal(np.asarray(prot_new.state[k]),
                                       np.asarray(v))
-    # ...P and Q verify on the new geometry, bit-identical to a fresh
-    # rebuild of the same state there
+    # ...every syndrome verifies on the new geometry, bit-identical to a
+    # fresh rebuild of the same state there
     rep = p_new.scrub(prot_new)
-    assert bool(rep["parity_ok"]) and bool(rep["qparity_ok"])
+    assert np.asarray(rep["synd_ok"]).shape == (3,)
+    assert np.asarray(rep["synd_ok"]).all()
     assert not np.asarray(rep["bad_pages"]).any()
     fresh = p_new.init(prot_new.state)
-    _assert_protection_equal(fresh, prot_new, Mode.MLPC2)
-    # and the new zone still solves a double loss
+    _assert_protection_equal(fresh, prot_new, Mode.MLPC)
+    # and the new zone still solves a triple loss
     from repro.runtime import failure
     snap = np.asarray(prot_new.state["w1"]).copy()
-    bad, ev = failure.inject_double_rank_loss(p_new, prot_new, (2, 5))
-    rec, ok = p_new.recover_two(bad, *ev.lost_ranks)
+    bad, ev = failure.inject_multi_rank_loss(p_new, prot_new, (2, 5, 7))
+    rec, ok = p_new.recover_e(bad, ev.lost_ranks)
     assert bool(ok)
     np.testing.assert_array_equal(np.asarray(rec.state["w1"]), snap)
 

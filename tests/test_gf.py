@@ -1,9 +1,11 @@
-"""Dual-parity erasure subsystem: GF(2^32) arithmetic, the gf_parity
-Pallas kernel family vs its oracles, P+Q commit threading (P path must
-stay bit-identical to single-parity modes), two-rank reconstruction
-(including mid-window at W=16 and rank-loss-with-outstanding-scribble),
-adaptive window feedback, window-metadata replication, and ProtectConfig
-validation."""
+"""Generalized Reed-Solomon syndrome subsystem: GF(2^32) arithmetic and
+the e x e Vandermonde solve, the gf_parity syndrome-kernel family vs its
+oracles, stack threading through the commit engines (the S_0 prefix must
+stay bit-identical across stack heights, and r=1/r=2 must match the
+host-computed P/Q golden values — the PR 4 semantics), the e-of-r
+reconstruction matrix (r in 1..4, every e <= r, including
+loss-plus-scribble), adaptive window feedback, and ProtectConfig /
+Protector validation."""
 import dataclasses
 import random
 
@@ -16,7 +18,7 @@ from repro.core import gf
 from repro.core import layout as layout_mod
 from repro.core.epoch import DeferredProtector
 from repro.core.scrub import Scrubber
-from repro.core.txn import Mode, Protector, resolve_mode
+from repro.core.txn import Mode, Protector, resolved_mode
 from repro.kernels import gf_parity as gfk
 from repro.kernels import ref
 from repro.runtime import failure
@@ -69,8 +71,55 @@ def test_gf_device_matches_host():
             np.asarray(gf.mul_const(x, gf.pow_g_int(k))))
 
 
+def test_syndrome_table_shape_and_rows():
+    """Entry [i][k] = g^(k·i): column 0 all-ones (S_0 = XOR parity),
+    column 1 the classic per-rank Q coefficients."""
+    t = gf.syndrome_array(8, 4)
+    assert t.shape == (8, 4)
+    np.testing.assert_array_equal(t[:, 0], np.ones(8, np.uint32))
+    np.testing.assert_array_equal(t[:, 1], gf.pow_g_array(8))
+    for i in range(8):
+        for k in range(4):
+            assert int(t[i, k]) == gf.pow_g_int(k * i)
+
+
+def test_inv_vandermonde_is_exact_inverse():
+    """V · V^-1 == I over GF(2^32) for every erasure-set size 1..4."""
+    rng = random.Random(2)
+    for e in range(1, 5):
+        ranks = tuple(sorted(rng.sample(range(64), e)))
+        v = gf.vandermonde_int(ranks)
+        inv = gf.inv_vandermonde_int(ranks)
+        for i in range(e):
+            for j in range(e):
+                acc = 0
+                for k in range(e):
+                    acc ^= gf.mul_int(v[i][k], inv[k][j])
+                assert acc == (1 if i == j else 0), (ranks, i, j)
+
+
+@pytest.mark.parametrize("e", [1, 2, 3, 4])
+def test_gf_solve_e_roundtrip(e):
+    """The e x e Vandermonde solve recovers all e lost rows exactly."""
+    rng = np.random.default_rng(2)
+    rows = [jnp.asarray(rng.integers(0, 1 << 32, 256, dtype=np.uint32))
+            for _ in range(e)]
+    for ranks in [tuple(range(e)), tuple(range(1, 2 * e, 2)),
+                  tuple(sorted(np.random.default_rng(e).choice(
+                      63, e, replace=False).tolist()))]:
+        deficits = []
+        for k in range(e):
+            acc = jnp.zeros_like(rows[0])
+            for j, a in enumerate(ranks):
+                acc = acc ^ gf.mul_const(rows[j], gf.pow_g_int(k * a))
+            deficits.append(acc)
+        got = gf.solve_e(jnp.stack(deficits), ranks)
+        for g, w in zip(got, rows):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
 def test_gf_solve_two_roundtrip():
-    """The 2x2 Vandermonde solve recovers both lost rows exactly."""
+    """The e=2 alias recovers both lost rows exactly."""
     rng = np.random.default_rng(2)
     a = jnp.asarray(rng.integers(0, 1 << 32, 512, dtype=np.uint32))
     b = jnp.asarray(rng.integers(0, 1 << 32, 512, dtype=np.uint32))
@@ -85,33 +134,30 @@ def test_gf_solve_two_roundtrip():
 # -- kernels vs oracles -------------------------------------------------------
 
 @pytest.mark.parametrize("shape", [(8, 64), (5, 128), (1, 256)])
-def test_gf_kernels_match_oracles(shape):
-    """The gf_parity Pallas kernels (interpret mode) are bit-identical to
-    the jnp oracles on every output."""
+@pytest.mark.parametrize("r", [1, 2, 3, 4])
+def test_syndrome_kernels_match_oracles(shape, r):
+    """The gf_parity syndrome kernels (interpret mode) are bit-identical
+    to the jnp oracles on every output and every stack height."""
     rng = np.random.default_rng(3)
     old = jnp.asarray(rng.integers(0, 1 << 32, shape, dtype=np.uint32))
     new = jnp.asarray(rng.integers(0, 1 << 32, shape, dtype=np.uint32))
     stored = jnp.asarray(
         rng.integers(0, 1 << 32, (shape[0], 2), dtype=np.uint32))
-    coeff = jnp.asarray(0xC0FFEE42, U32)
+    coeffs = jnp.asarray([gf.pow_g_int(k * 5) for k in range(r)], U32)
 
-    np.testing.assert_array_equal(
-        np.asarray(gfk.gf_scale(old, coeff, interpret=True)),
-        np.asarray(ref.gf_scale_ref(old, coeff)))
-
-    got = gfk.fused_commit_pq(old, new, coeff, interpret=True)
-    want = ref.fused_commit_pq_ref(old, new, coeff)
+    got = gfk.fused_commit_s(old, new, coeffs, interpret=True)
+    want = ref.fused_commit_s_ref(old, new, coeffs)
     for g, w in zip(got, want):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
-    got = gfk.fused_verify_commit_pq(old, new, stored, coeff,
-                                     interpret=True)
-    want = ref.fused_verify_commit_pq_ref(old, new, stored, coeff)
+    got = gfk.fused_verify_commit_s(old, new, stored, coeffs,
+                                    interpret=True)
+    want = ref.fused_verify_commit_s_ref(old, new, stored, coeffs)
     for g, w in zip(got, want):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
-    got = gfk.fused_commit_old_terms_pq(old, new, coeff, interpret=True)
-    want = ref.fused_commit_old_terms_pq_ref(old, new, coeff)
+    got = gfk.fused_commit_old_terms_s(old, new, coeffs, interpret=True)
+    want = ref.fused_commit_old_terms_s_ref(old, new, coeffs)
     for g, w in zip(got, want):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
@@ -126,17 +172,35 @@ def test_gf_scale_1d_and_verify_flags():
     old = jnp.asarray(rng.integers(0, 1 << 32, (4, 64), dtype=np.uint32))
     new = old ^ U32(1)
     stored = ref.fletcher_blocks_ref(old)
-    _, _, _, bad = gfk.fused_verify_commit_pq(old, new, stored, 3,
-                                              interpret=True)
+    coeffs = jnp.asarray([1, 3, 9], U32)
+    _, _, bad = gfk.fused_verify_commit_s(old, new, stored, coeffs,
+                                          interpret=True)
     assert not np.asarray(bad).any()
     smashed = old.at[2, 5].set(old[2, 5] ^ U32(0x40))
-    _, _, _, bad = gfk.fused_verify_commit_pq(smashed, new, stored, 3,
-                                              interpret=True)
+    _, _, bad = gfk.fused_verify_commit_s(smashed, new, stored, coeffs,
+                                          interpret=True)
     np.testing.assert_array_equal(np.asarray(bad),
                                   [False, False, True, False])
 
 
-# -- P+Q commit threading -----------------------------------------------------
+def test_sdelta_plane_zero_is_raw_delta():
+    """The k=0 plane must be the raw delta (g^0 = 1, no clmul) — the
+    property that keeps r=1 at single-parity kernel cost."""
+    rng = np.random.default_rng(5)
+    old = jnp.asarray(rng.integers(0, 1 << 32, (4, 64), dtype=np.uint32))
+    new = jnp.asarray(rng.integers(0, 1 << 32, (4, 64), dtype=np.uint32))
+    coeffs = jnp.asarray([1, 2], U32)
+    sdelta, _ = gfk.fused_commit_s(old, new, coeffs, interpret=True)
+    np.testing.assert_array_equal(np.asarray(sdelta[0]),
+                                  np.asarray(old ^ new))
+    from repro.kernels import ops as kops
+    sd1, ck1 = kops.fused_commit_s(old, new, None)
+    d, ck = kops.fused_commit(old, new)
+    np.testing.assert_array_equal(np.asarray(sd1[0]), np.asarray(d))
+    np.testing.assert_array_equal(np.asarray(ck1), np.asarray(ck))
+
+
+# -- stack threading through the commit engines -------------------------------
 
 @pytest.fixture(scope="module")
 def setup(mesh42):
@@ -144,19 +208,21 @@ def setup(mesh42):
     return mesh42, state, specs, shardings
 
 
-def _q_verifies(p, prot) -> bool:
-    return bool(jax.device_get(p.scrub(prot)["qparity_ok"]))
+def _synd_verifies(p, prot) -> bool:
+    return bool(np.asarray(jax.device_get(
+        p.scrub(prot)["synd_ok"])).all())
 
 
-@pytest.mark.parametrize("base,dual", [(Mode.MLPC, Mode.MLPC2),
-                                       (Mode.MLP, Mode.MLP2)])
-def test_dual_parity_p_path_bit_identical(setup, base, dual):
-    """redundancy=2 must not perturb the single-parity engine: P, cksums,
-    digest and row stay bit-identical to the base mode across bulk,
-    patch, and verify_old commits — with Q verifying at every step."""
+@pytest.mark.parametrize("base", [Mode.MLPC, Mode.MLP])
+@pytest.mark.parametrize("red", [2, 3])
+def test_stack_prefix_bit_identical(setup, base, red):
+    """redundancy=r must not perturb the lower-r engine: S_0 (and every
+    shared plane), cksums, digest and row stay bit-identical to the
+    r=1 protector across bulk, patch, and verify_old commits — with the
+    whole stack verifying at every step."""
     mesh, state, specs, _ = setup
     p1 = make_protector(mesh, state, specs, base)
-    p2 = make_protector(mesh, state, specs, dual)
+    p2 = make_protector(mesh, state, specs, base, redundancy=red)
     a, b = p1.init(state), p2.init(state)
     lo = p2.layout
     pages = layout_mod.leaf_pages(lo, 1).tolist()
@@ -179,31 +245,78 @@ def test_dual_parity_p_path_bit_identical(setup, base, dual):
         if base.has_cksums:
             np.testing.assert_array_equal(np.asarray(a.cksums),
                                           np.asarray(b.cksums))
-        assert _q_verifies(p2, b), (i, kw)
-    assert a.qparity is None and b.qparity is not None
+        assert _synd_verifies(p2, b), (i, kw)
+    assert a.synd.shape[-2] == 1 and b.synd.shape[-2] == red
 
 
-def test_resolve_mode_ladder():
-    assert resolve_mode("mlpc", 1) is Mode.MLPC
-    assert resolve_mode("mlpc", 2) is Mode.MLPC2
-    assert resolve_mode("mlp", 2) is Mode.MLP2
-    assert resolve_mode(Mode.MLPC2, 2) is Mode.MLPC2
-    assert Mode.MLPC2.redundancy == 2 and Mode.MLPC.redundancy == 1
-    with pytest.raises(ValueError, match="redundancy=2"):
-        resolve_mode("ml", 2)
-    with pytest.raises(ValueError, match="redundancy"):
-        resolve_mode("mlpc", 3)
-
-
-# -- two-rank reconstruction --------------------------------------------------
-
-@pytest.mark.parametrize("mode", [Mode.MLPC2, Mode.MLP2])
-@pytest.mark.parametrize("ranks", [(0, 1), (1, 3), (0, 3)])
-def test_double_rank_loss_reconstructs(setup, mode, ranks):
-    """ISSUE acceptance: any two simultaneous rank losses reconstruct
-    bit-exactly against a pre-loss snapshot."""
+def test_r1_r2_golden_p_q_regression(setup):
+    """ISSUE acceptance: the r=1 and r=2 stacks must equal the
+    host-computed XOR parity P and GF(2^32) Q — the exact PR 4
+    dual-parity semantics, recomputed independently with exact host
+    integers from the committed row."""
     mesh, state, specs, _ = setup
-    p = make_protector(mesh, state, specs, mode)
+    g = mesh.shape["data"]
+    p2 = make_protector(mesh, state, specs, Mode.MLPC, redundancy=2)
+    prot = p2.init(state)
+    cur = jax.tree.map(lambda x: (x * 1.5 + 0.125).astype(x.dtype), state)
+    prot, ok = p2.commit(prot, cur, rng_key=jax.random.PRNGKey(0))
+    assert bool(ok)
+    # rank i's full row, (G, row_words) — row is replicated over the
+    # model axis, so take model-coordinate 0
+    rows = np.asarray(prot.row)[:, 0, :]
+    seg = rows.shape[1] // g
+    p_want = np.bitwise_xor.reduce(rows, axis=0)
+    q_want = np.zeros_like(p_want)
+    for i in range(g):
+        ci = gf.pow_g_int(i)
+        q_want ^= np.asarray([gf.mul_int(int(w), ci) for w in rows[i]],
+                             np.uint32)
+    synd = np.asarray(prot.synd)[:, 0]                    # (G, 2, seg)
+    for i in range(g):
+        np.testing.assert_array_equal(synd[i, 0],
+                                      p_want[i * seg:(i + 1) * seg])
+        np.testing.assert_array_equal(synd[i, 1],
+                                      q_want[i * seg:(i + 1) * seg])
+    # and the r=1 stack is exactly the P plane
+    p1 = make_protector(mesh, state, specs, Mode.MLPC)
+    prot1 = p1.init(state)
+    prot1, _ = p1.commit(prot1, cur, rng_key=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(prot1.synd)[:, :, 0],
+                                  np.asarray(prot.synd)[:, :, 0])
+
+
+def test_resolved_mode_ladder():
+    assert resolved_mode("mlpc", 1) == (Mode.MLPC, 1)
+    assert resolved_mode("mlpc", 3) == (Mode.MLPC, 3)
+    assert resolved_mode("mlp", 2) == (Mode.MLP, 2)
+    # legacy dual-parity aliases keep working
+    assert resolved_mode("mlpc2") == (Mode.MLPC, 2)
+    assert resolved_mode("mlp2", 1) == (Mode.MLP, 2)
+    assert resolved_mode("mlp2", 3) == (Mode.MLP, 3)   # explicit r wins
+    assert resolved_mode(Mode.MLPC, 4) == (Mode.MLPC, 4)
+    with pytest.raises(ValueError, match="redundancy"):
+        resolved_mode("ml", 2)
+    with pytest.raises(ValueError, match="redundancy"):
+        resolved_mode("mlpc", 5)
+    with pytest.raises(ValueError, match="redundancy"):
+        resolved_mode("mlpc", 0)
+
+
+# -- e-of-r reconstruction matrix ---------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup8(mesh81):
+    state, specs, shardings = small_state(mesh81)
+    return mesh81, state, specs, shardings
+
+
+@pytest.mark.parametrize("r,e", [(r, e) for r in (1, 2, 3, 4)
+                                 for e in range(1, r + 1)])
+def test_e_of_r_loss_reconstructs(setup8, r, e):
+    """ISSUE acceptance: any e <= r simultaneous rank losses reconstruct
+    bit-exactly against a pre-loss snapshot, for every stack height."""
+    mesh, state, specs, _ = setup8
+    p = make_protector(mesh, state, specs, Mode.MLPC, redundancy=r)
     prot = p.init(state)
     cur = state
     for i in range(2):
@@ -211,46 +324,58 @@ def test_double_rank_loss_reconstructs(setup, mode, ranks):
         prot, ok = p.commit(prot, cur, rng_key=jax.random.PRNGKey(i))
         assert bool(ok)
     snap = {k: np.asarray(v).copy() for k, v in prot.state.items()}
-    bad, event = failure.inject_double_rank_loss(p, prot, ranks)
-    assert event.kind == "double_loss"
-    rec, ok = p.recover_two(bad, *event.lost_ranks)
-    assert bool(ok) or not mode.has_cksums
+    ranks = tuple(range(0, 2 * e, 2))[:e]          # spread over the zone
+    if e == 1:
+        bad, event = failure.inject_rank_loss(p, prot, ranks[0])
+        rec, ok = p.recover_rank(bad, ranks[0])
+    else:
+        bad, event = failure.inject_multi_rank_loss(p, prot, ranks)
+        assert event.kind == "multi_loss"
+        rec, ok = p.recover_e(bad, event.lost_ranks)
+    assert bool(ok)
     for k in snap:
         np.testing.assert_array_equal(np.asarray(rec.state[k]), snap[k])
-    assert _q_verifies(p, rec)
+    assert _synd_verifies(p, rec)
 
 
-def test_double_loss_unrecoverable_without_q(setup):
-    mesh, state, specs, _ = setup
-    p = make_protector(mesh, state, specs, Mode.MLPC)
+def test_loss_exceeding_redundancy_raises(setup8):
+    mesh, state, specs, _ = setup8
+    p = make_protector(mesh, state, specs, Mode.MLPC, redundancy=2)
     from repro.core import recovery as recovery_mod
-    with pytest.raises(RuntimeError, match="no Q syndrome"):
-        recovery_mod.recover_from_double_loss(p, p.init(state), (0, 1))
+    with pytest.raises(RuntimeError, match="redundancy"):
+        recovery_mod.recover_from_e_loss(p, p.init(state), (0, 1, 2))
+    p1 = make_protector(mesh, state, specs, Mode.MLPC)
+    with pytest.raises(RuntimeError, match="redundancy"):
+        recovery_mod.recover_from_double_loss(p1, p1.init(state), (0, 1))
 
 
-def test_rank_loss_with_outstanding_scribble(setup):
-    """A rank loss while another rank's scribble is still unrepaired is a
-    double erasure: naming the scribbled rank as the second loss brings
-    both back to intended values (single parity cannot untangle this)."""
-    mesh, state, specs, _ = setup
-    p = make_protector(mesh, state, specs, Mode.MLPC2)
+@pytest.mark.parametrize("r,e", [(2, 1), (3, 2), (4, 3)])
+def test_loss_with_outstanding_scribble(setup8, r, e):
+    """e rank losses while another rank's scribble is still unrepaired is
+    an (e+1)-erasure: naming the scribbled rank as the extra loss brings
+    everything back to intended values (an e-syndrome stack cannot
+    untangle this)."""
+    mesh, state, specs, _ = setup8
+    p = make_protector(mesh, state, specs, Mode.MLPC, redundancy=r)
     prot = p.init(state)
     snap = {k: np.asarray(v).copy() for k, v in prot.state.items()}
-    # scribble rank 1 (undetected — no scrub ran), then lose rank 3
+    # scribble rank 1 (undetected — no scrub ran), then lose e more ranks
     bad, _ = failure.inject_scribble(p, prot, rank=1,
                                      word_offsets=[3, 70])
-    bad, _ = failure.inject_rank_loss(p, bad, rank=3)
-    rec, ok = p.recover_two(bad, 1, 3)
+    dead = tuple(range(3, 3 + e))
+    for a in dead:
+        bad, _ = failure.inject_rank_loss(p, bad, rank=a)
+    rec, ok = p.recover_e(bad, (1,) + dead)
     assert bool(ok)
     for k in snap:
         np.testing.assert_array_equal(np.asarray(rec.state[k]), snap[k])
 
 
-def test_mid_window_double_loss_w16(trainer_cfg, mesh42):
-    """ISSUE acceptance: a double loss landing mid-window at W=16 in
-    redundancy=2 mode reconstructs bit-exactly — the flush brings P and Q
-    current from the cached row, then the Vandermonde solve rebuilds both
-    lost rows; the replicated window metadata bounds the window with no
+def test_mid_window_triple_loss_w16(trainer_cfg, mesh42):
+    """A triple loss landing mid-window at W=16 with redundancy=3
+    reconstructs bit-exactly — the flush brings the whole stack current
+    from the cached row, then the Vandermonde solve rebuilds all lost
+    rows; the replicated window metadata bounds the window with no
     checkpoint + log replay."""
     from repro.configs.base import ProtectConfig, TrainConfig
     from repro.runtime.trainer import Trainer
@@ -258,19 +383,19 @@ def test_mid_window_double_loss_w16(trainer_cfg, mesh42):
                 TrainConfig(learning_rate=1e-3, warmup_steps=2,
                             total_steps=100),
                 ProtectConfig(mode="mlpc", block_words=64, window=16,
-                              redundancy=2),
+                              redundancy=3),
                 mesh42, seq_len=32, global_batch=8, seed=3)
     t.initialize()
-    assert t.protector.mode is Mode.MLPC2
+    assert t.protector.mode is Mode.MLPC and t.protector.redundancy == 3
     t.run(3)
     assert t._engine.needs_flush, "loss must land strictly mid-window"
     snap = jax.tree.map(lambda x: np.asarray(x).copy(), t.prot.state)
-    bad, event = failure.inject_double_rank_loss(t.protector, t.prot,
-                                                 ranks=(0, 2))
+    bad, event = failure.inject_multi_rank_loss(t.protector, t.prot,
+                                                ranks=(0, 2, 3))
     t._est = dataclasses.replace(t._est, prot=bad)
     rep = t.on_failure(event)
-    assert rep["kind"] == "double_loss" and rep["verified"]
-    assert rep["lost_ranks"] == [0, 2]
+    assert rep["kind"] == "multi_loss" and rep["verified"]
+    assert rep["lost_ranks"] == [0, 2, 3]
     # survivors' replicated metadata bounded the lost window exactly
     assert rep["window_bound"]["digest_verified"]
     assert rep["window_bound"]["pending"] == 3
@@ -280,7 +405,7 @@ def test_mid_window_double_loss_w16(trainer_cfg, mesh42):
     for k in jax.tree.leaves(jax.tree.map(
             lambda a, b: np.array_equal(a, b), snap, got)):
         assert k
-    assert _q_verifies(t.protector, t.prot)
+    assert _synd_verifies(t.protector, t.prot)
 
 
 # -- adaptive window ----------------------------------------------------------
@@ -289,7 +414,7 @@ def test_adaptive_window_shrinks_and_regrows(setup):
     """Scrub pressure collapses W to 1; consecutive clean scrubs double
     it back up to the configured ceiling."""
     mesh, state, specs, shardings = setup
-    p = make_protector(mesh, state, specs, Mode.MLPC2)
+    p = make_protector(mesh, state, specs, Mode.MLPC, redundancy=2)
     eng = DeferredProtector(p, window=8, donate=False)
     scrubber = Scrubber(p, period=1, engine=eng)
     est = eng.init(state)
@@ -310,28 +435,104 @@ def test_adaptive_window_shrinks_and_regrows(setup):
     for _ in range(4):
         prot, report = scrubber.run(est.prot)
         assert not report.suspect
-        assert report.qparity_ok
+        assert report.synd_ok == [True, True]
         est = dataclasses.replace(est, prot=prot)
         widths.append(eng.window)
     assert widths == [2, 4, 8, 8]
     assert eng.max_window == 8
 
 
-# -- ProtectConfig validation -------------------------------------------------
+def test_precheck_feeds_adaptive_window(setup):
+    """A clean rank-local pre-check standing in for a scrub must regrow
+    a shrunken window exactly like a clean global scrub — otherwise
+    full_scrub_every=N would slow regrowth by N."""
+    mesh, state, specs, _ = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC, redundancy=2)
+    eng = DeferredProtector(p, window=8, donate=False)
+    scrubber = Scrubber(p, period=1, engine=eng)
+    est = eng.init(state)
+    eng.report_pressure(True)                  # suspicion: W -> 1
+    assert eng.window == 1
+    widths = []
+    for _ in range(4):
+        rep = scrubber.precheck(est.prot)
+        assert rep.local_only and not rep.suspect
+        widths.append(eng.window)
+    assert widths == [2, 4, 8, 8]
+    # and a suspect pre-check collapses it right back
+    bad, _ = failure.inject_scribble(p, est.prot, rank=1,
+                                     word_offsets=[5])
+    rep = scrubber.precheck(dataclasses.replace(est, prot=bad).prot)
+    assert rep.suspect and eng.window == 1
+
+
+# -- rank-local syndrome scrub ------------------------------------------------
+
+def test_local_scrub_clean_pool(setup):
+    """The rank-local pre-check agrees with the global scrub on a clean
+    pool: no bad pages, every syndrome fold matches, cache coherent."""
+    mesh, state, specs, _ = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC, redundancy=3)
+    prot = p.init(state)
+    out = p.local_scrub(prot)
+    assert np.asarray(out["synd_ok"]).shape == (3,)
+    assert np.asarray(out["synd_ok"]).all()
+    assert bool(out["row_cache_ok"])
+    assert not np.asarray(out["bad_pages"]).any()
+
+
+def test_local_scrub_detects_syndrome_rot(setup):
+    """Bit-rot in a stored syndrome segment — invisible to the checksum
+    table, which covers only the state — is caught by the folded
+    syndrome compare without any full-row collective."""
+    mesh, state, specs, _ = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC, redundancy=2)
+    prot = p.init(state)
+    synd = np.asarray(prot.synd).copy()
+    synd[2, 0, 1, 7] ^= 0x10000          # rot rank 2's S_1 segment
+    bad = dataclasses.replace(prot, synd=jax.device_put(
+        jnp.asarray(synd), prot.synd.sharding))
+    out = p.local_scrub(bad)
+    ok = np.asarray(out["synd_ok"])
+    assert bool(ok[0]) and not bool(ok[1]), ok
+    assert not np.asarray(out["bad_pages"]).any()
+    # the global scrub agrees plane-for-plane
+    gout = p.scrub(bad)
+    np.testing.assert_array_equal(np.asarray(gout["synd_ok"]), ok)
+
+
+def test_local_scrub_detects_state_scribble(setup):
+    """A state scribble shows up in the local checksum check AND flips
+    the affected syndrome folds (the weighted row changed)."""
+    mesh, state, specs, shardings = setup
+    p = make_protector(mesh, state, specs, Mode.MLPC, redundancy=2)
+    prot = p.init(state)
+    bad, _ = failure.inject_scribble(p, prot, rank=1, word_offsets=[9])
+    out = p.local_scrub(bad)
+    assert np.asarray(out["bad_pages"]).any()
+    assert not np.asarray(out["synd_ok"]).all()
+
+
+# -- ProtectConfig / Protector validation -------------------------------------
 
 def test_protect_config_validation():
     from repro.configs.base import ProtectConfig
     ProtectConfig(mode="mlpc", window=16, redundancy=2)     # valid
+    ProtectConfig(mode="mlpc", redundancy=4)                # valid now
     with pytest.raises(ValueError, match="not a protection level"):
         ProtectConfig(mode="mlqc")
     with pytest.raises(ValueError, match="window"):
         ProtectConfig(window=0)
     with pytest.raises(ValueError, match="scrub_period"):
         ProtectConfig(scrub_period=-5)
-    with pytest.raises(ValueError, match="at most two syndromes"):
-        ProtectConfig(redundancy=3)
-    with pytest.raises(ValueError, match="requires.*parity mode"):
+    with pytest.raises(ValueError, match="1 to 4"):
+        ProtectConfig(redundancy=5)
+    with pytest.raises(ValueError, match="1 to 4"):
+        ProtectConfig(redundancy=0)
+    with pytest.raises(ValueError, match="requires a parity mode"):
         ProtectConfig(mode="ml", redundancy=2)
+    with pytest.raises(ValueError, match="full_scrub_every"):
+        ProtectConfig(full_scrub_every=0)
     with pytest.raises(ValueError, match="block_words"):
         ProtectConfig(block_words=0)
     with pytest.raises(ValueError, match="hybrid_threshold"):
@@ -340,18 +541,32 @@ def test_protect_config_validation():
         ProtectConfig(log_capacity=0)
 
 
+def test_protector_rejects_redundancy_beyond_zone(setup):
+    """r > num_ranks - 1 leaves no survivor: rejected with an actionable
+    error naming the zone size."""
+    mesh, state, specs, _ = setup                 # G = 4
+    with pytest.raises(ValueError, match="num_ranks - 1"):
+        make_protector(mesh, state, specs, Mode.MLPC, redundancy=4)
+    make_protector(mesh, state, specs, Mode.MLPC, redundancy=3)  # fits
+
+
 # -- storage accounting -------------------------------------------------------
 
-def test_overhead_report_dual_parity(setup):
+def test_overhead_report_syndrome_stack(setup):
     mesh, state, specs, _ = setup
     r1 = make_protector(mesh, state, specs, Mode.MLPC).overhead_report()
-    r2 = make_protector(mesh, state, specs, Mode.MLPC2).overhead_report()
-    assert r1["qparity_bytes_per_rank"] == 0
-    assert r2["qparity_bytes_per_rank"] == r2["parity_bytes_per_rank"]
-    assert r2["redundancy"] == 2
-    # the dual-parity tax is exactly one extra parity fraction
-    assert r2["protection_fraction"] == pytest.approx(
-        r1["protection_fraction"] + r1["parity_fraction"])
+    assert r1["syndrome_rows"] == 1
+    assert r1["syndrome_bytes_per_rank"] == r1["parity_bytes_per_rank"]
+    for r in (2, 3):
+        rep = make_protector(mesh, state, specs, Mode.MLPC,
+                             redundancy=r).overhead_report()
+        assert rep["redundancy"] == r and rep["syndrome_rows"] == r
+        # the stack tax is exactly r parity fractions
+        assert rep["syndrome_bytes_per_rank"] == \
+            r * rep["parity_bytes_per_rank"]
+        assert rep["syndrome_r_over_p"] == float(r)
+        assert rep["protection_fraction"] == pytest.approx(
+            r1["protection_fraction"] + (r - 1) * r1["parity_fraction"])
 
 
 @pytest.fixture(scope="module")

@@ -28,17 +28,15 @@ def setup(mesh42):
 
 
 def _assert_protection_equal(pa, pb, mode):
-    np.testing.assert_array_equal(np.asarray(pa.parity),
-                                  np.asarray(pb.parity))
+    # the whole syndrome stack (every S_k plane) must match bit-for-bit
+    np.testing.assert_array_equal(np.asarray(pa.synd),
+                                  np.asarray(pb.synd))
     np.testing.assert_array_equal(np.asarray(pa.digest),
                                   np.asarray(pb.digest))
     np.testing.assert_array_equal(np.asarray(pa.row), np.asarray(pb.row))
     if mode.has_cksums:
         np.testing.assert_array_equal(np.asarray(pa.cksums),
                                       np.asarray(pb.cksums))
-    if mode.has_qparity:
-        np.testing.assert_array_equal(np.asarray(pa.qparity),
-                                      np.asarray(pb.qparity))
 
 
 def _evolve(cur):
@@ -48,24 +46,25 @@ def _evolve(cur):
 # -- facade == direct engines, whole ladder x window sizes --------------------
 
 @pytest.mark.parametrize("base,red", [("mlp", 1), ("mlpc", 1),
-                                      ("mlp", 2), ("mlpc", 2)])
+                                      ("mlp", 2), ("mlpc", 2),
+                                      ("mlpc", 3)])
 @pytest.mark.parametrize("window", [1, 4])
 def test_pool_routes_bit_identical(setup, base, red, window):
     """ISSUE acceptance: commits, scrubs and recoveries routed through
     `Pool` must land the exact protection bits direct engine use lands —
     digest at every step, full protection at epoch boundaries, and
-    bit-exact reconstruction (single loss via P; double loss via P+Q in
-    the redundancy=2 modes)."""
+    bit-exact reconstruction (single loss via S_0; e losses via the
+    syndrome stack when redundancy >= e)."""
     mesh, state, specs, _ = setup
     cfg = ProtectConfig(mode=base, redundancy=red, window=window,
                         block_words=64)
     mode = cfg.resolved_mode
     pool = Pool.open(state, specs, mesh=mesh, config=cfg, donate=False)
-    assert pool.mode is mode
+    assert pool.mode is mode and pool.redundancy == red
 
     # the direct engines, hand-wired exactly as the runtimes used to
     p = Protector(mesh, jax.eval_shape(lambda: state), specs, mode=mode,
-                  block_words=64)
+                  redundancy=red, block_words=64)
     if window == 1:
         direct = p.init(state)
         commit = jax.jit(p.make_commit(), static_argnames=("canary_ok",))
@@ -105,10 +104,11 @@ def test_pool_routes_bit_identical(setup, base, red, window):
 
     # recovery: the same loss injected into both, reconstructed both ways
     want = np.asarray(pool.state["w1"]).copy()
-    if mode.has_qparity:
-        fault = Fault.double_loss(1, 3)
-        bad_f, _ = failure.inject_double_rank_loss(p, pool.prot, (1, 3))
-        bad_d, _ = failure.inject_double_rank_loss(p, direct, (1, 3))
+    if red >= 2:
+        dead = tuple(range(1, red + 1))       # e = r simultaneous losses
+        fault = Fault.multi_loss(*dead)
+        bad_f, _ = failure.inject_multi_rank_loss(p, pool.prot, dead)
+        bad_d, _ = failure.inject_multi_rank_loss(p, direct, dead)
     else:
         fault = Fault.rank_loss(2)
         bad_f, _ = failure.inject_rank_loss(p, pool.prot, 2)
@@ -118,8 +118,8 @@ def test_pool_routes_bit_identical(setup, base, red, window):
     else:
         pool._prot = bad_f
     rep = pool.recover(fault)
-    if mode.has_qparity:
-        direct, ok_d = p.recover_two(bad_d, 1, 3)
+    if red >= 2:
+        direct, ok_d = p.recover_e(bad_d, dead)
     else:
         direct, ok_d = p.recover_rank(bad_d, 2)
     assert rep.verified == bool(jax.device_get(ok_d))
@@ -242,7 +242,7 @@ def test_protect_config_rejects_nonsense_combos():
     with pytest.raises(ValueError, match="window"):
         ProtectConfig(mode="ml", window=2)
     with pytest.raises(ValueError, match="redundancy"):
-        ProtectConfig(mode="mlpc", redundancy=3)
+        ProtectConfig(mode="mlpc", redundancy=5)
     with pytest.raises(ValueError, match="window_growth_commits"):
         ProtectConfig(mode="mlpc", window_growth_commits=-1)
     with pytest.raises(ValueError, match="not a protection"):
@@ -251,13 +251,18 @@ def test_protect_config_rejects_nonsense_combos():
 
 def test_protect_config_resolves_modes():
     assert ProtectConfig(mode="mlpc").resolved_mode is Mode.MLPC
-    assert ProtectConfig(mode="mlp", redundancy=2).resolved_mode \
-        is Mode.MLP2
-    assert ProtectConfig(mode="mlpc", redundancy=2).resolved_mode \
-        is Mode.MLPC2
-    assert ProtectConfig(mode="mlpc2").resolved_mode is Mode.MLPC2
-    assert ProtectConfig(mode="mlpc2", redundancy=2).resolved_mode \
-        is Mode.MLPC2
+    assert ProtectConfig(mode="mlpc").resolved_redundancy == 1
+    cfg = ProtectConfig(mode="mlp", redundancy=2)
+    assert cfg.resolved_mode is Mode.MLP and cfg.resolved_redundancy == 2
+    cfg = ProtectConfig(mode="mlpc", redundancy=3)
+    assert cfg.resolved_mode is Mode.MLPC and cfg.resolved_redundancy == 3
+    # legacy dual-parity aliases fold onto (base mode, redundancy 2)
+    cfg = ProtectConfig(mode="mlpc2")
+    assert cfg.resolved_mode is Mode.MLPC and cfg.resolved_redundancy == 2
+    cfg = ProtectConfig(mode="mlp2", redundancy=2)
+    assert cfg.resolved_mode is Mode.MLP and cfg.resolved_redundancy == 2
+    cfg = ProtectConfig(mode="mlpc2", redundancy=3)  # explicit r wins
+    assert cfg.resolved_mode is Mode.MLPC and cfg.resolved_redundancy == 3
 
 
 # -- adaptive window: growth under sustained clean-commit load -----------------
@@ -298,16 +303,81 @@ def test_window_regrows_under_clean_commit_load(setup):
     assert eng.window == 1, "streak must reset on a dirty commit"
 
 
+# -- rank-local scrub cadence --------------------------------------------------
+
+def test_maybe_scrub_local_precheck_cadence(setup):
+    """ISSUE satellite: with full_scrub_every=N, due scrubs run the
+    rank-local syndrome pre-check and only every Nth pays for the global
+    collectives — unless the pre-check flags the pool suspect, which
+    escalates to a global scrub (with repair) immediately."""
+    mesh, state, specs, _ = setup
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", redundancy=2,
+                                          block_words=64, scrub_period=1,
+                                          full_scrub_every=3),
+                     donate=False)
+    cur = state
+    kinds = []
+    for i in range(6):
+        cur = _evolve(cur)
+        pool.commit(cur, rng_key=jax.random.PRNGKey(i))
+        rep = pool.maybe_scrub()
+        assert rep is not None and rep.checked and not rep.suspect
+        kinds.append(rep.local_only)
+    # two local pre-checks between every global scrub
+    assert kinds == [True, True, False, True, True, False], kinds
+
+    # a scribble lands mid-cadence: the next due pre-check flags it and
+    # ESCALATES — the returned report is the global scrub's, with the
+    # page repaired in place
+    cur = _evolve(cur)
+    pool.commit(cur, rng_key=jax.random.PRNGKey(99))   # makes a scrub due
+    want = np.asarray(pool.state["w1"]).copy()
+    bad, _ = failure.inject_scribble(pool.protector, pool.prot, rank=1,
+                                     word_offsets=[9])
+    pool.prot = bad
+    rep = pool.maybe_scrub()
+    assert rep is not None and not rep.local_only, \
+        "a suspect pre-check must escalate to the global scrub"
+    assert rep.repaired and rep.repair_ok
+    np.testing.assert_array_equal(np.asarray(pool.state["w1"]), want)
+
+
+def test_pool_precheck_is_collective_light(setup):
+    """The pre-check's program must not contain the full-row all-to-all:
+    its compiled bytes stay well below the global scrub's."""
+    mesh, state, specs, _ = setup
+    pool = Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(mode="mlpc", redundancy=3,
+                                          block_words=64),
+                     donate=False)
+    p = pool.protector
+
+    def bytes_of(make):
+        jitted = jax.jit(make())
+        cost = jitted.lower(pool.prot).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return float(cost.get("bytes accessed", 0.0))
+
+    local_b = bytes_of(p.make_local_scrub)
+    global_b = bytes_of(p.make_scrub)
+    assert local_b < global_b, (local_b, global_b)
+    rep = pool.precheck()
+    assert rep.local_only and not rep.suspect
+
+
 # -- rescale -------------------------------------------------------------------
 
 def test_pool_rescale_mid_window(setup, mesh81):
-    """`pool.rescale` must flush the open window, move the state
-    bit-exactly, rebuild P and Q for the new zone geometry (G: 4 -> 8)
-    and carry the step counter as a host value."""
+    """ISSUE satellite: `pool.rescale` must flush the open window, move
+    the state bit-exactly, rebuild ALL r syndromes for the new zone
+    geometry (G: 4 -> 8, new Vandermonde coefficients g^(k·i)) and carry
+    the step counter as a host value."""
     mesh, state, specs, _ = setup
     state = jax.tree.map(jnp.copy, state)
     pool = Pool.open(state, specs, mesh=mesh,
-                     config=ProtectConfig(mode="mlpc", redundancy=2,
+                     config=ProtectConfig(mode="mlpc", redundancy=3,
                                           block_words=64, window=3),
                      donate=False)
     cur = state
@@ -318,18 +388,19 @@ def test_pool_rescale_mid_window(setup, mesh81):
     moved = pool.rescale(mesh81)
     assert not pool.engine.needs_flush, "rescale must have flushed"
     assert moved.protector.group_size == 8
+    assert moved.redundancy == 3
     assert moved.step == 2
     for k, v in cur.items():
         np.testing.assert_array_equal(np.asarray(moved.state[k]),
                                       np.asarray(v))
     fresh = moved.protector.init(moved.state)
-    _assert_protection_equal(fresh, moved.prot, Mode.MLPC2)
-    # the new zone still solves a double loss
+    _assert_protection_equal(fresh, moved.prot, Mode.MLPC)
+    # the new zone still solves a triple loss
     want = np.asarray(moved.state["w1"]).copy()
-    bad, ev = failure.inject_double_rank_loss(moved.protector, moved.prot,
-                                              (2, 5))
+    bad, ev = failure.inject_multi_rank_loss(moved.protector, moved.prot,
+                                             (2, 5, 7))
     moved._est = dataclasses.replace(moved._est, prot=bad)
-    rep = moved.recover(Fault.double_loss(*ev.lost_ranks))
+    rep = moved.recover(Fault.multi_loss(*ev.lost_ranks))
     assert rep.verified
     np.testing.assert_array_equal(np.asarray(moved.state["w1"]), want)
 

@@ -113,7 +113,8 @@ def test_scrub_detects_and_repair_fixes_scribble(setup):
     rep = p.scrub(prot_bad)
     badmask = np.asarray(rep["bad_pages"])
     assert badmask.any(), "scrub must detect the scribble"
-    assert not bool(rep["parity_ok"]), "XOR invariant must be broken"
+    assert not np.asarray(rep["synd_ok"]).all(), \
+        "XOR invariant must be broken"
 
     locs = [(int(i[0]), int(i[-1])) for i in np.argwhere(badmask)]
     prot_fix, okf = p.repair_pages(prot_bad, [r for r, _ in locs],
@@ -123,7 +124,7 @@ def test_scrub_detects_and_repair_fixes_scribble(setup):
     # pool is clean again
     rep2 = p.scrub(prot_fix)
     assert not np.asarray(rep2["bad_pages"]).any()
-    assert bool(rep2["parity_ok"])
+    assert np.asarray(rep2["synd_ok"]).all()
 
 
 def test_multi_page_scribble_repair(setup):
