@@ -111,7 +111,7 @@ def run(quick: bool = False) -> dict:
                     engines[w] = run_def
                     step_b = _xla_bytes(
                         eng._jit["step"], est0.prot, est0.dirty,
-                        est0.pending, new, None, 0, None, True)
+                        est0.pending, est0.acc, new, None, 0, None, True)
                     flush_b = _xla_bytes(
                         eng._jitted("flush", eng.make_flush), est0)
                     bytes_step = (step_b * w + flush_b) / w

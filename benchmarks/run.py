@@ -30,7 +30,8 @@ BENCHES = ["storage_overhead", "txn_latency", "commit_sweep", "deferred",
 def emit_commit_json(txn_result: dict, quick: bool, path: str,
                      ab_result: dict = None,
                      deferred_result: dict = None,
-                     recovery_result: dict = None) -> None:
+                     recovery_result: dict = None,
+                     roofline_result: dict = None) -> None:
     """Write the per-PR commit-latency record (BENCH_commit.json).
 
     Distills txn_latency down to the commit hot path (overwrite latency
@@ -70,6 +71,11 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
         # stack height, wall + exactness + storage ratio (gate:
         # record-presence, syndrome_r_over_p <= r, wall pathology)
         payload["rs"] = recovery_result["rs"]
+    if roofline_result and roofline_result.get("commit_sweep"):
+        # §roofline: streamed-vs-flat commit sweep achieved bytes/s
+        # (gate: record-presence at 1 MB, streamed xla_MB <= flat,
+        # streamed useful_frac above flat, wall pathology)
+        payload["roofline"] = roofline_result["commit_sweep"]
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"commit benchmark record -> {path}")
@@ -104,7 +110,8 @@ def main():
                          args.commit_json,
                          ab_result=results.get("commit_sweep"),
                          deferred_result=results.get("deferred"),
-                         recovery_result=results.get("recovery"))
+                         recovery_result=results.get("recovery"),
+                         roofline_result=results.get("roofline"))
     print("\n" + "=" * 70)
     for name, s in status.items():
         print(f"{name:20s} {s}")

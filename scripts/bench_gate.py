@@ -125,6 +125,48 @@ def check(fresh: dict, base: dict, wall_tol: float,
                        f"{row['double_recover_ms']} vs baseline "
                        f"{ref['double_recover_ms']} (> {1 + wall_tol:.1f}x)")
 
+    # -- §roofline: streamed-vs-flat commit sweep ------------------------------
+    fro = _index(fresh.get("roofline", []), ("size_B", "path"))
+    bro = _index(base.get("roofline", []), ("size_B", "path"))
+    if bro and not fro:
+        bad.append("roofline: record missing from fresh run (the streamed"
+                   "-vs-flat commit sweep is no longer measured)")
+    if fro:
+        for size in {k[0] for k in fro}:
+            flat, stream = fro.get((size, "flat")), fro.get((size, "stream"))
+            if flat is None or stream is None:
+                bad.append(f"roofline[{size}]: needs both a flat and a "
+                           "stream row (one path missing)")
+                continue
+            # deterministic + structural: one streamed dispatch must
+            # touch fewer compiled bytes than the flat cadence it
+            # replaced (it saves the delta-row round trip)
+            if stream["xla_MB"] > flat["xla_MB"] * (1 + bytes_tol):
+                bad.append(f"roofline[{size}]: stream xla_MB "
+                           f"{stream['xla_MB']} not below flat "
+                           f"{flat['xla_MB']} — the streamed pipeline "
+                           "re-reads the row")
+            # acceptance: streamed bandwidth-efficiency fraction (useful
+            # bytes over compiled bytes accessed — the deterministic
+            # form of the bytes/s fraction; same useful numerator, so
+            # this is exactly "stream moves fewer bytes per committed
+            # row") strictly above the flat baseline at the 1 MB pool
+            if size == 1024 * 1024 and not (stream["useful_frac"]
+                                            > flat["useful_frac"]):
+                bad.append(f"roofline[{size}]: stream useful_frac "
+                           f"{stream['useful_frac']} not above flat "
+                           f"{flat['useful_frac']} — the streamed sweep "
+                           "lost its bandwidth win")
+    for key, row in fro.items():
+        ref = bro.get(key)
+        if ref and row["xla_MB"] > ref["xla_MB"] * (1 + bytes_tol):
+            bad.append(f"roofline{key}: xla_MB {row['xla_MB']} vs "
+                       f"baseline {ref['xla_MB']}")
+        # wall: pathology catch-all only (same rule as the other walls)
+        if ref and row["wall_us"] > ref["wall_us"] * (1 + wall_tol):
+            bad.append(f"roofline{key}: wall_us {row['wall_us']} vs "
+                       f"baseline {ref['wall_us']} (> {1 + wall_tol:.1f}x)")
+
     # -- §rs: generalized Reed-Solomon sweep -----------------------------------
     frs = _index(fresh.get("rs", []), ("r",))
     brs = _index(base.get("rs", []), ("r",))
@@ -178,6 +220,7 @@ def main():
           "double-loss cells, "
           f"{len(fresh.get('rs', []))} rs cells, "
           f"{len(fresh.get('facade', []))} facade cells, "
+          f"{len(fresh.get('roofline', []))} roofline cells, "
           f"wall tol {args.wall_tol}, bytes tol {args.bytes_tol})")
     return 0
 

@@ -33,7 +33,7 @@ python examples/elastic_rescale.py --smoke
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== perf: commit latency + dual-parity recovery (quick) =="
     python -m benchmarks.run --quick \
-        --only txn_latency,commit_sweep,deferred,recovery \
+        --only txn_latency,commit_sweep,deferred,recovery,roofline \
         --commit-json BENCH_commit.fresh.json
     echo "== perf: bench gate =="
     python scripts/bench_gate.py

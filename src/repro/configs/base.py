@@ -151,6 +151,18 @@ class ProtectConfig:
                                       # for the global collective only
                                       # every Nth (or when the pre-check
                                       # flags the pool suspect)
+    stream_threshold_words: int = 1 << 20
+                                      # local rows at least this many u32
+                                      # words take the blockwise
+                                      # double-buffered streaming commit
+                                      # kernels; smaller rows keep the
+                                      # flat whole-grid sweep.  0 = flat
+                                      # always (streaming disabled)
+    stream_chunk_words: int = 1 << 16
+                                      # words per streamed VMEM chunk
+                                      # (256 KB at u32); each operand
+                                      # stages 2 chunks for the DMA
+                                      # double buffer
 
     @property
     def resolved_mode(self):
@@ -235,6 +247,18 @@ class ProtectConfig:
             raise ValueError(
                 f"ProtectConfig.log_capacity={self.log_capacity} — the "
                 "redo log needs at least one record slot")
+        if self.stream_threshold_words < 0:
+            raise ValueError(
+                f"ProtectConfig.stream_threshold_words="
+                f"{self.stream_threshold_words} — rows at least this many "
+                "words stream through the blockwise commit kernels; use 0 "
+                "to disable streaming (flat kernels always)")
+        if self.stream_chunk_words < 1:
+            raise ValueError(
+                f"ProtectConfig.stream_chunk_words="
+                f"{self.stream_chunk_words} — the streamed VMEM chunk "
+                "needs a positive word count (it is clamped to at least "
+                "one block_words page per chunk)")
 
 
 def workload_skips(cfg: ModelConfig, wl: Workload) -> Optional[str]:

@@ -7,34 +7,45 @@ writes, and the redo log — which still persists per transaction — covers
 the unprotected interval for crash replay.  This module is that scheme on
 top of the zone layout:
 
-  * In-window commit (`DeferredProtector.commit`): the dirty-page set is
-    unioned on-device and the redo record is appended + commit-marked.
-    Parity, the checksum table AND the cached row are NOT touched — the
-    row stays pinned at the epoch-start value, which makes it the XOR
-    accumulator for free (deltas telescope: d_1 ^ ... ^ d_W ==
-    row_start ^ row_now, so pinning the base *is* accumulating; an
-    explicit delta buffer would pay a row-sized scatter per commit, and
-    an eager row splice a row-sized select — measured, either one erases
-    the deferral win).  The whole-row digest IS kept current from one
-    sweep over the step's *modified words*, gathered straight from the
-    old/new state leaves (the digest is linear in word position — see
-    `checksum.update_digest_words`), so every log record carries a
-    replay-verifiable digest bit-identical to the synchronous engine's
-    at every step.  Per-step protection cost is therefore proportional
-    to the words actually written — the paper's incremental ideal.
-  * Epoch flush (`flush`, automatic every `window` commits): the current
-    state is spliced into the cached row once, and one fused sweep over
-    (epoch-start row, current row) on the unioned dirty pages yields the
-    whole window's parity delta plus fresh checksums
-    (`kernels.fused_commit`); parity consumes the delta (patch-scatter,
-    or a bulk reduce-scatter past the hybrid threshold).  At every epoch
-    boundary parity / cksums / digest / row are bit-identical to the
-    synchronous engine's after the same commits.
-
-kernels/commit_fused.py also carries `fused_accum_commit`, the
-explicit-accumulator form of the in-window sweep, for platforms whose
-accumulator can live in VMEM across steps; under XLA's memory model the
-pinned-row form above is strictly cheaper.
+  * In-window commit (`DeferredProtector.commit`), patch engine: the
+    dirty-page set is unioned on-device and the redo record is appended
+    + commit-marked.  Parity, the checksum table AND the cached row are
+    NOT touched — the row stays pinned at the epoch-start value, which
+    makes it the XOR accumulator for free (deltas telescope:
+    d_1 ^ ... ^ d_W == row_start ^ row_now, so pinning the base *is*
+    accumulating; an explicit delta buffer would pay a row-sized scatter
+    per commit, and an eager row splice a row-sized select — measured,
+    either one erases the deferral win).  The whole-row digest IS kept
+    current from one sweep over the step's *modified words*, gathered
+    straight from the old/new state leaves (the digest is linear in
+    word position — see `checksum.update_digest_words`), so every log
+    record carries a replay-verifiable digest bit-identical to the
+    synchronous engine's at every step.  Per-step protection cost is
+    therefore proportional to the words actually written — the paper's
+    incremental ideal.
+  * Bulk engine in-window commit: every step rewrites the whole row
+    anyway (training), so the step runs `kernels.fused_accum_commit` —
+    one sweep over (previous row, new row) folds the step's XOR delta
+    into an explicit epoch accumulator (`EpochState.acc`, telescoping
+    to row_start ^ row_now) and emits fresh Fletcher checksums + the
+    combined row digest from the same pass.  The checksum table is
+    therefore current at EVERY step, not only at boundaries; rows past
+    the streaming threshold take the blockwise double-buffered
+    `fused_accum_commit_stream`, which carries the digest in the loop.
+  * Epoch flush (`flush`, automatic every `window` commits): the patch
+    engine splices the current state into the cached row once and one
+    fused sweep over both row versions on the unioned dirty pages
+    yields the window's parity delta plus fresh checksums
+    (`kernels.fused_commit_s`); parity consumes the delta
+    (patch-scatter, or a bulk reduce-scatter past the hybrid
+    threshold).  The bulk engine never re-reads the row at flush: the
+    accumulator already IS the window's delta, so the flush weights it
+    into the r syndrome planes (`kernels.syndrome_scale`, one stacked
+    read) and folds them in with the chunked `apply_sdelta`
+    reduce-scatter — S_k ^ rs(g^(k·me)·acc) equals a rebuild from the
+    current row exactly, by GF/XOR linearity.  At every epoch boundary
+    parity / cksums / digest / row are bit-identical to the synchronous
+    engine's after the same commits.
 
 Window-loss semantics: between flushes the parity and checksum table
 describe the epoch-start state, and the cached row deliberately lags the
@@ -92,14 +103,18 @@ class EpochState:
     the bulk engine, whose row tracks the state every step).  `pending`
     counts successful commits since the last flush (scalar u32,
     replicated — introspection; the engine's host counter drives the
-    cadence).
+    cadence).  `acc` (bulk engine only; None for patch) is the explicit
+    XOR accumulator ((*mesh_dims, row_words) u32): after W accum steps
+    it holds row_start ^ row_now, and the flush weights it straight
+    into the syndrome stack without touching the row again.
     """
     prot: ProtectedState
     dirty: Optional[jax.Array]
     pending: jax.Array
+    acc: Optional[jax.Array] = None
 
     def tree_flatten(self):
-        return ((self.prot, self.dirty, self.pending), None)
+        return ((self.prot, self.dirty, self.pending, self.acc), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -234,7 +249,9 @@ class DeferredProtector:
             prot=prot,
             dirty=(self._zone_zeros((lo.n_blocks,), jnp.bool_)
                    if self.patch else None),
-            pending=jnp.zeros((), U32))
+            pending=jnp.zeros((), U32),
+            acc=(None if self.patch
+                 else self._zone_zeros((lo.row_words,), U32)))
 
     def init(self, state: PyTree) -> EpochState:
         return self.wrap(self.p.init(state))
@@ -330,15 +347,24 @@ class DeferredProtector:
     # -- in-window commit -------------------------------------------------------
 
     def make_step_commit(self):
-        """Build the in-window commit: digest-over-modified-words + dirty
-        union + log.  Parity, checksum table and cached row untouched."""
+        """Build the in-window commit.
+
+        Patch engine: digest-over-modified-words + dirty union + log;
+        parity, checksum table and cached row untouched.  Bulk engine:
+        one `fused_accum_commit` sweep folds the step's delta into the
+        explicit accumulator and refreshes checksums + digest from the
+        same pass (streamed past the protector's threshold).
+        """
         p, lo = self.p, self.p.layout
         mode, bw = self.p.mode, self.p.layout.block_words
         nb, rw = lo.n_blocks, lo.row_words
         patch = self.patch
         dirty_leaves = self.dirty_leaf_idx
+        # static flat-vs-streamed choice (ProtectConfig threshold)
+        scb = None if patch else p.stream_chunk()
 
-        def _step(digest, dirty, state_old, state_new, widx):
+        def _step(digest, dirty, acc, row_cache, state_old, state_new,
+                  widx):
             digest_l = p._unpack(digest)
             outs = {}
             if patch:
@@ -370,11 +396,25 @@ class DeferredProtector:
                     dirty_l = dirty_l.at[pg].set(True, mode="drop")
                 outs["dirty"] = p._pack(dirty_l)
             else:
+                # bulk accum step: row_cache is last step's row, so the
+                # fused sweep's delta telescopes into acc; its new-row
+                # Fletcher terms serve the checksum table AND the digest
                 row_new = layout_mod.flatten_row(lo, state_new)
-                new_ck = kops.fletcher_blocks(
-                    parity_mod.page_view(row_new, bw))
-                new_digest = ck.combine(new_ck, bw)
+                old_v = parity_mod.page_view(p._unpack(row_cache), bw)
+                new_v = parity_mod.page_view(row_new, bw)
+                acc_v = parity_mod.page_view(p._unpack(acc), bw)
+                if scb is None:
+                    acc_v, _, new_ck = kops.fused_accum_commit(
+                        acc_v, old_v, new_v)
+                    new_digest = ck.combine(new_ck, bw)
+                else:
+                    acc_v, _, new_ck, new_digest = (
+                        kops.fused_accum_commit_stream(
+                            acc_v, old_v, new_v, chunk_blocks=scb))
                 outs["row"] = p._pack(row_new)
+                outs["acc"] = p._pack(acc_v.reshape(-1))
+                if mode.has_cksums:
+                    outs["cksums"] = p._pack(new_ck)
             outs["digest"] = p._pack(new_digest)
             return outs
 
@@ -384,21 +424,24 @@ class DeferredProtector:
             out_specs["dirty"] = z
         else:
             out_specs["row"] = z
+            out_specs["acc"] = z
+            if mode.has_cksums:
+                out_specs["cksums"] = z
         protect = p._smap(
             _step,
-            in_specs=(z, z, p.state_specs, p.state_specs, P()),
+            in_specs=(z, z, z, z, p.state_specs, p.state_specs, P()),
             out_specs=out_specs)
 
-        def commit(prot: ProtectedState, dirty, pending, state_new,
+        def commit(prot: ProtectedState, dirty, pending, acc, state_new,
                    dirty_words, data_cursor, rng_key, canary_ok):
             # canary_ok is STATIC (host-known before dispatch): the
             # all-clear program carries no abort gating at all, and an
             # abort compiles once into this pure no-op
             if not canary_ok:
-                return prot, dirty, pending, jnp.zeros((), bool)
+                return prot, dirty, pending, acc, jnp.zeros((), bool)
             step = prot.step + U32(1)
-            outs = protect(prot.digest, dirty, prot.state, state_new,
-                           dirty_words)
+            outs = protect(prot.digest, dirty, acc, prot.row,
+                           prot.state, state_new, dirty_words)
             # paper ordering preserved: the redo record (replicated)
             # persists per step and carries the post-step digest; only
             # the parity/checksum refresh is deferred to the flush.
@@ -410,12 +453,14 @@ class DeferredProtector:
                                      outs["digest"].reshape(-1, 2)[0])
                 log = redolog.commit_mark(log, step)
             new_prot = ProtectedState(
-                state=state_new, synd=prot.synd, cksums=prot.cksums,
+                state=state_new, synd=prot.synd,
+                cksums=outs.get("cksums", prot.cksums),
                 digest=outs["digest"], replica=prot.replica, log=log,
                 step=step,
                 row=prot.row if patch else outs["row"])
             return (new_prot, outs.get("dirty", dirty),
-                    pending + U32(1), jnp.ones((), bool))
+                    pending + U32(1), outs.get("acc", acc),
+                    jnp.ones((), bool))
 
         return commit
 
@@ -424,12 +469,17 @@ class DeferredProtector:
     def make_flush(self):
         """Build the once-per-epoch redundancy refresh.
 
-        The current state is spliced into the (epoch-start) cached row;
-        one fused sweep over both row versions on the unioned dirty
-        pages yields the window's parity delta plus fresh checksums
-        (patch), or parity is rebuilt from the row wholesale past the
-        hybrid threshold — algebraically identical under the XOR
-        invariant.  The digest is already current.
+        Patch engine: the current state is spliced into the
+        (epoch-start) cached row; one fused sweep over both row versions
+        on the unioned dirty pages yields the window's parity delta plus
+        fresh checksums, or parity is rebuilt from the row wholesale
+        past the hybrid threshold — algebraically identical under the
+        XOR invariant.  Bulk engine: the explicit accumulator already
+        holds row_start ^ row_now, so the flush never touches the row —
+        `syndrome_scale` weights it into all r planes in one stacked
+        read and the chunked `apply_sdelta` reduce-scatter folds them in
+        (checksums were refreshed by every accum step).  The digest is
+        already current in both flavors.
         """
         p, lo = self.p, self.p.layout
         mode, ax, bw = self.p.mode, self.p.data_axis, self.p.layout.block_words
@@ -439,8 +489,10 @@ class DeferredProtector:
         fpatch = self.flush_patch
         patch = self.patch
         dirty_leaves = self.dirty_leaf_idx
+        # chunked collective fold count (1 below the streaming threshold)
+        cc = p.coll_chunks()
 
-        def _flush(row_cache, synd, cksums, state, dirty):
+        def _flush(row_cache, synd, cksums, state, dirty, acc):
             base = p._unpack(row_cache)
             synd_l = p._unpack(synd) if synd is not None else None
             cksums_l = p._unpack(cksums) if cksums is not None else None
@@ -480,15 +532,28 @@ class DeferredProtector:
                     outs["synd"] = p._pack(parity_mod.patch_syndrome_delta(
                         synd_l, sdelta_p, jnp.where(valid, g, nb), lo,
                         ax))
-            else:
-                # bulk: the stack rebuilt from the current row — equal to
-                # S_start ^ rs(telescoped weighted delta) by XOR linearity
+            elif patch:
+                # patch engine past the hybrid threshold: rebuild from
+                # the spliced row wholesale — equal to S_start ^
+                # rs(telescoped weighted delta) by XOR linearity
                 if mode.has_parity:
                     outs["synd"] = p._pack(
-                        parity_mod.build_syndromes(row, r, ax))
+                        parity_mod.build_syndromes(row, r, ax, chunks=cc))
                 if mode.has_cksums:
                     outs["cksums"] = p._pack(kops.fletcher_blocks(
                         parity_mod.page_view(row, bw)))
+            else:
+                # bulk engine: acc == row_start ^ row_now (telescoped),
+                # so S_k ^ rs(g^(k·me)·acc) == the stack rebuilt from
+                # the current row, by GF/XOR linearity — one accumulator
+                # read replaces the (2+r)-row flush sweep; cksums are
+                # already fresh from the accum steps
+                acc_l = p._unpack(acc)
+                if mode.has_parity:
+                    sdelta = kops.syndrome_scale(acc_l, coeffs)
+                    outs["synd"] = p._pack(parity_mod.apply_sdelta(
+                        synd_l, sdelta, ax, chunks=cc))
+                outs["acc"] = p._pack(jnp.zeros_like(acc_l))
             if dirty is not None:
                 outs["dirty"] = p._pack(jnp.zeros((nb,), jnp.bool_))
             return outs
@@ -497,24 +562,27 @@ class DeferredProtector:
         out_specs = {}
         if mode.has_parity:
             out_specs["synd"] = z
-        if mode.has_cksums:
+        if mode.has_cksums and patch:
             out_specs["cksums"] = z
         if patch:
             out_specs["row"] = z
             out_specs["dirty"] = z
-        fn = p._smap(_flush, in_specs=(z, z, z, p.state_specs, z),
+        else:
+            out_specs["acc"] = z
+        fn = p._smap(_flush, in_specs=(z, z, z, p.state_specs, z, z),
                      out_specs=out_specs)
 
         def flush(est: EpochState) -> EpochState:
             prot = est.prot
             outs = fn(prot.row, prot.synd, prot.cksums,
-                      prot.state, est.dirty)
+                      prot.state, est.dirty, est.acc)
             new_prot = dataclasses.replace(
                 prot, synd=outs.get("synd", prot.synd),
                 cksums=outs.get("cksums", prot.cksums),
                 row=outs.get("row", prot.row))
             return EpochState(prot=new_prot, dirty=outs.get("dirty"),
-                              pending=jnp.zeros((), U32))
+                              pending=jnp.zeros((), U32),
+                              acc=outs.get("acc", est.acc))
 
         return flush
 
@@ -545,11 +613,11 @@ class DeferredProtector:
             self.dirty_leaf_idx)
         # canary verdict is host-known before dispatch: static, so the
         # all-clear program folds its abort select-chains away entirely
-        prot, dirty, pending, ok = self._jitted(
-            "step", self.make_step_commit, n_donated=3, static=(7,))(
-            est.prot, est.dirty, est.pending, state_new, dirty_words,
-            data_cursor, rng_key, bool(canary_ok))
-        est = EpochState(prot=prot, dirty=dirty, pending=pending)
+        prot, dirty, pending, acc, ok = self._jitted(
+            "step", self.make_step_commit, n_donated=4, static=(8,))(
+            est.prot, est.dirty, est.pending, est.acc, state_new,
+            dirty_words, data_cursor, rng_key, bool(canary_ok))
+        est = EpochState(prot=prot, dirty=dirty, pending=pending, acc=acc)
         self._since += 1
         if self._since >= self.window:
             est = self.flush(est)

@@ -107,25 +107,30 @@ def patch_parity_delta(parity_seg: jax.Array, delta_pages: jax.Array,
 # syndrome stack: generalized Reed-Solomon S_0..S_{r-1} (beyond paper)
 # ---------------------------------------------------------------------------
 
-def build_syndromes(row: jax.Array, r: int, axis_name: str) -> jax.Array:
+def build_syndromes(row: jax.Array, r: int, axis_name: str, *,
+                    chunks: int = 1) -> jax.Array:
     """Full stack build: (r, seg) — one overlapped collective for all r.
 
     S_k = XOR_i g^(k·i)·row_i; S_0 is classic XOR parity, so
     `build_syndromes(row, 1, ax)[0] == build_parity(row, ax)` bit-exactly
-    (and lowers to the same program).
+    (and lowers to the same program).  `chunks > 1` pipelines the GF
+    weighting against the all-to-all per segment slice (bit-identical;
+    see collectives.syndrome_reduce_scatter).
     """
-    return coll.syndrome_reduce_scatter(row, r, axis_name)
+    return coll.syndrome_reduce_scatter(row, r, axis_name, chunks=chunks)
 
 
 def apply_sdelta(synd: jax.Array, sdelta_rows: jax.Array,
-                 axis_name: str) -> jax.Array:
+                 axis_name: str, *, chunks: int = 1) -> jax.Array:
     """Bulk stack delta: synd ^= reduce-scatter of pre-weighted deltas.
 
     `sdelta_rows` is the (r, n) stack the fused commit sweep emits —
     row k already weighted by g^(k·me) — so the combine is the plain XOR
     collective (GF addition IS XOR), batched across syndromes.
+    `chunks > 1` splits the transfer so large-pool commits pipeline.
     """
-    return coll.syndrome_apply_delta(synd, sdelta_rows, axis_name)
+    return coll.syndrome_apply_delta(synd, sdelta_rows, axis_name,
+                                     chunks=chunks)
 
 
 def patch_syndrome_delta(synd: jax.Array, sdelta_pages: jax.Array,

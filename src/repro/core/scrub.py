@@ -31,11 +31,17 @@ class ScrubReport:
     # True when this report came from the rank-local pre-check (folded
     # syndrome compare, no full-row collective) rather than a global scrub
     local_only: bool = False
+    # checksum-mismatch block count from the pre-check's compact verdict
+    # (the pre-check reduces bad blocks to a replicated scalar on device;
+    # locations come from the escalated global scrub); None when the
+    # report carries per-block locations instead
+    bad_count: Optional[int] = None
 
     @property
     def suspect(self) -> bool:
         """Any signal that the pool (or its redundancy) is unhealthy."""
-        return (bool(self.bad_locations) or self.parity_ok is False
+        return (bool(self.bad_locations) or bool(self.bad_count)
+                or self.parity_ok is False
                 or (self.synd_ok is not None and not all(self.synd_ok))
                 or self.row_cache_ok is False)
 
@@ -121,10 +127,12 @@ class Scrubber:
         parity_ok = synd_ok[0] if synd_ok else None
         row_cache_ok = (bool(host["row_cache_ok"])
                         if "row_cache_ok" in host else None)
+        bad_count = (int(host["bad_count"])
+                     if "bad_count" in host else None)
         return bad_locations, ScrubReport(
             int(host["step"]), True, bad_locations, parity_ok, False,
             None, row_cache_ok=row_cache_ok, synd_ok=synd_ok,
-            local_only=local)
+            local_only=local, bad_count=bad_count)
 
     def precheck(self, prot: txn_mod.ProtectedState) -> ScrubReport:
         """Rank-local scrub: the cheap pre-check before a global scrub.
@@ -133,7 +141,11 @@ class Scrubber:
         the row cache against the live state, and this rank's syndrome
         segments against everyone's rows via the folded-syndrome compare
         (Protector.make_local_scrub) — zone traffic O(r·G) words instead
-        of the r full-row reduce-scatters.  No repair and no cadence
+        of the r full-row reduce-scatters, with the GF weighting on
+        device via the stacked-plane kernel.  Every output is a scalar
+        verdict (bad_count / synd_ok / row_cache_ok), so the one
+        device_get here moves a few words, not a per-block table.  No
+        repair and no cadence
         reset: a suspect pre-check should escalate to `run`.  The
         adaptive window IS fed either way — a clean pre-check standing
         in for a scrub must regrow a shrunken window exactly like a

@@ -179,7 +179,9 @@ class Protector:
                  redundancy: int = 1,
                  block_words: int = layout_mod.PAGE_WORDS,
                  hybrid_threshold: float = 0.5,
-                 log_capacity: int = 64):
+                 log_capacity: int = 64,
+                 stream_threshold_words: int = 1 << 20,
+                 stream_chunk_words: int = 1 << 16):
         mode, redundancy = resolved_mode(mode, redundancy)
         self.mesh = mesh
         self.mode = mode
@@ -197,6 +199,8 @@ class Protector:
         self.redundancy = redundancy if mode.has_parity else 1
         self.hybrid_threshold = hybrid_threshold
         self.log_capacity = log_capacity
+        self.stream_threshold_words = int(stream_threshold_words)
+        self.stream_chunk_words = int(stream_chunk_words)
         self.state_specs = state_specs
 
         shardings = jax.tree.map(
@@ -265,6 +269,34 @@ class Protector:
     def _smap(self, f, in_specs, out_specs):
         return shard_map(f, mesh=self.mesh, in_specs=in_specs,
                          out_specs=out_specs, check_vma=False)
+
+    # -- streaming policy -----------------------------------------------------
+
+    def stream_chunk(self) -> Optional[int]:
+        """Pages per streamed VMEM chunk for full-row sweeps, or None.
+
+        None means the local row is below `stream_threshold_words` and the
+        flat whole-grid kernels keep the commit (their automatic pipelining
+        wins on small rows); otherwise the blockwise double-buffered
+        streaming kernels take it, `stream_chunk_words` per chunk.
+        """
+        lo = self.layout
+        return kops.stream_chunk_blocks(
+            lo.n_blocks, lo.block_words,
+            threshold_words=self.stream_threshold_words,
+            chunk_words=self.stream_chunk_words)
+
+    def coll_chunks(self) -> int:
+        """Slices per syndrome collective when the commit streams.
+
+        Matches the kernel chunking scale so the per-chunk syndrome delta
+        overlaps the all-to-all of the previous slice; capped at 8 —
+        beyond that the per-launch latency dominates the overlap win.
+        """
+        if self.stream_chunk() is None:
+            return 1
+        return max(1, min(
+            8, self.layout.seg_words // max(1, self.stream_chunk_words)))
 
     # -- init ------------------------------------------------------------------
 
@@ -352,6 +384,12 @@ class Protector:
                         if (meta_only or patch) else None)
         dirty_idx = (np.asarray(list(dirty_pages), np.int32)
                      if patch else None)
+        # flat-vs-streamed is a static program choice: large rows stream
+        # through the double-buffered kernels and chunk the syndrome
+        # collective to overlap weighting with the wire; the patch path
+        # is below-threshold by construction and always stays flat
+        scb = self.stream_chunk()
+        cc = self.coll_chunks()
 
         def _protect(state_old, row_cache, synd, cksums, digest,
                      state_new, canary_ok):
@@ -397,28 +435,42 @@ class Protector:
                         synd_l, sdelta_p, idx, lo, ax)
             else:
                 pages_new = parity_mod.page_view(row_new, bw)
+                dig_new = None
                 if verify_old and mode.has_cksums:
                     # old must be swept for verify anyway: the fused kernel
                     # shares that read with all r syndrome deltas, and the
                     # stack consumes them (S ^ rs(sdelta) == rs-stack(new))
                     pages_old = parity_mod.page_view(row_old, bw)
-                    sdelta, fresh, bad = kops.fused_verify_commit_s(
-                        pages_old, pages_new, cksums_l, coeffs)
+                    if scb is None:
+                        sdelta, fresh, bad = kops.fused_verify_commit_s(
+                            pages_old, pages_new, cksums_l, coeffs)
+                    else:
+                        sdelta, fresh, bad, dig_new = (
+                            kops.fused_verify_commit_s_stream(
+                                pages_old, pages_new, cksums_l, coeffs,
+                                chunk_blocks=scb))
                     ok = _zone_clean(ok, bad, ax)
                     if mode.has_parity:
                         new_synd = parity_mod.apply_sdelta(
-                            synd_l, sdelta.reshape(r, -1), ax)
+                            synd_l, sdelta.reshape(r, -1), ax, chunks=cc)
                 else:
                     # without verify the old row is not read at all: a
                     # delta here would cost a write+read of a row-sized
                     # buffer for nothing — reduce-scatter the new row
-                    fresh = kops.fletcher_blocks(pages_new)
+                    if scb is None:
+                        fresh = kops.fletcher_blocks(pages_new)
+                    else:
+                        fresh, dig_new = kops.fletcher_stream(
+                            pages_new, chunk_blocks=scb)
                     if mode.has_parity:
                         new_synd = parity_mod.build_syndromes(row_new, r,
-                                                              ax)
+                                                              ax, chunks=cc)
                 if mode.has_cksums:
                     new_cksums = fresh
-                new_digest = ck.combine(fresh, bw)
+                # streamed sweeps fold the digest into the loop carry
+                # (bit-identical to the combine over the term table)
+                new_digest = (ck.combine(fresh, bw) if dig_new is None
+                              else dig_new)
             outs = {"ok": ok,
                     "row": self._pack(jnp.where(ok, row_new, row_old)),
                     "digest": self._pack(jnp.where(ok, new_digest,
@@ -583,20 +635,26 @@ class Protector:
 
           * this rank's state blocks against the checksum table — pure
             local compute, catches scribbles exactly like the global
-            scrub does;
+            scrub does — reduced on device to a replicated mismatch
+            *count* (the pre-check only decides suspect-or-not; block
+            locations are the escalated global scrub's job);
           * the cached row against the live state — local compare;
           * this rank's syndrome segments against everyone's rows via a
-            *folded* syndrome: each rank XOR-folds its weighted row
-            per (syndrome, owner-segment) into an (r, G) word matrix,
-            one tiny XOR all-reduce combines them (fold commutes with
-            the XOR sum across ranks), and each owner compares the
-            fold of its stored segments.  A fold catches any single
-            corruption; only colliding corruptions that cancel in the
-            fold escape to the global scrub — which is why this is the
-            cheap pre-check, not a replacement.
+            *folded* syndrome: the stacked-plane kernel weights the row
+            into all r planes from one read (kernels/ops.syndrome_scale
+            — the same device clmul the commit sweeps use, never host
+            GF math), each rank XOR-folds per (syndrome, owner-segment)
+            into an (r, G) word matrix, one tiny XOR all-reduce
+            combines them (fold commutes with the XOR sum across
+            ranks), and each owner compares the fold of its stored
+            segments.  A fold catches any single corruption; only
+            colliding corruptions that cancel in the fold escape to the
+            global scrub — which is why this is the cheap pre-check,
+            not a replacement.
 
-        Outputs mirror `make_scrub` (bad_pages / synd_ok /
-        row_cache_ok) so the Scrubber consumes either.
+        Every output is a replicated scalar (bad_count / synd_ok /
+        row_cache_ok), so `Scrubber.precheck` fetches ONE device_get of
+        a verdict — no row-sized or table-sized host transfer.
         """
         lo, ax = self.layout, self.data_axis
         mode, r, g = self.mode, self.redundancy, self.group_size
@@ -607,14 +665,14 @@ class Protector:
             if mode.has_cksums:
                 bad = ck.verify_blocks(row, self._unpack(cksums),
                                        lo.block_words)
-                out["bad_pages"] = self._pack(bad)
+                out["bad_count"] = lax.psum(
+                    jnp.sum(bad.astype(jnp.uint32)), self.axis_names)
             if mode.has_parity:
                 synd_l = self._unpack(synd)
                 coeffs = (gf.rank_syndrome_coeffs(g, r, ax)
                           if r > 1 else None)
-                weighted = [row] + [gf.mul_const(row, coeffs[k])
-                                    for k in range(1, r)]
-                segs = jnp.stack(weighted).reshape(r, g, -1)
+                weighted = kops.syndrome_scale(row, coeffs)
+                segs = weighted.reshape(r, g, -1)
                 folds = coll.xor_fold(segs, axis=2)          # (r, G)
                 want = coll.xor_all_reduce(folds, ax)        # (r, G)
                 me = lax.axis_index(ax)
@@ -630,7 +688,7 @@ class Protector:
 
         out_specs = {}
         if mode.has_cksums:
-            out_specs["bad_pages"] = self._zone_spec
+            out_specs["bad_count"] = P()
         if mode.has_parity:
             out_specs["synd_ok"] = P()
         if mode.has_parity or mode.has_cksums:

@@ -64,8 +64,16 @@ def xor_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     return full[:n].reshape(shape)
 
 
-def syndrome_reduce_scatter(row: jax.Array, r: int,
-                            axis_name: str) -> jax.Array:
+def _split_chunks(seg_words: int, chunks: int) -> int:
+    """Largest chunk count <= `chunks` that divides the segment length."""
+    c = max(1, min(int(chunks), seg_words))
+    while seg_words % c:
+        c -= 1
+    return c
+
+
+def syndrome_reduce_scatter(row: jax.Array, r: int, axis_name: str, *,
+                            chunks: int = 1) -> jax.Array:
     """All r syndrome reduce-scatters as ONE overlapped collective.
 
     Returns the (r, n // G) stack: rank i keeps segment i of every
@@ -78,40 +86,76 @@ def syndrome_reduce_scatter(row: jax.Array, r: int,
     expressed as collective batching.  The k=0 row skips the clmul
     entirely (g^0 = 1), so r=1 degenerates to `xor_reduce_scatter`
     exactly.
+
+    `chunks > 1` splits every rank-segment column-wise into that many
+    pieces and runs weight + all-to-all + fold per piece (a static
+    unrolled loop, so XLA can overlap piece i+1's clmul with piece i's
+    transfer — the commit sweep of an arbitrarily large row pipelines
+    compute against the wire).  Chunking slices the *segment* axis, so
+    the concatenated pieces are positionally identical to the unchunked
+    result; GF weighting is element-wise, so bit-identical too.
     """
     from repro.core import gf          # lazy: core.parity imports this module
     r = int(r)
     assert r >= 1, r
-    if r == 1:
-        return xor_reduce_scatter(row, axis_name)[None]
     g = lax.psum(1, axis_name)
     n = row.shape[0]
     assert n % g == 0, (n, g)
+    seg = n // g
+    c = _split_chunks(seg, chunks)
+    if r == 1:
+        if c == 1:
+            return xor_reduce_scatter(row, axis_name)[None]
+        segs = row.reshape(g, seg)
+        sc = seg // c
+        pieces = []
+        for i in range(c):
+            part = segs[:, i * sc:(i + 1) * sc]
+            gathered = lax.all_to_all(part, axis_name, split_axis=0,
+                                      concat_axis=0)
+            pieces.append(xor_fold(gathered, axis=0))
+        return jnp.concatenate(pieces, axis=-1)[None]
     coeffs = gf.rank_syndrome_coeffs(g, r, axis_name)
-    weighted = jnp.stack(
-        [row] + [gf.mul_const(row, coeffs[k]) for k in range(1, r)])
-    segs = weighted.reshape(r, g, n // g)
-    gathered = lax.all_to_all(segs, axis_name, split_axis=1, concat_axis=1)
-    return xor_fold(gathered, axis=1)
+    segs = row.reshape(g, seg)
+    sc = seg // c
+    pieces = []
+    for i in range(c):
+        part = segs[:, i * sc:(i + 1) * sc]
+        weighted = jnp.stack(
+            [part] + [gf.mul_const(part, coeffs[k]) for k in range(1, r)])
+        gathered = lax.all_to_all(weighted, axis_name, split_axis=1,
+                                  concat_axis=1)
+        pieces.append(xor_fold(gathered, axis=1))
+    return jnp.concatenate(pieces, axis=-1)
 
 
 def syndrome_apply_delta(synd: jax.Array, sdelta: jax.Array,
-                         axis_name: str) -> jax.Array:
+                         axis_name: str, *, chunks: int = 1) -> jax.Array:
     """Bulk syndrome delta: synd ^= reduce-scatter of pre-weighted deltas.
 
     `synd`: (r, seg) stack; `sdelta`: (r, n) pre-weighted delta rows (the
     fused commit sweep emits g^(k·me)·(old^new) directly), so the combine
     is the plain XOR collective — batched over all r syndromes in one
-    all-to-all, exactly like `syndrome_reduce_scatter`.
+    all-to-all, exactly like `syndrome_reduce_scatter`.  `chunks > 1`
+    splits the segments column-wise into that many all-to-alls (static
+    unrolled loop) so large-pool transfers pipeline.
     """
     r = synd.shape[0]
-    if r == 1:
-        return synd ^ xor_reduce_scatter(sdelta.reshape(-1), axis_name)[None]
     g = lax.psum(1, axis_name)
-    n = sdelta.shape[-1]
-    segs = sdelta.reshape(r, g, n // g)
-    gathered = lax.all_to_all(segs, axis_name, split_axis=1, concat_axis=1)
-    return synd ^ xor_fold(gathered, axis=1)
+    n = sdelta.reshape(r, -1).shape[-1]
+    seg = n // g
+    c = _split_chunks(seg, chunks)
+    if r == 1 and c == 1:
+        return synd ^ xor_reduce_scatter(sdelta.reshape(-1), axis_name)[None]
+    segs = sdelta.reshape(r, g, seg)
+    sc = seg // c
+    pieces = []
+    for i in range(c):
+        part = segs[:, :, i * sc:(i + 1) * sc]
+        gathered = lax.all_to_all(part, axis_name, split_axis=1,
+                                  concat_axis=1)
+        pieces.append(xor_fold(gathered, axis=1))
+    return synd ^ jnp.concatenate(pieces, axis=-1)
 
 
 def xor_tree_reduce(x: jax.Array, axis_name: str) -> jax.Array:

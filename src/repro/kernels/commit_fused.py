@@ -28,11 +28,17 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.tiling import largest_divisor_tile
 
 U32 = jnp.uint32
 TILE_BLOCKS = 8
+# Streamed variants: pages per double-buffered VMEM chunk.  Each operand
+# stages 2 x chunk x block_words words, so the default 8-page chunk costs
+# 64 KB of VMEM per u32 operand at bw=1024 — small enough that the 3-operand
+# accumulate sweep still fits comfortably alongside the output tiles.
+STREAM_CHUNK_BLOCKS = 8
 
 
 def _pick_tb(n: int) -> int:
@@ -188,5 +194,252 @@ def fused_accum_commit(acc: jax.Array, old: jax.Array, new: jax.Array, *,
         out_shape=[jax.ShapeDtypeStruct((n, bw), U32),
                    jax.ShapeDtypeStruct((n, 2), U32),
                    jax.ShapeDtypeStruct((n, 2), U32)],
+        interpret=interpret,
+    )(acc, old, new)
+
+
+# ---------------------------------------------------------------------------
+# blockwise double-buffered streaming variants
+# ---------------------------------------------------------------------------
+# The flat kernels above hand whole-row tiles to the Pallas grid, which is
+# fine while n_blocks * block_words fits the automatic pipelining budget but
+# leaves the copy/compute overlap to the compiler.  The `*_stream` family
+# below owns the pipeline explicitly: operands live in ANY (HBM) memory, the
+# kernel streams them through a 2-deep VMEM ring with manual async copies —
+# chunk i+1's DMA is issued before chunk i's compute begins — and the
+# Fletcher digest of the whole row rides along as a loop-carried (A, B)
+# accumulator, so one sweep emits the delta, the per-block terms AND the
+# combined row digest (the flat path needs a separate `checksum.combine`
+# pass over the terms).  The ragged tail (n % chunk) is a statically-sized
+# epilogue chunk: DMA slice extents must be static, so the loop covers the
+# n // chunk full chunks and the remainder is one extra literal-size copy.
+
+
+def _stream_loop(n, cb, in_refs, bufs, sems, process, carry0):
+    """Double-buffered DMA stream over row-major (n, ...) HBM operands.
+
+    `bufs[j]` is a (2, cb, ...) VMEM ring for `in_refs[j]`; `sems` is a
+    (2, len(in_refs)) DMA semaphore grid.  `process(tiles, start, size,
+    carry)` sees the chunk's VMEM tiles and returns the updated carry.
+    """
+    nfull, tail = n // cb, n % cb
+
+    def copies(slot, start, size):
+        return [pltpu.make_async_copy(ref.at[pl.ds(start, size)],
+                                      buf.at[slot, pl.ds(0, size)],
+                                      sems.at[slot, j])
+                for j, (ref, buf) in enumerate(zip(in_refs, bufs))]
+
+    def start_chunk(slot, start, size):
+        for c in copies(slot, start, size):
+            c.start()
+
+    def wait_chunk(slot, start, size):
+        for c in copies(slot, start, size):
+            c.wait()
+
+    carry = carry0
+    if nfull:
+        start_chunk(0, 0, cb)
+
+        def body(ci, carry):
+            slot = jax.lax.rem(ci, 2)
+
+            @pl.when(ci + 1 < nfull)
+            def _prefetch():
+                start_chunk(1 - slot, (ci + 1) * cb, cb)
+
+            wait_chunk(slot, ci * cb, cb)
+            tiles = [buf[slot, pl.ds(0, cb)] for buf in bufs]
+            return process(tiles, ci * cb, cb, carry)
+
+        carry = jax.lax.fori_loop(0, nfull, body, carry)
+    if tail:
+        start_chunk(0, nfull * cb, tail)
+        wait_chunk(0, nfull * cb, tail)
+        tiles = [buf[0, pl.ds(0, tail)] for buf in bufs]
+        carry = process(tiles, nfull * cb, tail, carry)
+    return carry
+
+
+def _chunk_fletcher(x, start, n):
+    """Per-block Fletcher terms of a chunk + its global digest contribution.
+
+    The combine rule (core/checksum.py) weights block p's A term by the
+    words after it, (n - 1 - p) * bw; positions are global, so a running
+    (sum dA, sum dB) carry over chunks lands bit-identical to
+    `checksum.combine` over the full term table.
+    """
+    bw = x.shape[-1]
+    w = U32(bw) - jax.lax.broadcasted_iota(U32, (1, bw), 1)
+    a = jnp.sum(x, axis=-1, keepdims=True, dtype=U32)
+    b = jnp.sum(x * w, axis=-1, keepdims=True, dtype=U32)
+    pos = U32(start) + jax.lax.broadcasted_iota(U32, (x.shape[0], 1), 0)
+    after = (U32(n - 1) - pos) * U32(bw)
+    dig_a = jnp.sum(a, dtype=U32)
+    dig_b = jnp.sum(b + after * a, dtype=U32)
+    return jnp.concatenate([a, b], axis=-1), dig_a, dig_b
+
+
+def _stream_commit_kernel(old_hbm, new_hbm, delta_hbm, ck_hbm, dig_smem, *,
+                          n, cb):
+    bw = old_hbm.shape[1]
+
+    def scoped(obuf, nbuf, sems):
+        def process(tiles, start, size, carry):
+            o, nw = tiles
+            delta_hbm[pl.ds(start, size)] = o ^ nw
+            terms, da, db = _chunk_fletcher(nw, start, n)
+            ck_hbm[pl.ds(start, size)] = terms
+            return carry[0] + da, carry[1] + db
+
+        a, b = _stream_loop(n, cb, [old_hbm, new_hbm], [obuf, nbuf], sems,
+                            process, (U32(0), U32(0)))
+        dig_smem[0] = a
+        dig_smem[1] = b
+
+    pl.run_scoped(scoped,
+                  obuf=pltpu.VMEM((2, cb, bw), U32),
+                  nbuf=pltpu.VMEM((2, cb, bw), U32),
+                  sems=pltpu.SemaphoreType.DMA((2, 2)))
+
+
+def _stream_verify_kernel(old_hbm, new_hbm, stored_hbm, delta_hbm, ck_hbm,
+                          mism_hbm, dig_smem, *, n, cb):
+    bw = old_hbm.shape[1]
+
+    def scoped(obuf, nbuf, stbuf, sems):
+        def process(tiles, start, size, carry):
+            o, nw, st = tiles
+            delta_hbm[pl.ds(start, size)] = o ^ nw
+            oterms, _, _ = _chunk_fletcher(o, start, n)
+            mism_hbm[pl.ds(start, size)] = oterms ^ st
+            terms, da, db = _chunk_fletcher(nw, start, n)
+            ck_hbm[pl.ds(start, size)] = terms
+            return carry[0] + da, carry[1] + db
+
+        a, b = _stream_loop(n, cb, [old_hbm, new_hbm, stored_hbm],
+                            [obuf, nbuf, stbuf], sems, process,
+                            (U32(0), U32(0)))
+        dig_smem[0] = a
+        dig_smem[1] = b
+
+    pl.run_scoped(scoped,
+                  obuf=pltpu.VMEM((2, cb, bw), U32),
+                  nbuf=pltpu.VMEM((2, cb, bw), U32),
+                  stbuf=pltpu.VMEM((2, cb, 2), U32),
+                  sems=pltpu.SemaphoreType.DMA((2, 3)))
+
+
+def _stream_accum_kernel(acc_hbm, old_hbm, new_hbm, acc_out_hbm, old_ck_hbm,
+                         new_ck_hbm, dig_smem, *, n, cb):
+    bw = old_hbm.shape[1]
+
+    def scoped(abuf, obuf, nbuf, sems):
+        def process(tiles, start, size, carry):
+            ac, o, nw = tiles
+            acc_out_hbm[pl.ds(start, size)] = ac ^ o ^ nw
+            oterms, _, _ = _chunk_fletcher(o, start, n)
+            old_ck_hbm[pl.ds(start, size)] = oterms
+            terms, da, db = _chunk_fletcher(nw, start, n)
+            new_ck_hbm[pl.ds(start, size)] = terms
+            return carry[0] + da, carry[1] + db
+
+        a, b = _stream_loop(n, cb, [acc_hbm, old_hbm, new_hbm],
+                            [abuf, obuf, nbuf], sems, process,
+                            (U32(0), U32(0)))
+        dig_smem[0] = a
+        dig_smem[1] = b
+
+    pl.run_scoped(scoped,
+                  abuf=pltpu.VMEM((2, cb, bw), U32),
+                  obuf=pltpu.VMEM((2, cb, bw), U32),
+                  nbuf=pltpu.VMEM((2, cb, bw), U32),
+                  sems=pltpu.SemaphoreType.DMA((2, 3)))
+
+
+def _clamp_cb(chunk_blocks: int, n: int) -> int:
+    return max(1, min(int(chunk_blocks), n))
+
+
+_ANY = functools.partial(pl.BlockSpec, memory_space=pltpu.ANY)
+_SMEM = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_blocks", "interpret"))
+def fused_commit_stream(old: jax.Array, new: jax.Array, *,
+                        chunk_blocks: int = STREAM_CHUNK_BLOCKS,
+                        interpret: bool = False):
+    """Streamed fused_commit: (delta, cksums, (A, B) row digest)."""
+    assert old.shape == new.shape and old.dtype == U32 == new.dtype
+    n, bw = old.shape
+    cb = _clamp_cb(chunk_blocks, n)
+    return pl.pallas_call(
+        functools.partial(_stream_commit_kernel, n=n, cb=cb),
+        in_specs=[_ANY(), _ANY()],
+        out_specs=[_ANY(), _ANY(), _SMEM()],
+        out_shape=[jax.ShapeDtypeStruct((n, bw), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32),
+                   jax.ShapeDtypeStruct((2,), U32)],
+        interpret=interpret,
+    )(old, new)
+
+
+def _verify_stream_call(old, new, stored, chunk_blocks, interpret):
+    assert old.shape == new.shape and old.dtype == U32 == new.dtype
+    n, bw = old.shape
+    assert stored.shape == (n, 2) and stored.dtype == U32, stored.shape
+    cb = _clamp_cb(chunk_blocks, n)
+    return pl.pallas_call(
+        functools.partial(_stream_verify_kernel, n=n, cb=cb),
+        in_specs=[_ANY(), _ANY(), _ANY()],
+        out_specs=[_ANY(), _ANY(), _ANY(), _SMEM()],
+        out_shape=[jax.ShapeDtypeStruct((n, bw), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32),
+                   jax.ShapeDtypeStruct((2,), U32)],
+        interpret=interpret,
+    )(old, new, stored)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_blocks", "interpret"))
+def fused_verify_commit_stream(old: jax.Array, new: jax.Array,
+                               stored: jax.Array, *,
+                               chunk_blocks: int = STREAM_CHUNK_BLOCKS,
+                               interpret: bool = False):
+    """Streamed fused_verify_commit: (delta, cksums, bad, digest)."""
+    delta, ck, mism, dig = _verify_stream_call(old, new, stored,
+                                               chunk_blocks, interpret)
+    return delta, ck, jnp.any(mism != 0, axis=-1), dig
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_blocks", "interpret"))
+def fused_commit_old_terms_stream(old: jax.Array, new: jax.Array, *,
+                                  chunk_blocks: int = STREAM_CHUNK_BLOCKS,
+                                  interpret: bool = False):
+    """Streamed fused_commit_old_terms: (delta, new ck, old ck, digest)."""
+    zeros = jnp.zeros((old.shape[0], 2), U32)
+    return _verify_stream_call(old, new, zeros, chunk_blocks, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_blocks", "interpret"))
+def fused_accum_commit_stream(acc: jax.Array, old: jax.Array,
+                              new: jax.Array, *,
+                              chunk_blocks: int = STREAM_CHUNK_BLOCKS,
+                              interpret: bool = False):
+    """Streamed fused_accum_commit: (acc', old ck, new ck, new digest)."""
+    assert acc.shape == old.shape == new.shape, (acc.shape, old.shape,
+                                                 new.shape)
+    assert acc.dtype == old.dtype == new.dtype == U32
+    n, bw = old.shape
+    cb = _clamp_cb(chunk_blocks, n)
+    return pl.pallas_call(
+        functools.partial(_stream_accum_kernel, n=n, cb=cb),
+        in_specs=[_ANY(), _ANY(), _ANY()],
+        out_specs=[_ANY(), _ANY(), _ANY(), _SMEM()],
+        out_shape=[jax.ShapeDtypeStruct((n, bw), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32),
+                   jax.ShapeDtypeStruct((n, 2), U32),
+                   jax.ShapeDtypeStruct((2,), U32)],
         interpret=interpret,
     )(acc, old, new)

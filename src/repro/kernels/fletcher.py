@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 U32 = jnp.uint32
 TILE_BLOCKS = 8  # pages per grid step: 8 x 1024 x 4 B = 32 KB VMEM per input tile
@@ -40,5 +41,49 @@ def fletcher_blocks(blocks: jax.Array, *, interpret: bool = False
         in_specs=[pl.BlockSpec((tb, bw), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((tb, 2), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 2), U32),
+        interpret=interpret,
+    )(blocks)
+
+
+def _stream_fletcher_kernel(x_hbm, ck_hbm, dig_smem, *, n, cb):
+    from repro.kernels import commit_fused as _cf
+
+    bw = x_hbm.shape[1]
+
+    def scoped(xbuf, sems):
+        def process(tiles, start, size, carry):
+            terms, da, db = _cf._chunk_fletcher(tiles[0], start, n)
+            ck_hbm[pl.ds(start, size)] = terms
+            return carry[0] + da, carry[1] + db
+
+        a, b = _cf._stream_loop(n, cb, [x_hbm], [xbuf], sems, process,
+                                (U32(0), U32(0)))
+        dig_smem[0] = a
+        dig_smem[1] = b
+
+    pl.run_scoped(scoped,
+                  pltpu.VMEM((2, cb, bw), U32),
+                  pltpu.SemaphoreType.DMA((2, 1)))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_blocks", "interpret"))
+def fletcher_stream(blocks: jax.Array, *, chunk_blocks: int = 8,
+                    interpret: bool = False):
+    """Streamed sweep: (per-block terms, combined (A, B) row digest).
+
+    Double-buffered HBM->VMEM chunks (see commit_fused's streamed family);
+    the digest rides the loop carry, so the flat path's separate
+    `checksum.combine` pass over the term table disappears.
+    """
+    from repro.kernels import commit_fused as _cf
+
+    n, bw = blocks.shape
+    cb = _cf._clamp_cb(chunk_blocks, n)
+    return pl.pallas_call(
+        functools.partial(_stream_fletcher_kernel, n=n, cb=cb),
+        in_specs=[_cf._ANY()],
+        out_specs=[_cf._ANY(), _cf._SMEM()],
+        out_shape=[jax.ShapeDtypeStruct((n, 2), U32),
+                   jax.ShapeDtypeStruct((2,), U32)],
         interpret=interpret,
     )(blocks)

@@ -39,7 +39,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import commit_fused as _cf
 from repro.kernels.tiling import largest_divisor_tile as _pick_tile
 
 U32 = jnp.uint32
@@ -185,3 +187,153 @@ def fused_commit_old_terms_s(old: jax.Array, new: jax.Array,
     r = coeffs.shape[0]
     zeros = jnp.zeros((old.shape[0], 2), U32)
     return _s_call(old, new, zeros, coeffs, r, interpret)
+
+
+# ---------------------------------------------------------------------------
+# stacked-plane standalone scale
+# ---------------------------------------------------------------------------
+
+def _make_sdelta_stack_kernel(r: int):
+    def kernel(coeff_ref, x_ref, o_ref):
+        x = x_ref[...]
+        o_ref[0] = x
+        for k in range(1, r):
+            o_ref[k] = _gf_mul_tile(x, coeff_ref[k, 0])
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sdelta_stack(x: jax.Array, coeffs: jax.Array, *,
+                 interpret: bool = False) -> jax.Array:
+    """(r, *x.shape) weighted stack from ONE read of x.
+
+    The per-plane `gf_scale` loop reads the delta r-1 times (and the
+    stack concat copies it again); here each VMEM tile is weighted into
+    all r output planes while resident, so HBM traffic is 1 read +
+    r writes regardless of redundancy.  Plane 0 is the raw delta
+    (coeffs[0] = g^0 = 1, statically skipped).
+    """
+    assert x.dtype == U32, x.dtype
+    shape = x.shape
+    if x.ndim == 1:
+        x = x.reshape(-1, 1024) if x.size % 1024 == 0 else x.reshape(1, -1)
+    n, m = x.shape
+    r = coeffs.shape[0]
+    t = _pick_tile(n, TILE_ROWS)
+    coeffs = jnp.asarray(coeffs, U32).reshape(r, 1)
+    out = pl.pallas_call(
+        _make_sdelta_stack_kernel(r),
+        grid=(n // t,),
+        in_specs=[pl.BlockSpec((r, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((t, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((r, t, m), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n, m), U32),
+        interpret=interpret,
+    )(coeffs, x)
+    return out.reshape((r,) + shape)
+
+
+# ---------------------------------------------------------------------------
+# blockwise double-buffered streaming variants
+# ---------------------------------------------------------------------------
+# Same pipeline as commit_fused's streamed family (see the discussion
+# there): operands stay in HBM, a 2-deep VMEM ring double-buffers the
+# chunks, and the whole-row Fletcher digest rides the loop carry.  Each
+# resident delta chunk is weighted into all r syndrome planes before the
+# ring slot is recycled — one read of (old, new) regardless of redundancy.
+
+def _make_stream_s_kernel(n, cb, r, verify):
+    def kernel(coeff_smem, old_hbm, new_hbm, *refs):
+        if verify:
+            stored_hbm, sdelta_hbm, ck_hbm, mism_hbm, dig_smem = refs
+        else:
+            sdelta_hbm, ck_hbm, dig_smem = refs
+        bw = old_hbm.shape[1]
+
+        def scoped(*scratch):
+            if verify:
+                obuf, nbuf, stbuf, sems = scratch
+                in_refs = [old_hbm, new_hbm, stored_hbm]
+                bufs = [obuf, nbuf, stbuf]
+            else:
+                obuf, nbuf, sems = scratch
+                in_refs = [old_hbm, new_hbm]
+                bufs = [obuf, nbuf]
+
+            def process(tiles, start, size, carry):
+                o, nw = tiles[0], tiles[1]
+                d = o ^ nw
+                sdelta_hbm[0, pl.ds(start, size)] = d
+                for k in range(1, r):
+                    sdelta_hbm[k, pl.ds(start, size)] = _gf_mul_tile(
+                        d, coeff_smem[k])
+                if verify:
+                    oterms, _, _ = _cf._chunk_fletcher(o, start, n)
+                    mism_hbm[pl.ds(start, size)] = oterms ^ tiles[2]
+                terms, da, db = _cf._chunk_fletcher(nw, start, n)
+                ck_hbm[pl.ds(start, size)] = terms
+                return carry[0] + da, carry[1] + db
+
+            a, b = _cf._stream_loop(n, cb, in_refs, bufs, sems, process,
+                                    (U32(0), U32(0)))
+            dig_smem[0] = a
+            dig_smem[1] = b
+
+        scratch_shapes = [pltpu.VMEM((2, cb, bw), U32),
+                          pltpu.VMEM((2, cb, bw), U32)]
+        if verify:
+            scratch_shapes.append(pltpu.VMEM((2, cb, 2), U32))
+        scratch_shapes.append(
+            pltpu.SemaphoreType.DMA((2, 3 if verify else 2)))
+        pl.run_scoped(scoped, *scratch_shapes)
+    return kernel
+
+
+def _s_stream_call(old, new, stored, coeffs, r, chunk_blocks, interpret):
+    assert old.shape == new.shape and old.dtype == U32 == new.dtype
+    n, bw = old.shape
+    cb = _cf._clamp_cb(chunk_blocks, n)
+    coeffs = jnp.asarray(coeffs, U32).reshape(r)
+    verify = stored is not None
+    in_specs = [_cf._SMEM(), _cf._ANY(), _cf._ANY()]
+    operands = [coeffs, old, new]
+    out_specs = [_cf._ANY(), _cf._ANY()]
+    out_shape = [jax.ShapeDtypeStruct((r, n, bw), U32),
+                 jax.ShapeDtypeStruct((n, 2), U32)]
+    if verify:
+        assert stored.shape == (n, 2) and stored.dtype == U32, stored.shape
+        in_specs.append(_cf._ANY())
+        operands.append(stored)
+        out_specs.append(_cf._ANY())
+        out_shape.append(jax.ShapeDtypeStruct((n, 2), U32))
+    out_specs.append(_cf._SMEM())
+    out_shape.append(jax.ShapeDtypeStruct((2,), U32))
+    return pl.pallas_call(
+        _make_stream_s_kernel(n, cb, r, verify),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_blocks", "interpret"))
+def fused_commit_s_stream(old: jax.Array, new: jax.Array,
+                          coeffs: jax.Array, *,
+                          chunk_blocks: int = _cf.STREAM_CHUNK_BLOCKS,
+                          interpret: bool = False):
+    """Streamed fused_commit_s: (sdeltas, new cksums, row digest)."""
+    r = coeffs.shape[0]
+    return _s_stream_call(old, new, None, coeffs, r, chunk_blocks, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_blocks", "interpret"))
+def fused_verify_commit_s_stream(old: jax.Array, new: jax.Array,
+                                 stored: jax.Array, coeffs: jax.Array, *,
+                                 chunk_blocks: int = _cf.STREAM_CHUNK_BLOCKS,
+                                 interpret: bool = False):
+    """Streamed fused_verify_commit_s: (sdeltas, cksums, bad, digest)."""
+    r = coeffs.shape[0]
+    sdelta, ck, mism, dig = _s_stream_call(old, new, stored, coeffs, r,
+                                           chunk_blocks, interpret)
+    return sdelta, ck, jnp.any(mism != 0, axis=-1), dig

@@ -107,9 +107,7 @@ def syndrome_scale(delta: jax.Array, coeffs, *,
     p = _pallas_path(interpret)
     if p is None:
         return _ref.sdelta_stack_ref(delta, coeffs)
-    r = coeffs.shape[0]
-    return jnp.stack([delta] + [_gf.gf_scale(delta, coeffs[k], interpret=p)
-                                for k in range(1, r)])
+    return _gf.sdelta_stack(delta, coeffs, interpret=p)
 
 
 # The fused syndrome sweeps take the rank's coefficient vector
@@ -150,3 +148,111 @@ def fused_commit_old_terms_s(old: jax.Array, new: jax.Array, coeffs=None, *,
     if p is None:
         return _ref.fused_commit_old_terms_s_ref(old, new, coeffs)
     return _gf.fused_commit_old_terms_s(old, new, coeffs, interpret=p)
+
+
+# ---------------------------------------------------------------------------
+# blockwise double-buffered streaming dispatch
+# ---------------------------------------------------------------------------
+# The streamed variants return the flat outputs PLUS the combined (A, B)
+# row digest that rode the kernel's loop carry — the CPU oracle recovers
+# it with `digest_ref` over the term table, so both paths agree bit-for-bit
+# with `checksum.combine(ck, block_words)`.
+
+def stream_chunk_blocks(n_blocks: int, block_words: int, *,
+                        threshold_words: int,
+                        chunk_words: int):
+    """The engines' flat-vs-streamed policy, in one place.
+
+    Returns the streamed chunk height (pages per double-buffered VMEM
+    chunk), or None when the row is small enough that the flat
+    whole-grid kernels win (their automatic pipelining has no
+    per-chunk DMA bookkeeping).  threshold_words <= 0 disables
+    streaming outright.
+    """
+    if threshold_words <= 0 or n_blocks * block_words < threshold_words:
+        return None
+    return max(1, min(int(chunk_words) // int(block_words), n_blocks))
+
+
+def fletcher_stream(blocks: jax.Array, *, chunk_blocks: int = 8,
+                    interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fletcher_stream_ref(blocks)
+    return _fletcher.fletcher_stream(blocks, chunk_blocks=chunk_blocks,
+                                     interpret=p)
+
+
+def fused_commit_stream(old: jax.Array, new: jax.Array, *,
+                        chunk_blocks: int = 8,
+                        interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_commit_stream_ref(old, new)
+    return _fused.fused_commit_stream(old, new, chunk_blocks=chunk_blocks,
+                                      interpret=p)
+
+
+def fused_verify_commit_stream(old: jax.Array, new: jax.Array,
+                               stored: jax.Array, *, chunk_blocks: int = 8,
+                               interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_verify_commit_stream_ref(old, new, stored)
+    return _fused.fused_verify_commit_stream(old, new, stored,
+                                             chunk_blocks=chunk_blocks,
+                                             interpret=p)
+
+
+def fused_commit_old_terms_stream(old: jax.Array, new: jax.Array, *,
+                                  chunk_blocks: int = 8,
+                                  interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_commit_old_terms_stream_ref(old, new)
+    return _fused.fused_commit_old_terms_stream(old, new,
+                                                chunk_blocks=chunk_blocks,
+                                                interpret=p)
+
+
+def fused_accum_commit_stream(acc: jax.Array, old: jax.Array,
+                              new: jax.Array, *, chunk_blocks: int = 8,
+                              interpret: Optional[bool] = None):
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_accum_commit_stream_ref(acc, old, new)
+    return _fused.fused_accum_commit_stream(acc, old, new,
+                                            chunk_blocks=chunk_blocks,
+                                            interpret=p)
+
+
+def fused_commit_s_stream(old: jax.Array, new: jax.Array, coeffs=None, *,
+                          chunk_blocks: int = 8,
+                          interpret: Optional[bool] = None):
+    if coeffs is None:
+        delta, ck, dig = fused_commit_stream(old, new,
+                                             chunk_blocks=chunk_blocks,
+                                             interpret=interpret)
+        return delta[None], ck, dig
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_commit_s_stream_ref(old, new, coeffs)
+    return _gf.fused_commit_s_stream(old, new, coeffs,
+                                     chunk_blocks=chunk_blocks, interpret=p)
+
+
+def fused_verify_commit_s_stream(old: jax.Array, new: jax.Array,
+                                 stored: jax.Array, coeffs=None, *,
+                                 chunk_blocks: int = 8,
+                                 interpret: Optional[bool] = None):
+    if coeffs is None:
+        delta, ck, bad, dig = fused_verify_commit_stream(
+            old, new, stored, chunk_blocks=chunk_blocks, interpret=interpret)
+        return delta[None], ck, bad, dig
+    p = _pallas_path(interpret)
+    if p is None:
+        return _ref.fused_verify_commit_s_stream_ref(old, new, stored,
+                                                     coeffs)
+    return _gf.fused_verify_commit_s_stream(old, new, stored, coeffs,
+                                            chunk_blocks=chunk_blocks,
+                                            interpret=p)

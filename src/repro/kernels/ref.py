@@ -121,3 +121,59 @@ def fused_accum_commit_ref(acc: jax.Array, old: jax.Array, new: jax.Array):
     assert acc.dtype == U32 and old.dtype == U32 and new.dtype == U32
     return (acc ^ old ^ new, fletcher_blocks_ref(old),
             fletcher_blocks_ref(new))
+
+
+def digest_ref(cksums: jax.Array, block_words: int) -> jax.Array:
+    """`checksum.combine` restated here so oracles stay dependency-free.
+
+    Block p's A term counts (n - 1 - p) * block_words extra times in B —
+    the words after it — which is exactly the per-chunk weighting the
+    streamed kernels fold into their loop-carried (A, B) digest.
+    """
+    n = cksums.shape[0]
+    a_blocks = cksums[:, 0]
+    b_blocks = cksums[:, 1]
+    a = jnp.sum(a_blocks, dtype=U32)
+    after = ((n - 1 - jnp.arange(n, dtype=U32)) * U32(block_words))
+    b = jnp.sum(b_blocks + after * a_blocks, dtype=U32)
+    return jnp.stack([a, b])
+
+
+# --- streamed-variant oracles: flat semantics + the riding row digest ----
+
+def fletcher_stream_ref(blocks: jax.Array):
+    ck = fletcher_blocks_ref(blocks)
+    return ck, digest_ref(ck, blocks.shape[-1])
+
+
+def fused_commit_stream_ref(old: jax.Array, new: jax.Array):
+    delta, ck = fused_commit_ref(old, new)
+    return delta, ck, digest_ref(ck, new.shape[-1])
+
+
+def fused_verify_commit_stream_ref(old: jax.Array, new: jax.Array,
+                                   stored: jax.Array):
+    delta, ck, bad = fused_verify_commit_ref(old, new, stored)
+    return delta, ck, bad, digest_ref(ck, new.shape[-1])
+
+
+def fused_commit_old_terms_stream_ref(old: jax.Array, new: jax.Array):
+    delta, ck, old_ck = fused_commit_old_terms_ref(old, new)
+    return delta, ck, old_ck, digest_ref(ck, new.shape[-1])
+
+
+def fused_accum_commit_stream_ref(acc: jax.Array, old: jax.Array,
+                                  new: jax.Array):
+    acc_out, old_ck, new_ck = fused_accum_commit_ref(acc, old, new)
+    return acc_out, old_ck, new_ck, digest_ref(new_ck, new.shape[-1])
+
+
+def fused_commit_s_stream_ref(old: jax.Array, new: jax.Array, coeffs):
+    sdelta, ck = fused_commit_s_ref(old, new, coeffs)
+    return sdelta, ck, digest_ref(ck, new.shape[-1])
+
+
+def fused_verify_commit_s_stream_ref(old: jax.Array, new: jax.Array,
+                                     stored: jax.Array, coeffs):
+    sdelta, ck, bad = fused_verify_commit_s_ref(old, new, stored, coeffs)
+    return sdelta, ck, bad, digest_ref(ck, new.shape[-1])

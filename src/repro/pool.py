@@ -261,7 +261,9 @@ class Pool(EngineHost):
             mode=mode, redundancy=self.config.resolved_redundancy,
             block_words=self.config.block_words,
             hybrid_threshold=self.config.hybrid_threshold,
-            log_capacity=self.config.log_capacity)
+            log_capacity=self.config.log_capacity,
+            stream_threshold_words=self.config.stream_threshold_words,
+            stream_chunk_words=self.config.stream_chunk_words)
         self._due_scrubs = 0          # full_scrub_every cadence counter
         # footprint arguments may be callables of the built zone layout
         # (e.g. lambda lo: range(len(lo.slots))) so callers need not

@@ -249,9 +249,9 @@ def test_deferred_commit_is_allocation_free(setup):
         assert prev.prot.log.mark.is_deleted(), "old log must donate forward"
         assert prev.dirty.is_deleted(), "old dirty mask must donate forward"
     stepfn = eng._jit["step"]
-    ma = stepfn.lower(est.prot, est.dirty, est.pending, cur, None, 0,
-                      jax.random.PRNGKey(9), True).compile(
-                      ).memory_analysis()  # (prot, dirty, pending,
+    ma = stepfn.lower(est.prot, est.dirty, est.pending, est.acc, cur,
+                      None, 0, jax.random.PRNGKey(9), True).compile(
+                      ).memory_analysis()  # (prot, dirty, pending, acc,
                                            #  state_new, dirty_words, ...)
     if ma is not None:                      # backend-dependent availability
         per_dev_row = est.prot.row.nbytes // len(jax.devices())
@@ -514,7 +514,7 @@ def test_server_deferred_amortized_bytes_below_sync(served, mesh42):
     est = srv._est
     cache = est.prot.state
     step_b = _xla_bytes(eng._jit["step"], est.prot, est.dirty, est.pending,
-                        cache, srv._dirty_words(0), 0, None, True)
+                        est.acc, cache, srv._dirty_words(0), 0, None, True)
     flush_b = _xla_bytes(eng._jitted("flush", eng.make_flush), est)
     p = srv.protector
     pages = srv._dirty_pages(0).tolist()
