@@ -1,0 +1,58 @@
+"""Chaos campaign under live traffic (BENCH_commit.json §chaos).
+
+Runs the scripted fault scenarios from repro.chaos.scenarios — rescale
+under traffic, straggler degradation, mid-window scribble+loss,
+syndrome-budget exhaustion + re-arm, and the crash/replay storm matrix
+over r x W — against sustained synthetic commit traffic, and distills
+per-scenario tail latency (commit p50/p99, clean vs during-disturbance)
+and recovery-time-under-load into one diffable record.
+
+Two properties are load-bearing:
+
+  * every scenario must end bit-identical to its fault-free golden run
+    (`scenarios.campaign` raises otherwise, and the gate re-checks the
+    recorded flag structurally) — chaos may cost latency, never bytes;
+  * the during-disturbance p99 gates as a wall cell (pathology
+    tolerance only): a recovery that stalls traffic 10x longer than the
+    baseline captured is a hang, not noise.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def _row(res: dict) -> dict:
+    cm = res["commit_ms"]
+    return {
+        "scenario": res["scenario"],
+        "steps": res["steps"],
+        "events": res["events"],
+        "r": res["r"],
+        "window": res["window"],
+        "clean_p50_ms": cm["clean"]["p50_ms"],
+        "clean_p99_ms": cm["clean"]["p99_ms"],
+        "during_p50_ms": cm["during"]["p50_ms"],
+        "during_p99_ms": cm["during"]["p99_ms"],
+        "recovery_p50_ms": res["recovery_ms"]["p50_ms"],
+        "recovery_p99_ms": res["recovery_ms"]["p99_ms"],
+        "recoveries": len(res["recoveries"]),
+        "golden_exact": bool(res.get("golden_exact")),
+    }
+
+
+def run(quick: bool = False) -> dict:
+    from repro.chaos import scenarios
+
+    results = scenarios.campaign(quick=quick, storms=True)
+    rows = [_row(r) for r in results]
+    fmt = lambda v: None if v is None else round(v, 2)  # noqa: E731
+    common.print_table(
+        "chaos campaign: tail latency + recovery under load (ms)",
+        [{**r, **{k: fmt(r[k]) for k in r if k.endswith("_ms")}}
+         for r in rows],
+        ["scenario", "r", "window", "clean_p50_ms", "clean_p99_ms",
+         "during_p50_ms", "during_p99_ms", "recovery_p50_ms",
+         "recovery_p99_ms", "recoveries", "golden_exact"])
+    out = {"rows": rows}
+    common.save_result("chaos", out)
+    return out

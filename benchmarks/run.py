@@ -24,14 +24,16 @@ import time
 import traceback
 
 BENCHES = ["storage_overhead", "txn_latency", "commit_sweep", "deferred",
-           "scalability", "app_kv", "scrub_freq", "recovery", "roofline"]
+           "scalability", "app_kv", "scrub_freq", "recovery", "roofline",
+           "chaos"]
 
 
 def emit_commit_json(txn_result: dict, quick: bool, path: str,
                      ab_result: dict = None,
                      deferred_result: dict = None,
                      recovery_result: dict = None,
-                     roofline_result: dict = None) -> None:
+                     roofline_result: dict = None,
+                     chaos_result: dict = None) -> None:
     """Write the per-PR commit-latency record (BENCH_commit.json).
 
     Distills txn_latency down to the commit hot path (overwrite latency
@@ -76,6 +78,11 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
         # (gate: record-presence at 1 MB, streamed xla_MB <= flat,
         # streamed useful_frac above flat, wall pathology)
         payload["roofline"] = roofline_result["commit_sweep"]
+    if chaos_result and chaos_result.get("rows"):
+        # §chaos: tail latency + recovery-under-load per scripted fault
+        # scenario (gate: record-presence of the four core scenarios,
+        # golden_exact structural, during-p99 wall pathology)
+        payload["chaos"] = chaos_result["rows"]
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"commit benchmark record -> {path}")
@@ -111,7 +118,8 @@ def main():
                          ab_result=results.get("commit_sweep"),
                          deferred_result=results.get("deferred"),
                          recovery_result=results.get("recovery"),
-                         roofline_result=results.get("roofline"))
+                         roofline_result=results.get("roofline"),
+                         chaos_result=results.get("chaos"))
     print("\n" + "=" * 70)
     for name, s in status.items():
         print(f"{name:20s} {s}")

@@ -167,6 +167,36 @@ def check(fresh: dict, base: dict, wall_tol: float,
             bad.append(f"roofline{key}: wall_us {row['wall_us']} vs "
                        f"baseline {ref['wall_us']} (> {1 + wall_tol:.1f}x)")
 
+    # -- §chaos: scripted fault scenarios under live traffic -------------------
+    fc = _index(fresh.get("chaos", []), ("scenario",))
+    bc = _index(base.get("chaos", []), ("scenario",))
+    if bc and not fc:
+        bad.append("chaos: record missing from fresh run (the chaos "
+                   "campaign is no longer measured)")
+    if fc:
+        required = {"rescale_under_traffic", "straggler",
+                    "midwindow_scribble_loss", "budget_exhaust_rearm"}
+        missing = required - {k[0] for k in fc}
+        if missing:
+            bad.append(f"chaos: core scenarios missing from fresh run: "
+                       f"{sorted(missing)}")
+    for key, row in fc.items():
+        # structural: every scenario must end bit-identical to its
+        # fault-free golden run — chaos may cost latency, never bytes
+        if not row.get("golden_exact"):
+            bad.append(f"chaos{key}: golden_exact is false — the "
+                       "recovered end state drifted from the fault-free "
+                       "run")
+        ref = bc.get(key)
+        # wall: during-disturbance tail gates as pathology catch-all
+        # (a recovery stalling traffic past wall_tol x the captured
+        # baseline is a hang, not noise)
+        for cell in ("during_p99_ms", "recovery_p99_ms"):
+            val, refv = row.get(cell), ref.get(cell) if ref else None
+            if val and refv and val > refv * (1 + wall_tol):
+                bad.append(f"chaos{key}: {cell} {val} vs baseline "
+                           f"{refv} (> {1 + wall_tol:.1f}x)")
+
     # -- §rs: generalized Reed-Solomon sweep -----------------------------------
     frs = _index(fresh.get("rs", []), ("r",))
     brs = _index(base.get("rs", []), ("r",))
@@ -221,6 +251,7 @@ def main():
           f"{len(fresh.get('rs', []))} rs cells, "
           f"{len(fresh.get('facade', []))} facade cells, "
           f"{len(fresh.get('roofline', []))} roofline cells, "
+          f"{len(fresh.get('chaos', []))} chaos cells, "
           f"wall tol {args.wall_tol}, bytes tol {args.bytes_tol})")
     return 0
 

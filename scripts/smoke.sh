@@ -29,11 +29,14 @@ python examples/train_fault_tolerant.py --smoke
 # one r=3 cell: triple-loss survival through the Reed-Solomon stack
 python examples/train_fault_tolerant.py --smoke --redundancy 3
 python examples/elastic_rescale.py --smoke
+# one short chaos scenario: mid-window scribble+loss under traffic,
+# recovered online, end state bit-identical to the fault-free run
+python -m repro.chaos --smoke
 
 if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== perf: commit latency + dual-parity recovery (quick) =="
+    echo "== perf: commit latency + dual-parity recovery + chaos (quick) =="
     python -m benchmarks.run --quick \
-        --only txn_latency,commit_sweep,deferred,recovery,roofline \
+        --only txn_latency,commit_sweep,deferred,recovery,roofline,chaos \
         --commit-json BENCH_commit.fresh.json
     echo "== perf: bench gate =="
     python scripts/bench_gate.py

@@ -1,0 +1,54 @@
+"""Chaos campaign: scripted fault scenarios under live traffic.
+
+The recovery benchmarks time reconstruction on a *quiet* pool; real
+incidents arrive mid-traffic — a rank dies between two commits of an
+open window, a scribble lands while a rescale is in flight, losses
+stack up faster than the syndrome budget refreshes.  This package
+scripts those storms deterministically and measures what the paper's
+headline claims look like *under load*:
+
+  * `FaultSchedule` / `ChaosEvent` — a seeded, replayable timeline of
+    faults and control events keyed to commit indices (schedule.py).
+  * `PoolWorkload` — deterministic synthetic traffic over a `Pool`:
+    an elementwise f32 step whose trajectory is bit-identical across
+    mesh shapes, so every scenario can be diffed against a fault-free
+    golden run (workload.py).
+  * `ScenarioRunner` — drives the workload while the schedule fires,
+    recording per-commit latency (clean vs during-disturbance) and
+    recovery-under-load timings; ends with the golden bit-identity
+    check (runner.py).
+  * `scenarios` — the campaign: rescale under traffic, straggler
+    degradation, mid-window scribble+loss, syndrome-budget exhaustion
+    and re-arm, crash/replay storms over r x W (scenarios.py).
+  * `attach_schedule` — runtime attachment: the same schedules ride on
+    a live `Trainer`/`Server` through their step hooks (runner.py).
+
+`python -m repro.chaos --smoke` runs one short scenario end-to-end
+(CI's liveness probe); `benchmarks/chaos.py` runs the full campaign
+and lands the numbers in BENCH_commit.json §chaos, gated by
+scripts/bench_gate.py.
+"""
+# Lazy re-exports (PEP 562): `python -m repro.chaos` must be able to
+# set XLA_FLAGS in __main__ before anything here drags jax in — the
+# package import itself stays free of jax side effects.
+_EXPORTS = {
+    "ChaosEvent": ("repro.chaos.schedule", "ChaosEvent"),
+    "FaultSchedule": ("repro.chaos.schedule", "FaultSchedule"),
+    "PoolWorkload": ("repro.chaos.workload", "PoolWorkload"),
+    "ScenarioRunner": ("repro.chaos.runner", "ScenarioRunner"),
+    "attach_schedule": ("repro.chaos.runner", "attach_schedule"),
+    "inject_event": ("repro.chaos.runner", "inject_event"),
+    "scenarios": ("repro.chaos.scenarios", None),
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(name) from None
+    import importlib
+    mod = importlib.import_module(mod_name)
+    return mod if attr is None else getattr(mod, attr)

@@ -1,0 +1,57 @@
+"""CLI: `python -m repro.chaos [--smoke | --scenario NAME] [--seed N]`.
+
+--smoke runs one short scenario end-to-end (scripts/smoke.sh's chaos
+liveness probe); the default runs the four-scenario core campaign and
+prints each scenario's latency/recovery summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.chaos")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one short scenario (CI liveness probe)")
+    ap.add_argument("--scenario", default=None,
+                    help="run one named scenario")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="full-length runs (default: quick)")
+    args = ap.parse_args(argv)
+
+    # 8 host devices before the first backend use, like benchmarks/run.py
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+    from repro.chaos import scenarios
+
+    quick = not args.full
+    if args.smoke:
+        out = scenarios.run_scenario("midwindow_scribble_loss",
+                                     quick=True, seed=args.seed)
+        ok = bool(out.get("golden_exact"))
+        print(json.dumps({"scenario": out["scenario"],
+                          "golden_exact": ok,
+                          "recoveries": len(out["recoveries"])}))
+        return 0 if ok else 1
+    names = ([args.scenario] if args.scenario
+             else list(scenarios.SCENARIOS))
+    rc = 0
+    for name in names:
+        out = scenarios.run_scenario(name, quick=quick, seed=args.seed)
+        ok = bool(out.get("golden_exact"))
+        rc |= 0 if ok else 1
+        print(json.dumps({
+            "scenario": name, "golden_exact": ok,
+            "commit_ms": out["commit_ms"],
+            "recovery_ms": out["recovery_ms"]}))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

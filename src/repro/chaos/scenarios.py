@@ -1,0 +1,166 @@
+"""The chaos campaign: named scenarios over the ScenarioRunner.
+
+Each builder returns (workload, schedule, n_steps); `run_scenario`
+executes one and `campaign` runs the whole set, which is what
+benchmarks/chaos.py records into BENCH_commit.json §chaos and
+scripts/bench_gate.py gates.  Every scenario ends with the golden
+bit-identity check — chaos may cost latency, never bytes.
+
+All scenarios run on the 8 host devices the benchmarks/tests force;
+meshes are (4, 2) or (8, 1) so both zone geometries (G=4, G=8) see
+traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+
+from repro.chaos.runner import ScenarioRunner
+from repro.chaos.schedule import ChaosEvent, FaultSchedule
+from repro.chaos.workload import PoolWorkload
+from repro.configs.base import ProtectConfig
+
+E = ChaosEvent.make
+
+
+def _mesh(shape=(4, 2)):
+    return jax.make_mesh(tuple(shape), ("data", "model"))
+
+
+def _cfg(**kw) -> ProtectConfig:
+    base = dict(mode="mlpc", window=4, redundancy=2, scrub_period=0)
+    base.update(kw)
+    return ProtectConfig(**base)
+
+
+# -- builders: name -> (workload, schedule, n_steps) --------------------------
+
+
+def rescale_under_traffic(quick: bool, seed: int):
+    """Elastic (4,2) -> (8,1) -> (4,2) while commits keep flowing, with
+    a rank loss landing right after the first rescale settles."""
+    n = 24 if quick else 60
+    wl = PoolWorkload(_mesh((4, 2)), _cfg(), n_bytes=1 << 15, seed=seed)
+    sched = FaultSchedule([
+        E(n // 4, "rescale", shape=(8, 1)),
+        E(n // 4 + 2, "rank_loss"),
+        E(n // 2, "rescale", shape=(4, 2)),
+    ], seed=seed)
+    return wl, sched, n
+
+
+def straggler(quick: bool, seed: int):
+    """One replica runs 6x slow mid-run: the policy drops it, the
+    adaptive window collapses while degraded, and regrows after the
+    replica heals."""
+    from repro.dist.straggler import StragglerPolicy
+    n = 36 if quick else 80
+    cfg = _cfg(window=8, straggler_threshold=2.0,
+               window_growth_commits=4)
+    mesh = _mesh((4, 2))
+    policy = StragglerPolicy(mesh.shape["data"], threshold=2.0,
+                             window=4)
+    wl = PoolWorkload(mesh, cfg, n_bytes=1 << 15, seed=seed,
+                      straggler_policy=policy)
+    sched = FaultSchedule([
+        E(n // 4, "straggler_start", rank=1, factor=6.0),
+        E(n // 2, "straggler_stop"),
+    ], seed=seed)
+    return wl, sched, n
+
+
+def midwindow_scribble_loss(quick: bool, seed: int):
+    """A scribble on one rank concurrent with another rank's loss,
+    both landing INSIDE an open window — the overlap single parity
+    cannot untangle; the r=2 syndrome stack solves both as losses."""
+    n = 20 if quick else 48
+    wl = PoolWorkload(_mesh((4, 2)), _cfg(window=8), n_bytes=1 << 15,
+                      seed=seed)
+    sched = FaultSchedule([
+        E(n // 2, "scribble", mid_window=True, rank=0, n_words=6),
+        E(n // 2, "rank_loss", mid_window=True, rank=2),
+    ], seed=seed)
+    return wl, sched, n
+
+
+def budget_exhaust_rearm(quick: bool, seed: int):
+    """Back-to-back losses beyond the stack: e=2 on an r=1 pool raises
+    the budget-exhausted error, the runner restores + replays from the
+    snapshot tier, and a later single loss again recovers online."""
+    n = 24 if quick else 48
+    wl = PoolWorkload(_mesh((4, 2)), _cfg(redundancy=1, window=2),
+                      n_bytes=1 << 15, seed=seed)
+    sched = FaultSchedule([
+        E(n // 4, "snapshot"),
+        E(n // 3, "multi_loss", e=2),           # e > r: exhausted
+        E(2 * n // 3, "rank_loss"),             # re-armed: online again
+    ], seed=seed)
+    return wl, sched, n
+
+
+def crash_replay_storm(r: int, window: int):
+    """One storm cell: an e=r loss (the stack's full budget) plus a
+    mid-window single loss, at syndrome height r and window W."""
+    def build(quick: bool, seed: int):
+        n = 16 if quick else 40
+        g = 8 if r >= 4 else 4          # r <= G - 1
+        shape = (8, 1) if g == 8 else (4, 2)
+        wl = PoolWorkload(_mesh(shape),
+                          _cfg(redundancy=r, window=window),
+                          n_bytes=1 << 15, seed=seed)
+        events = [E(n // 3, "rank_loss", mid_window=(window > 1))]
+        if r >= 2:
+            events.append(E(2 * n // 3, "multi_loss", e=r))
+        return wl, FaultSchedule(events, seed=seed), n
+    return build
+
+
+SCENARIOS: Dict[str, Callable] = {
+    "rescale_under_traffic": rescale_under_traffic,
+    "straggler": straggler,
+    "midwindow_scribble_loss": midwindow_scribble_loss,
+    "budget_exhaust_rearm": budget_exhaust_rearm,
+}
+
+# the storm matrix is bench-only by default (r x W cells); the four
+# named scenarios above are the gated core set
+STORM_CELLS: Tuple[Tuple[int, int], ...] = (
+    (1, 1), (2, 16), (3, 16), (4, 16))
+
+
+def run_scenario(name: str, *, quick: bool = True,
+                 seed: int = 0) -> dict:
+    wl, sched, n = SCENARIOS[name](quick, seed)
+    out = ScenarioRunner(wl, sched).run(n)
+    out["scenario"] = name
+    return out
+
+
+def run_storm_cell(r: int, window: int, *, quick: bool = True,
+                   seed: int = 0) -> dict:
+    wl, sched, n = crash_replay_storm(r, window)(quick, seed)
+    out = ScenarioRunner(wl, sched).run(n)
+    out["scenario"] = f"storm_r{r}_w{window}"
+    return out
+
+
+def campaign(*, quick: bool = True, seed: int = 0,
+             storms: bool = True) -> list:
+    """The full campaign: the four core scenarios plus the storm
+    matrix.  Raises if any scenario fails the golden bit-identity
+    check — a chaos campaign whose end state drifted measured nothing.
+    """
+    results = [run_scenario(name, quick=quick, seed=seed)
+               for name in SCENARIOS]
+    if storms:
+        cells = STORM_CELLS[:2] if quick else STORM_CELLS
+        results += [run_storm_cell(r, w, quick=quick, seed=seed)
+                    for r, w in cells]
+    bad = [r["scenario"] for r in results if not r.get("golden_exact")]
+    if bad:
+        raise AssertionError(
+            f"chaos scenarios ended non-golden: {bad} — recovered "
+            "state must be bit-identical to the fault-free run")
+    return results

@@ -163,6 +163,14 @@ class ProtectConfig:
                                       # (256 KB at u32); each operand
                                       # stages 2 chunks for the DMA
                                       # double buffer
+    straggler_threshold: float = 0.0  # > 0 wires dist/straggler.py's
+                                      # StragglerPolicy into the pool
+                                      # commit loop: replicas whose mean
+                                      # step time exceeds threshold x the
+                                      # fleet median are dropped from the
+                                      # loss and the adaptive window
+                                      # collapses while any replica is
+                                      # degraded.  0 = disabled
 
     @property
     def resolved_mode(self):
@@ -259,6 +267,13 @@ class ProtectConfig:
                 f"{self.stream_chunk_words} — the streamed VMEM chunk "
                 "needs a positive word count (it is clamped to at least "
                 "one block_words page per chunk)")
+        if self.straggler_threshold < 0:
+            raise ValueError(
+                f"ProtectConfig.straggler_threshold="
+                f"{self.straggler_threshold} — replicas are dropped past "
+                "threshold x the fleet-median step time, so the knob must "
+                "be a positive ratio (sensible values are >= 1.5; 0 "
+                "disables straggler mitigation)")
 
 
 def workload_skips(cfg: ModelConfig, wl: Workload) -> Optional[str]:

@@ -231,6 +231,16 @@ class DeferredProtector:
                             < protector.hybrid_threshold)
         self._since = 0
         self._jit: dict = {}
+        # fault-arrival point (chaos harness): called between in-window
+        # commits — after commit k's bookkeeping, BEFORE the epoch flush
+        # when one is due — as fn(est, since, at_boundary) -> Optional
+        # [EpochState].  Returning a replaced EpochState models a fault
+        # (corruption, rank loss) landing inside the window, concurrent
+        # with traffic: the flush that follows must still describe
+        # intended values (the row/accumulator are separate buffers the
+        # state corruption never touched).  None leaves the window
+        # untouched.  See repro/chaos.
+        self.arrival_hook = None
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -619,6 +629,14 @@ class DeferredProtector:
             dirty_words, data_cursor, rng_key, bool(canary_ok))
         est = EpochState(prot=prot, dirty=dirty, pending=pending, acc=acc)
         self._since += 1
+        if self.arrival_hook is not None:
+            # the mid-window fault-arrival point: the hook sees the
+            # window AFTER this commit landed and BEFORE any boundary
+            # flush — exactly where a concurrent fault is nastiest
+            replaced = self.arrival_hook(est, self._since,
+                                         self._since >= self.window)
+            if replaced is not None:
+                est = replaced
         if self._since >= self.window:
             est = self.flush(est)
         if self.replicate_meta:

@@ -41,6 +41,16 @@ class RecoveryReport:
     # survivors' replicated window metadata bound (deferred engine):
     # {"pending", "dirty_pages", "digest_verified"} or None
     window_bound: Optional[dict] = None
+    # post-recovery re-verify (Pool.recover): the syndrome invariants
+    # re-checked AFTER reconstruction — entry k is S_k's verdict; None
+    # when the re-verify was skipped or the mode keeps no syndromes
+    synd_ok: Optional[list] = None
+    # overall post-recovery re-verify verdict (syndromes + checksums +
+    # row cache); None when skipped
+    reverified: Optional[bool] = None
+    # async-safe re-entry (Pool.recover): faults that arrived while this
+    # recovery was in flight and were drained right after it
+    followups: int = 0
 
 
 def recover_from_rank_loss(protector: txn_mod.Protector,
@@ -81,11 +91,20 @@ def recover_from_e_loss(protector: txn_mod.Protector,
     e = len(ranks)
     r = protector.redundancy if protector.mode.has_parity else 0
     if r < e:
+        # the budget-exhausted path: refusing here is the whole point —
+        # an e x e solve through an r < e syndrome stack would return
+        # garbage rows that verify_blocks may not even catch (the
+        # checksums describe intended values, but nothing forces the
+        # caller to look).  Name the dead ranks and the available budget
+        # so the operator can route to the checkpoint tier.
         raise RuntimeError(
-            f"{e} simultaneous rank losses with mode "
-            f"{protector.mode.value} (redundancy={r}) — a zone solves at "
-            "most its syndrome count online; run a parity mode with "
-            f"redundancy>={e} (<= 4) or restore from checkpoint")
+            f"syndrome budget exhausted: ranks {ranks} are lost "
+            f"simultaneously (e={e}) but mode {protector.mode.value} "
+            f"holds only redundancy={r} syndrome row(s) — a zone solves "
+            f"at most r losses online.  Recover the pool from the "
+            f"checkpoint + redo-log tier, then re-arm by re-protecting "
+            f"(pool.init) or raise ProtectConfig.redundancy>={e} (<= 4) "
+            "before the next storm")
     if freeze is not None:
         freeze()
     if e == 1:

@@ -769,10 +769,11 @@ class Protector:
             f"erasure recovery needs distinct ranks, got {ranks}")
         if e > self.redundancy:
             raise RuntimeError(
-                f"{e} simultaneous rank losses exceed redundancy="
+                f"syndrome budget exhausted: {e} simultaneous losses "
+                f"(ranks {list(ranks)}) exceed redundancy="
                 f"{self.redundancy} — a zone solves at most r losses "
                 "online (raise ProtectConfig.redundancy, or restore "
-                "from checkpoint)")
+                "from checkpoint and re-protect)")
 
         def _recover(state, synd, cksums):
             # flatten the live (damaged) state — the row cache is rebuilt,

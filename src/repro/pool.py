@@ -48,6 +48,7 @@ import dataclasses
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 from repro.configs.base import ProtectConfig
 from repro.core import microbuffer
@@ -56,6 +57,7 @@ from repro.core.epoch import DeferredProtector, EngineHost
 from repro.core.scrub import ScrubReport, Scrubber
 from repro.core.txn import Mode, ProtectedState, Protector
 from repro.dist import elastic
+from repro.dist.straggler import StragglerPolicy
 
 PyTree = Any
 
@@ -243,7 +245,8 @@ class Pool(EngineHost):
                  donate: bool = True,
                  replicate_meta: Optional[bool] = None,
                  on_freeze: Optional[Callable] = None,
-                 on_resume: Optional[Callable] = None):
+                 on_resume: Optional[Callable] = None,
+                 straggler_policy: Optional[StragglerPolicy] = None):
         self.config = config if config is not None else ProtectConfig()
         self.mesh = mesh
         self.abstract_state = abstract_state
@@ -254,7 +257,8 @@ class Pool(EngineHost):
         self._open_kw = dict(data_axis=data_axis,
                              dirty_leaf_idx=dirty_leaf_idx,
                              dirty_capacity=dirty_capacity,
-                             donate=donate, replicate_meta=replicate_meta)
+                             donate=donate, replicate_meta=replicate_meta,
+                             straggler_policy=straggler_policy)
         mode = self.config.resolved_mode
         self.protector = Protector(
             mesh, abstract_state, state_specs, data_axis=data_axis,
@@ -295,6 +299,29 @@ class Pool(EngineHost):
             self.protector, period=self.config.scrub_period,
             engine=self._engine,
             growth_commits=self.config.window_growth_commits)
+        # straggler mitigation (ProtectConfig.straggler_threshold > 0):
+        # the policy tracks per-replica commit-loop durations and drops
+        # replicas past threshold x the fleet median; while ANY replica
+        # is dropped the pool runs degraded — the adaptive window stays
+        # collapsed at 1 so redundancy lag never piles up behind a rank
+        # that cannot keep the flush cadence.  `straggler_policy`
+        # overrides the default-built policy (tests/chaos tune the
+        # observation window).
+        self.straggler: Optional[StragglerPolicy] = None
+        if straggler_policy is not None:
+            self.straggler = straggler_policy
+        elif self.config.straggler_threshold > 0:
+            self.straggler = StragglerPolicy(
+                self.protector.group_size,
+                threshold=self.config.straggler_threshold)
+        self._dropped: set = set()
+        # async-safe recovery re-entry: faults arriving while a recovery
+        # is already in flight (freeze/resume callbacks, chaos schedule
+        # hooks) queue here and drain sequentially — never two
+        # interleaved reconstructions over one pool
+        self._recovering = False
+        self._pending_faults: list = []
+        self._arrival_fn: Optional[Callable] = None
 
     # -- open -------------------------------------------------------------------
 
@@ -392,6 +419,12 @@ class Pool(EngineHost):
                 verify_old=verify_old, donate=self.donate,
                 data_cursor=data_cursor, rng_key=rng_key,
                 canary_ok=canary_ok)
+            if self._arrival_fn is not None:
+                # synchronous cadence: every commit is its own window
+                # boundary, so the arrival point is right after it
+                new = self._arrival_fn(self._prot, 1, True)
+                if new is not None:
+                    self._prot = new
         # the scrub cadence + clean-streak window growth ride on the
         # host-known canary verdict (no device sync on the hot path)
         self.scrubber.on_commit(clean=bool(canary_ok))
@@ -400,6 +433,81 @@ class Pool(EngineHost):
     def transaction(self, *, data_cursor=0, rng_key=None) -> Transaction:
         """`pgl_tx_begin`: returns the staging context manager."""
         return Transaction(self, data_cursor=data_cursor, rng_key=rng_key)
+
+    # -- fault-arrival hook (chaos harness) -------------------------------------
+
+    def set_arrival_hook(self, fn: Optional[Callable]) -> None:
+        """Register `fn(prot, since, at_boundary) -> Optional[ProtectedState]`
+        at the commit loop's fault-arrival point.
+
+        Deferred engine: the hook fires inside `commit`, between
+        in-window commits and BEFORE any boundary flush (the
+        `DeferredProtector.arrival_hook` point) — a returned
+        ProtectedState replaces the window's, modeling corruption landing
+        concurrent with traffic.  Synchronous engine: the hook fires
+        right after each commit (every commit is its own boundary).
+        Pass None to clear.
+        """
+        self._arrival_fn = fn
+        if self._engine is not None:
+            if fn is None:
+                self._engine.arrival_hook = None
+            else:
+                def _hook(est, since, at_boundary):
+                    new = fn(est.prot, since, at_boundary)
+                    return (None if new is None
+                            else dataclasses.replace(est, prot=new))
+                self._engine.arrival_hook = _hook
+
+    def inject(self, fn: Callable):
+        """Apply a failure injector `fn(protector, prot) -> (prot, event)`
+        to the live protected state IN PLACE, preserving any open
+        window's bookkeeping (the `prot` setter would wrap a fresh
+        window, silently discarding the accumulator a later flush
+        needs).  Returns the injector's FailureEvent — the chaos
+        harness's between-commit corruption point.
+        """
+        assert self.prot is not None, "Pool.inject before init()"
+        new_prot, event = fn(self.protector, self.prot)
+        if self._engine is not None:
+            self._est = dataclasses.replace(self._est, prot=new_prot)
+        else:
+            self._prot = new_prot
+        return event
+
+    # -- straggler degradation path ---------------------------------------------
+
+    @property
+    def dropped_replicas(self) -> list:
+        """Data ranks currently dropped by the straggler policy."""
+        return sorted(self._dropped)
+
+    def observe_commit_times(self, durations) -> np.ndarray:
+        """Feed per-replica commit-loop durations (seconds, one entry per
+        data rank) into the straggler policy; returns the participation
+        mask.
+
+        This is the pool-side degradation path: while any replica is
+        dropped the deferred window is held collapsed at 1 (each
+        observation re-collapses it, so clean-commit growth cannot
+        outpace a live straggler) and the scrub clean-streak resets —
+        the pool runs on the synchronous cadence until the fleet is
+        healthy again, then the adaptive window regrows through the
+        usual clean-scrub / clean-commit signals.
+        """
+        assert self.straggler is not None, (
+            "no straggler policy on this pool — set "
+            "ProtectConfig.straggler_threshold > 0 (or pass "
+            "straggler_policy=) to enable mitigation")
+        for rank, dur in enumerate(durations):
+            self.straggler.observe(rank, float(dur))
+        mask = self.straggler.replica_mask()
+        self._dropped = set(int(r) for r in np.flatnonzero(~mask))
+        if self._dropped:
+            if self._engine is not None:
+                self._engine.report_pressure(True)
+            self.scrubber.note_suspect()
+        return mask
 
     # -- scrub ------------------------------------------------------------------
 
@@ -446,21 +554,72 @@ class Pool(EngineHost):
 
     # -- recovery ---------------------------------------------------------------
 
-    def recover(self, fault: Fault) -> recovery_mod.RecoveryReport:
+    def recover(self, fault: Fault, *,
+                reverify: bool = True
+                ) -> Optional[recovery_mod.RecoveryReport]:
         """One recovery path for every fault (the SIGBUS-handler
         analogue).  Flushes any open window first — the cached row is a
         separate buffer the fault never touched, so the flushed
         redundancy describes intended values and online reconstruction
         proceeds exactly as in the synchronous engine.  Stacks with
         redundancy >= e additionally solve `Fault.multi_loss` of e
-        ranks.  After recovery
+        ranks; e > r raises the budget-exhausted error (naming the dead
+        ranks and the available r) instead of attempting a solve the
+        stack cannot carry.  After recovery
         the deferred window collapses toward 1 (failure suspicion) and,
         when window metadata was replicated, the report carries the
         survivors' window bound.
+
+        `reverify=True` (default) re-runs the full syndrome/checksum
+        verification AFTER reconstruction — `report.synd_ok` carries the
+        per-syndrome verdicts and `report.reverified` the overall one,
+        so residual corruption (a scribble outstanding elsewhere while a
+        rank was being rebuilt) is surfaced instead of trusted.
+
+        Re-entry is async-safe: a fault arriving while a recovery is
+        already in flight (from a freeze/resume callback or a chaos
+        schedule hook) is queued and drained sequentially after the
+        running reconstruction completes — that call returns None and
+        the outer call's report counts it in `followups`.
         """
         assert self.prot is not None
         if not isinstance(fault, Fault):
             fault = Fault.from_event(fault)   # accept raw FailureEvents
+        if self._recovering:
+            self._pending_faults.append(fault)
+            return None
+        self._recovering = True
+        try:
+            rep = self._recover_one(fault, reverify=reverify)
+            drained = 0
+            while self._pending_faults:
+                self._recover_one(self._pending_faults.pop(0),
+                                  reverify=reverify)
+                drained += 1
+            rep.followups = drained
+            return rep
+        finally:
+            self._recovering = False
+            self._pending_faults.clear()
+
+    def _recover_one(self, fault: Fault, *,
+                     reverify: bool) -> recovery_mod.RecoveryReport:
+        if fault.kind == "multi_loss":
+            # refuse an over-budget solve up front, before the flush
+            # touches anything — the actionable form of "e > r"
+            e = len(fault.ranks)
+            r = (self.protector.redundancy
+                 if self.protector.mode.has_parity else 0)
+            if e > r:
+                raise RuntimeError(
+                    f"syndrome budget exhausted: ranks "
+                    f"{list(fault.ranks)} are lost simultaneously "
+                    f"(e={e}) but this pool holds redundancy={r} "
+                    "syndrome row(s) — at most r losses solve online.  "
+                    "Restore from the checkpoint + redo-log tier and "
+                    "re-arm the stack by re-protecting (pool.init), or "
+                    f"raise ProtectConfig.redundancy>={e} (<= 4) before "
+                    "the next storm")
         # survivors' copy of the window metadata, captured BEFORE the
         # flush mutates the window
         meta = (self._engine.window_meta
@@ -481,6 +640,8 @@ class Pool(EngineHost):
         else:
             raise ValueError(f"no recovery path for fault {fault.kind!r}")
         self.prot = prot
+        if reverify:
+            self._reverify(rep)
         if self._engine is not None:
             self._engine.report_pressure(True)
             self.scrubber.note_suspect()
@@ -492,6 +653,24 @@ class Pool(EngineHost):
                         self._est),
                 }
         return rep
+
+    def _reverify(self, rep: recovery_mod.RecoveryReport) -> None:
+        """Re-run verify_syndromes (+ checksums + row cache) after a
+        reconstruction; folds the verdict into the report."""
+        mode = self.protector.mode
+        if not (mode.has_parity or mode.has_cksums):
+            return
+        out = jax.device_get(self.protector.scrub(self.prot))
+        ok = True
+        if "synd_ok" in out:
+            rep.synd_ok = [bool(v) for v in np.asarray(out["synd_ok"])]
+            ok = ok and all(rep.synd_ok)
+        if "bad_pages" in out:
+            ok = ok and not bool(np.asarray(out["bad_pages"]).any())
+        if "row_cache_ok" in out:
+            ok = ok and bool(out["row_cache_ok"])
+        rep.reverified = ok
+        rep.verified = bool(rep.verified) and ok
 
     # -- rescale ----------------------------------------------------------------
 

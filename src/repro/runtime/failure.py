@@ -19,7 +19,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
 from typing import Optional, Sequence
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -123,6 +126,71 @@ def inject_scribble(protector: Protector, prot: ProtectedState,
     pages = sorted({int(o) // lo.block_words for o in word_offsets})
     return (dataclasses.replace(prot, state=bad_state),
             FailureEvent("scribble", locations=[(rank, p) for p in pages]))
+
+
+# ---------------------------------------------------------------------------
+# Seeded deterministic injectors (chaos campaign).
+#
+# The raw injectors above take their victims from the caller; the chaos
+# runner needs the *same* victims on every run of a scenario so the
+# recovered end state can be diffed bit-for-bit against a fault-free
+# golden run.  Each seeded form derives its choices from
+# np.random.default_rng seeded with (seed, crc32(kind)) — crc32, not
+# hash(), because hash() is salted per process and would break replay.
+# ---------------------------------------------------------------------------
+
+
+def _rng(seed: int, kind: str) -> np.random.Generator:
+    return np.random.default_rng((int(seed), zlib.crc32(kind.encode())))
+
+
+def seeded_rank_loss(protector: Protector, prot: ProtectedState,
+                     seed: int, rank: Optional[int] = None) -> tuple:
+    """Deterministic rank loss: victim drawn from (seed, "rank_loss")."""
+    if rank is None:
+        rank = int(_rng(seed, "rank_loss").integers(protector.group_size))
+    return inject_rank_loss(protector, prot, rank)
+
+
+def seeded_multi_rank_loss(protector: Protector, prot: ProtectedState,
+                           seed: int, e: int = 2,
+                           ranks: Optional[Sequence[int]] = None) -> tuple:
+    """Deterministic e-rank loss: victims drawn without replacement."""
+    if ranks is None:
+        ranks = _rng(seed, "multi_loss").choice(
+            protector.group_size, size=e, replace=False)
+    return inject_multi_rank_loss(protector, prot,
+                                  [int(r) for r in ranks])
+
+
+def scribble_plan(protector: Protector, seed: int,
+                  n_words: int = 4, rank: Optional[int] = None) -> tuple:
+    """Deterministic scribble parameters: (rank, word_offsets, xor_mask).
+
+    Offsets land in the rank's flat row; the mask is any nonzero u32 so
+    the flip is guaranteed visible to the checksums.  Exposed separately
+    from `seeded_scribble` so tests and the chaos runner can predict the
+    victim pages without touching state.
+    """
+    g = _rng(seed, "scribble")
+    if rank is None:
+        rank = int(g.integers(protector.group_size))
+    # draw from the payload region only — a scribble into row padding
+    # vanishes on unflatten and would test nothing
+    row_words = protector.layout.payload_words
+    offsets = sorted(int(o) for o in g.choice(
+        row_words, size=min(n_words, row_words), replace=False))
+    mask = int(g.integers(1, 1 << 32))
+    return rank, offsets, mask
+
+
+def seeded_scribble(protector: Protector, prot: ProtectedState,
+                    seed: int, n_words: int = 4,
+                    rank: Optional[int] = None) -> tuple:
+    """Deterministic scribble: victims from `scribble_plan(seed)`."""
+    rank, offsets, mask = scribble_plan(protector, seed,
+                                        n_words=n_words, rank=rank)
+    return inject_scribble(protector, prot, rank, offsets, xor_mask=mask)
 
 
 def smashed_canary_buffer(n_words: int = 4096) -> jax.Array:

@@ -81,6 +81,14 @@ class Server(PoolHost):
                         lo, max_len))))
             self._page_cache: dict = {}
             self._word_cache: dict = {}
+        # chaos/observability: hooks fired after every decode step with
+        # {"pos": absolute position} (schedule attachment, tracing)
+        self._step_hooks: list = []
+
+    def add_step_hook(self, fn) -> None:
+        """Register `fn(server, out_dict)`, fired after every decode
+        step — the chaos campaign's schedule attachment point."""
+        self._step_hooks.append(fn)
 
     # pool delegation (protector / scrubber / prot / flush) comes from
     # repro.pool.PoolHost
@@ -136,6 +144,8 @@ class Server(PoolHost):
         else:
             self.cache = new_cache
         self.pos += 1
+        for hook in list(self._step_hooks):
+            hook(self, {"pos": self.pos - 1})
         return next_tok
 
     def prefill(self, prompt: jax.Array) -> jax.Array:

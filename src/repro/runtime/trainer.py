@@ -32,6 +32,7 @@ replay-verifiable mid-window).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -90,6 +91,14 @@ class Trainer(PoolHost):
         self.history: list = []
         self._frozen = False
         self._host_step = 0
+        # chaos/observability: hooks fired after every resolved step with
+        # the step's summary dict (schedule attachment, tracing)
+        self._step_hooks: list = []
+        # per-replica step-time dilation fed to the straggler policy when
+        # ProtectConfig.straggler_threshold wires one into the pool; the
+        # chaos runner (and tests) dilate entries to simulate a slow
+        # replica without actually sleeping per rank
+        self.replica_slowdown = np.ones(self.pool.protector.group_size)
         # verify-at-open (paper's default policy): checksums of the old
         # state verified inside every synchronous commit, abort on
         # mismatch — a window=1 engine feature
@@ -130,7 +139,14 @@ class Trainer(PoolHost):
         are fresh program outputs, never donated operands).
         """
         assert self.prot is not None and not self._frozen
+        t0 = time.perf_counter()
         batch = self.stream.device_batch(self.cursor, self._batch_shardings)
+        if self.pool.dropped_replicas:
+            # straggler mitigation: zero the dropped replicas' examples
+            # out of the loss (replica-major layout, data-axis sharded)
+            mask = self.pool.straggler.loss_mask(self.global_batch)
+            batch["loss_mask"] = jax.device_put(
+                jnp.asarray(mask), NamedSharding(self.mesh, P("data")))
         rng = jax.random.fold_in(jax.random.PRNGKey(self.seed), self.cursor)
         cursor_before = self.cursor
         new_state, metrics = self._train_step(self.prot.state, batch)
@@ -139,7 +155,7 @@ class Trainer(PoolHost):
                               verify_old=self.verify_old)
         self.cursor += 1          # optimistic; rolled back on late abort
         return {"ok": ok, "loss": metrics["loss"],
-                "cursor_before": cursor_before}
+                "cursor_before": cursor_before, "t0": t0}
 
     def _resolve_step(self, pending: dict) -> dict:
         """Await a dispatched step's commit; bookkeeping + scrub cadence."""
@@ -151,11 +167,27 @@ class Trainer(PoolHost):
         out = {"step": self._host_step,
                "loss": float(jax.device_get(pending["loss"])),
                "committed": committed}
+        if self.pool.straggler is not None:
+            # one wall-clock measurement per step, dilated per replica —
+            # a real fleet reports each replica's own duration; here the
+            # dilation vector stands in for the slow ranks
+            dt = time.perf_counter() - pending["t0"]
+            dropped = self.pool.observe_commit_times(
+                dt * self.replica_slowdown)
+            if not dropped.all():
+                out["dropped_replicas"] = sorted(self.pool.dropped_replicas)
         self.history.append(out)
         report = self.pool.maybe_scrub()
         if report is not None:
             out["scrub"] = dataclasses.asdict(report)
+        for hook in list(self._step_hooks):
+            hook(self, out)
         return out
+
+    def add_step_hook(self, fn) -> None:
+        """Register `fn(trainer, out_dict)`, fired after every resolved
+        step — the chaos campaign's schedule attachment point."""
+        self._step_hooks.append(fn)
 
     def step(self, *, canary_ok: bool = True) -> dict:
         return self._resolve_step(self._dispatch_step(canary_ok=canary_ok))
@@ -205,6 +237,10 @@ class Trainer(PoolHost):
         """
         assert self.prot is not None
         rep = self.pool.recover(Fault.from_event(event))
+        if rep is None:
+            # a recovery was already in flight; this fault was queued and
+            # will drain right after it (async-safe re-entry)
+            return {"queued": True}
         return dataclasses.asdict(rep)
 
     # -- checkpoint / crash recovery ------------------------------------------------

@@ -1,0 +1,329 @@
+"""Chaos campaign (repro/chaos): scripted faults under live traffic.
+
+The load-bearing invariant everywhere: a fault recovered mid-traffic
+must leave the state bit-identical to the fault-free golden run — the
+deferred engine's flush reads only its own accumulator, never the live
+row, so corruption landing inside an open window leaves the refreshed
+redundancy describing *intended* values and reconstruction is exact.
+
+Also covered here: the pool-level chaos plumbing the runner rides on —
+the fault-arrival hook's firing points, async-safe recovery re-entry,
+the actionable budget-exhausted error, post-recovery re-verification,
+seeded-injector determinism, Fault.from_event's full taxonomy, and the
+straggler policy wired through Pool and Trainer.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.chaos.runner import ScenarioRunner, attach_schedule
+from repro.chaos.schedule import ChaosEvent, FaultSchedule
+from repro.chaos.workload import PoolWorkload
+from repro.configs.base import ProtectConfig
+from repro.dist.straggler import StragglerPolicy
+from repro.pool import Fault, Pool
+from repro.runtime import failure
+from tests.conftest import small_state
+
+E = ChaosEvent.make
+
+
+def _wl(mesh, *, window=4, redundancy=2, seed=3, **cfg_kw):
+    cfg = ProtectConfig(mode="mlpc", window=window,
+                        redundancy=redundancy, block_words=64, **cfg_kw)
+    return PoolWorkload(mesh, cfg, n_bytes=1 << 14, seed=seed)
+
+
+# -- mid-window fault arrival x engines x stack heights -----------------------
+
+@pytest.mark.parametrize("window", [1, 4])
+@pytest.mark.parametrize("red", [1, 2, 3])
+def test_midwindow_loss_recovers_to_golden(mesh42, window, red):
+    """A rank loss at the in-window arrival point, recovered online,
+    must end bit-identical to the fault-free run — for the synchronous
+    engine and mid-window in the deferred engine, at every r."""
+    wl = _wl(mesh42, window=window, redundancy=red)
+    sched = FaultSchedule(
+        [E(2, "rank_loss", mid_window=True, rank=1)], seed=7)
+    out = ScenarioRunner(wl, sched).run(6)
+    assert out["golden_exact"], out
+    (rec,) = out["recoveries"]
+    assert rec["kind"] == "rank_loss" and rec["verified"]
+    assert rec["reverified"] is True
+
+
+def test_midwindow_scribble_plus_loss_escape_hatch(mesh42):
+    """Scribble on rank 0 concurrent with rank 2's loss inside one
+    window: the runner folds both into a multi_loss through the r=2
+    stack (single parity cannot untangle the overlap)."""
+    wl = _wl(mesh42, window=8, redundancy=2)
+    sched = FaultSchedule([
+        E(3, "scribble", mid_window=True, rank=0, n_words=5),
+        E(3, "rank_loss", mid_window=True, rank=2),
+    ], seed=11)
+    out = ScenarioRunner(wl, sched).run(8)
+    assert out["golden_exact"], out
+    (rec,) = out["recoveries"]
+    assert rec["kind"] == "multi_loss" and rec["verified"]
+
+
+def test_budget_exhaust_then_rearm(mesh42):
+    """e=2 on an r=1 pool trips the budget error; the runner restores
+    the snapshot + replays deterministically; a later single loss
+    recovers online again — and the whole run still ends golden."""
+    wl = _wl(mesh42, window=2, redundancy=1)
+    sched = FaultSchedule([
+        E(1, "snapshot"),
+        E(3, "multi_loss", e=2),
+        E(6, "rank_loss"),
+    ], seed=5)
+    out = ScenarioRunner(wl, sched).run(9)
+    assert out["golden_exact"], out
+    kinds = [r["kind"] for r in out["recoveries"]]
+    assert kinds == ["restore_replay", "rank_loss"]
+    assert "syndrome budget exhausted" in out["recoveries"][0]["error"]
+
+
+def test_rescale_under_traffic_stays_golden(mesh42):
+    wl = _wl(mesh42, window=4, redundancy=2)
+    sched = FaultSchedule([
+        E(2, "rescale", shape=(8, 1)),
+        E(4, "rank_loss"),
+        E(6, "rescale", shape=(4, 2)),
+    ], seed=13)
+    out = ScenarioRunner(wl, sched).run(9)
+    assert out["golden_exact"], out
+    kinds = [r["kind"] for r in out["recoveries"]]
+    assert kinds == ["rescale", "rank_loss", "rescale"]
+
+
+# -- pool plumbing: arrival hook, re-entry, budget error, re-verify -----------
+
+def _pool(mesh, **cfg_kw):
+    state, specs, _ = small_state(mesh)
+    base = dict(mode="mlpc", block_words=64)
+    base.update(cfg_kw)
+    return Pool.open(state, specs, mesh=mesh,
+                     config=ProtectConfig(**base), donate=False)
+
+
+def _evolve(cur):
+    return jax.tree.map(lambda x: (x * 1.01 + 0.003).astype(x.dtype), cur)
+
+
+def test_arrival_hook_fires_between_commit_and_flush(mesh42):
+    pool = _pool(mesh42, window=4)
+    seen = []
+    pool.set_arrival_hook(
+        lambda prot, since, at_boundary:
+            (seen.append((since, at_boundary)), None)[1])
+    for _ in range(4):
+        pool.commit(_evolve(pool.state))
+    assert seen == [(1, False), (2, False), (3, False), (4, True)]
+    pool.set_arrival_hook(None)
+    pool.commit(_evolve(pool.state))
+    assert len(seen) == 4
+
+
+def test_arrival_hook_sync_engine_every_commit(mesh42):
+    pool = _pool(mesh42, window=1)
+    seen = []
+    pool.set_arrival_hook(
+        lambda prot, since, at_boundary:
+            (seen.append((since, at_boundary)), None)[1])
+    pool.commit(_evolve(pool.state))
+    pool.commit(_evolve(pool.state))
+    assert seen == [(1, True), (1, True)]
+
+
+def test_recover_reentry_queues_and_drains(mesh42):
+    """A fault arriving during recovery (via the freeze callback — the
+    async path) is queued, drained after the running reconstruction,
+    and counted in the outer report's followups."""
+    box = {}
+
+    def freeze():
+        pool = box["pool"]
+        if not box.get("fired"):
+            box["fired"] = True
+            # second fault lands while the first recovery is in flight
+            assert pool.recover(Fault.scribble(0, [0])) is None
+
+    state, specs, _ = small_state(mesh42)
+    pool = Pool.open(state, specs, mesh=mesh42,
+                     config=ProtectConfig(mode="mlpc", block_words=64),
+                     donate=False, on_freeze=freeze)
+    box["pool"] = pool
+    before = jax.device_get(pool.state)
+    pool.prot, ev = failure.inject_rank_loss(pool.protector, pool.prot, 1)
+    rep = pool.recover(Fault.from_event(ev))
+    assert rep.followups == 1
+    assert rep.verified and rep.reverified
+    after = jax.device_get(pool.state)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_budget_exhausted_error_is_actionable(mesh42):
+    pool = _pool(mesh42, redundancy=1)
+    pool.prot, ev = failure.inject_multi_rank_loss(
+        pool.protector, pool.prot, (0, 2))
+    with pytest.raises(RuntimeError) as err:
+        pool.recover(Fault.from_event(ev))
+    msg = str(err.value)
+    assert "syndrome budget exhausted" in msg
+    assert "[0, 2]" in msg                   # names the dead ranks
+    assert "redundancy=1" in msg             # names the available budget
+    assert "pool.init" in msg                # names the re-arm path
+
+
+def test_post_recovery_reverify_flags_residual_corruption(mesh42):
+    """r=1: a scribble outstanding on rank 0 while rank 2 is being
+    rebuilt poisons the reconstruction (parity XOR runs through the
+    scribbled row); the post-recovery re-verify must surface it."""
+    pool = _pool(mesh42, redundancy=1)
+    pool.prot, _ = failure.inject_scribble(pool.protector, pool.prot,
+                                           rank=0, word_offsets=[5])
+    pool.prot, ev = failure.inject_rank_loss(pool.protector, pool.prot, 2)
+    rep = pool.recover(Fault.from_event(ev))
+    assert rep.reverified is False
+    assert rep.verified is False             # folded into the verdict
+
+
+def test_pool_inject_preserves_open_window(mesh42):
+    """Pool.inject must not reset the deferred window's accumulator:
+    corrupt mid-window, recover, and the flushed state still matches a
+    clean run of the same commits."""
+    pool = _pool(mesh42, window=4, redundancy=2)
+    ref = _pool(mesh42, window=4, redundancy=2)
+    for _ in range(2):                        # window half-open
+        pool.commit(_evolve(pool.state))
+        ref.commit(_evolve(ref.state))
+    ev = pool.inject(
+        lambda p, prot: failure.inject_rank_loss(p, prot, 3))
+    rep = pool.recover(Fault.from_event(ev))
+    assert rep.verified and rep.reverified
+    for a, b in zip(jax.tree.leaves(jax.device_get(pool.state)),
+                    jax.tree.leaves(jax.device_get(ref.state))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- seeded injectors + Fault.from_event taxonomy -----------------------------
+
+def test_seeded_injectors_are_deterministic(mesh42):
+    pool_a = _pool(mesh42)
+    pool_b = _pool(mesh42)
+    plan = failure.scribble_plan(pool_a.protector, seed=42, n_words=4)
+    assert plan == failure.scribble_plan(pool_b.protector, seed=42,
+                                         n_words=4)
+    assert plan != failure.scribble_plan(pool_a.protector, seed=43,
+                                         n_words=4)
+    pa, ev_a = failure.seeded_scribble(pool_a.protector, pool_a.prot,
+                                       seed=42)
+    pb, ev_b = failure.seeded_scribble(pool_b.protector, pool_b.prot,
+                                       seed=42)
+    assert ev_a.locations == ev_b.locations
+    for a, b in zip(jax.tree.leaves(jax.device_get(pa.state)),
+                    jax.tree.leaves(jax.device_get(pb.state))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _, ev_r = failure.seeded_rank_loss(pool_a.protector, pa, seed=9)
+    _, ev_r2 = failure.seeded_rank_loss(pool_b.protector, pb, seed=9)
+    assert ev_r.lost_rank == ev_r2.lost_rank
+    _, ev_m = failure.seeded_multi_rank_loss(pool_a.protector, pa,
+                                             seed=9, e=2)
+    _, ev_m2 = failure.seeded_multi_rank_loss(pool_b.protector, pb,
+                                              seed=9, e=2)
+    assert ev_m.lost_ranks == ev_m2.lost_ranks
+
+
+def test_fault_from_event_covers_every_kind():
+    ev = failure.FailureEvent("rank_loss", lost_rank=2)
+    assert Fault.from_event(ev) == Fault.rank_loss(2)
+    ev = failure.FailureEvent("multi_loss", lost_ranks=[3, 1])
+    assert Fault.from_event(ev) == Fault.multi_loss(1, 3)
+    ev = failure.FailureEvent("double_loss", lost_ranks=[0, 2])
+    assert Fault.from_event(ev) == Fault.double_loss(0, 2)
+    ev = failure.FailureEvent("scribble", locations=[(1, 4), (1, 7)])
+    assert Fault.from_event(ev) == Fault.scribble(1, [4, 7])
+    with pytest.raises(ValueError, match="canary"):
+        Fault.from_event(failure.FailureEvent("canary"))
+
+
+# -- straggler wiring ---------------------------------------------------------
+
+def test_straggler_collapses_window_then_regrows(mesh42):
+    state, specs, _ = small_state(mesh42)
+    cfg = ProtectConfig(mode="mlpc", block_words=64, window=8,
+                        straggler_threshold=2.0,
+                        window_growth_commits=2)
+    pool = Pool.open(state, specs, mesh=mesh42, config=cfg,
+                     donate=False,
+                     straggler_policy=StragglerPolicy(
+                         4, threshold=2.0, window=2))
+    assert pool.engine.window == 8
+    slow = np.asarray([0.01, 0.08, 0.01, 0.01])
+    for _ in range(2):
+        pool.commit(_evolve(pool.state))
+        pool.observe_commit_times(slow)
+    assert pool.dropped_replicas == [1]
+    assert pool.engine.window == 1            # degraded: collapsed
+    healthy = np.full(4, 0.01)
+    for _ in range(2):                        # slide the slow samples out
+        pool.observe_commit_times(healthy)
+    assert pool.dropped_replicas == []
+    for _ in range(8):                        # clean commits regrow
+        pool.commit(_evolve(pool.state))
+    assert pool.engine.window > 1
+
+
+def test_straggler_threshold_validation():
+    with pytest.raises(ValueError, match="straggler_threshold"):
+        ProtectConfig(straggler_threshold=-1.0)
+
+
+def test_trainer_straggler_drops_and_continues(mesh42):
+    from repro.configs.base import ModelConfig, TrainConfig
+    from repro.runtime.trainer import Trainer
+    cfg = ModelConfig(
+        name="t_chaos", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv=2, d_ff=64, vocab=128, param_dtype="float32",
+        compute_dtype="float32")
+    t = Trainer(cfg, TrainConfig(learning_rate=1e-3, warmup_steps=2,
+                                 total_steps=100),
+                ProtectConfig(mode="mlpc", block_words=64,
+                              straggler_threshold=2.0),
+                mesh42, seq_len=16, global_batch=8)
+    t.pool.straggler = StragglerPolicy(4, threshold=2.0, window=2)
+    t.initialize()
+    t.replica_slowdown[1] = 10.0
+    outs = t.run(4)
+    assert all(o["committed"] for o in outs)
+    assert t.pool.dropped_replicas == [1]
+    assert outs[-1].get("dropped_replicas") == [1]
+    out = t.step()                    # loss-masked step still commits
+    assert out["committed"] and np.isfinite(out["loss"])
+    t.replica_slowdown[1] = 1.0
+    t.run(2)                          # heals once the window slides
+    assert t.pool.dropped_replicas == []
+
+
+def test_trainer_schedule_attachment(mesh42):
+    from repro.configs.base import ModelConfig, TrainConfig
+    from repro.runtime.trainer import Trainer
+    cfg = ModelConfig(
+        name="t_sched", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv=2, d_ff=64, vocab=128, param_dtype="float32",
+        compute_dtype="float32")
+    t = Trainer(cfg, TrainConfig(learning_rate=1e-3, warmup_steps=2,
+                                 total_steps=100),
+                ProtectConfig(mode="mlpc", block_words=64),
+                mesh42, seq_len=16, global_batch=8)
+    t.initialize()
+    log = attach_schedule(t, FaultSchedule(
+        [E(1, "rank_loss", rank=2)], seed=0))
+    outs = t.run(3)
+    assert all(o["committed"] for o in outs)
+    assert log == [{"step": 1, "kind": "rank_loss", "verified": True,
+                    "reverified": True}]
