@@ -25,7 +25,7 @@ import traceback
 
 BENCHES = ["storage_overhead", "txn_latency", "commit_sweep", "deferred",
            "scalability", "app_kv", "scrub_freq", "recovery", "roofline",
-           "chaos"]
+           "chaos", "obs_overhead"]
 
 
 def emit_commit_json(txn_result: dict, quick: bool, path: str,
@@ -33,7 +33,8 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
                      deferred_result: dict = None,
                      recovery_result: dict = None,
                      roofline_result: dict = None,
-                     chaos_result: dict = None) -> None:
+                     chaos_result: dict = None,
+                     obs_result: dict = None) -> None:
     """Write the per-PR commit-latency record (BENCH_commit.json).
 
     Distills txn_latency down to the commit hot path (overwrite latency
@@ -83,6 +84,12 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
         # scenario (gate: record-presence of the four core scenarios,
         # golden_exact structural, during-p99 wall pathology)
         payload["chaos"] = chaos_result["rows"]
+    if obs_result and obs_result.get("bytes"):
+        # §obs: the telemetry plane's instrumented-vs-bare A/B (gate:
+        # record-presence, byte_delta exactly 0 structurally, dispatch
+        # overhead_pct within the bound)
+        payload["obs"] = {"bytes": obs_result["bytes"],
+                          "wall": obs_result["wall"]}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"commit benchmark record -> {path}")
@@ -119,7 +126,8 @@ def main():
                          deferred_result=results.get("deferred"),
                          recovery_result=results.get("recovery"),
                          roofline_result=results.get("roofline"),
-                         chaos_result=results.get("chaos"))
+                         chaos_result=results.get("chaos"),
+                         obs_result=results.get("obs_overhead"))
     print("\n" + "=" * 70)
     for name, s in status.items():
         print(f"{name:20s} {s}")

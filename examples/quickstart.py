@@ -79,4 +79,25 @@ with pool.transaction() as tx:
     tx.stage(jax.tree.map(jnp.zeros_like, new_state))
 assert tx.aborted and not tx.ok and pool.step == step_before
 assert np.array_equal(np.asarray(pool.state["w_fsdp"]), want)
-print("canary abort: state untouched — all quickstart checks passed")
+print("canary abort: state untouched")
+
+# 7. telemetry: every pool publishes into a host-side metrics registry
+#    (zero compiled-byte overhead — benchmarks/obs_overhead.py proves
+#    it) and folds its degradation signals into a HealthReport.  The
+#    same surface backs the --metrics-dir / --trace-dir launch flags
+#    (repro.launch.train / repro.launch.serve) and a Prometheus scrape.
+stats = pool.stats()                    # host-only snapshot, no device sync
+print(f"stats: commits={stats['commits']} recoveries="
+      f"{stats['recoveries']} scrub_coverage="
+      f"{stats['scrub']['full_fraction']:.2f}")
+health = pool.health()                  # green | degraded | critical
+print(f"health: {health.status} {health.reasons}")
+assert health.status == "degraded"      # the repairing scrub left
+assert health.suspect                   # failure suspicion outstanding
+pool.scrub()                            # ...which a clean scrub heals
+print(f"health after clean scrub: {pool.health().status}")
+assert pool.health().status == "green"
+assert stats["recoveries"] == 1 and stats["aborted_commits"] == 1
+from repro.obs import prometheus_text   # the scrape-endpoint text format
+assert "pool_commits_total" in prometheus_text(pool.metrics)
+print("telemetry surface live — all quickstart checks passed")

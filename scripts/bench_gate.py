@@ -39,7 +39,7 @@ def _index(rows, keys):
 
 
 def check(fresh: dict, base: dict, wall_tol: float,
-          bytes_tol: float) -> list:
+          bytes_tol: float, obs_wall_pct: float = 3.0) -> list:
     bad = []
 
     # -- wall: overwrite ladder ------------------------------------------------
@@ -197,6 +197,30 @@ def check(fresh: dict, base: dict, wall_tol: float,
                 bad.append(f"chaos{key}: {cell} {val} vs baseline "
                            f"{refv} (> {1 + wall_tol:.1f}x)")
 
+    # -- §obs: telemetry-plane instrumented-vs-bare A/B ------------------------
+    fo, bo = fresh.get("obs", {}), base.get("obs", {})
+    if bo and not fo:
+        bad.append("obs: record missing from fresh run (the telemetry "
+                   "zero-overhead A/B is no longer measured)")
+    for row in fo.get("bytes", []):
+        # structural: an instrumented pool must compile the SAME program
+        # as a bare engine — publication is host-side, so the compiled
+        # byte delta is exactly zero, not merely small
+        if row.get("byte_delta") != 0:
+            bad.append(f"obs.bytes[{row.get('engine')}]: byte_delta "
+                       f"{row.get('byte_delta')} != 0 — telemetry "
+                       "leaked into the compiled commit program")
+    if fo.get("wall"):
+        # wall: the one wall cell with a tight bound — the A/B is
+        # interleaved min-of-batches on the SAME run (no cross-run
+        # comparison), so ambient load cancels and the ratio is stable;
+        # past the bound, commit-path telemetry became real work
+        pct = fo["wall"].get("overhead_pct", 0.0)
+        if pct > obs_wall_pct:
+            bad.append(f"obs.wall: overhead_pct {pct} > "
+                       f"{obs_wall_pct} — commit-path telemetry became "
+                       "a measurable fraction of dispatch wall")
+
     # -- §rs: generalized Reed-Solomon sweep -----------------------------------
     frs = _index(fresh.get("rs", []), ("r",))
     brs = _index(base.get("rs", []), ("r",))
@@ -232,12 +256,16 @@ def main():
                          "(pathology catch-all; see module docstring)")
     ap.add_argument("--bytes-tol", type=float, default=0.02,
                     help="deterministic byte cells fail past (1+tol)x")
+    ap.add_argument("--obs-wall-pct", type=float, default=3.0,
+                    help="§obs commit-dispatch overhead bound in percent "
+                         "(same-run interleaved A/B, so it gates tight)")
     args = ap.parse_args()
     with open(args.fresh) as f:
         fresh = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
-    bad = check(fresh, base, args.wall_tol, args.bytes_tol)
+    bad = check(fresh, base, args.wall_tol, args.bytes_tol,
+                args.obs_wall_pct)
     if bad:
         print("bench gate: REGRESSION")
         for b in bad:
@@ -252,6 +280,7 @@ def main():
           f"{len(fresh.get('facade', []))} facade cells, "
           f"{len(fresh.get('roofline', []))} roofline cells, "
           f"{len(fresh.get('chaos', []))} chaos cells, "
+          f"{len(fresh.get('obs', {}).get('bytes', []))} obs cells, "
           f"wall tol {args.wall_tol}, bytes tol {args.bytes_tol})")
     return 0
 

@@ -30,13 +30,17 @@ python examples/train_fault_tolerant.py --smoke
 python examples/train_fault_tolerant.py --smoke --redundancy 3
 python examples/elastic_rescale.py --smoke
 # one short chaos scenario: mid-window scribble+loss under traffic,
-# recovered online, end state bit-identical to the fault-free run
-python -m repro.chaos --smoke
+# recovered online, end state bit-identical to the fault-free run —
+# traced, and the trace re-validated offline (every fault span linked)
+TRACE_DIR="$(mktemp -d)"
+python -m repro.chaos --smoke --trace-dir "$TRACE_DIR"
+python scripts/trace_check.py --dir "$TRACE_DIR"
+rm -rf "$TRACE_DIR"
 
 if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== perf: commit latency + dual-parity recovery + chaos (quick) =="
+    echo "== perf: commit latency + recovery + chaos + obs (quick) =="
     python -m benchmarks.run --quick \
-        --only txn_latency,commit_sweep,deferred,recovery,roofline,chaos \
+        --only txn_latency,commit_sweep,deferred,recovery,roofline,chaos,obs_overhead \
         --commit-json BENCH_commit.fresh.json
     echo "== perf: bench gate =="
     python scripts/bench_gate.py

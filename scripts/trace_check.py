@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Offline validator for chaos/pool JSONL span traces.
+
+Checks every trace file against the well-formedness rules in
+repro/obs/trace.py (`validate_events` is the single source of truth):
+
+  * every span begin has exactly one matching end (no dangling spans —
+    a crashed recovery would leave one, which is exactly the signal);
+  * every fault event id is referenced by >= 1 resolving span (a
+    recovery, or a scrub whose repair fixed the damage) — no fault is
+    silently forgotten;
+  * no span references an unknown fault id (no orphan links).
+
+Usage:
+    python scripts/trace_check.py TRACE.jsonl [...]
+    python scripts/trace_check.py --dir TRACE_DIR    # every *.jsonl
+
+Exit 0 = every trace valid; exit 1 = violations (printed per file).
+This module is jax-free (repro.obs imports no jax), so it runs anywhere
+python does — a monitoring host does not need the accelerator stack.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.trace import load_jsonl, validate_events  # noqa: E402
+
+
+def check_file(path: str) -> list:
+    try:
+        events = load_jsonl(path)
+    except Exception as e:  # malformed JSON is a violation, not a crash
+        return [f"unreadable: {e}"]
+    if not events:
+        return ["empty trace"]
+    return validate_events(events)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="trace_check")
+    ap.add_argument("paths", nargs="*", help="trace .jsonl files")
+    ap.add_argument("--dir", default=None,
+                    help="validate every *.jsonl under this directory")
+    args = ap.parse_args(argv)
+
+    paths = list(args.paths)
+    if args.dir:
+        paths += sorted(glob.glob(os.path.join(args.dir, "*.jsonl")))
+    if not paths:
+        ap.error("no trace files given (pass paths or --dir)")
+
+    rc = 0
+    for path in paths:
+        violations = check_file(path)
+        n = len(load_jsonl(path)) if os.path.exists(path) else 0
+        if violations:
+            rc = 1
+            print(f"FAIL {path} ({n} events)")
+            for v in violations:
+                print(f"  - {v}")
+        else:
+            print(f"ok   {path} ({n} events)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

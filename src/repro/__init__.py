@@ -23,7 +23,8 @@ __version__ = "0.1.0"
 from repro import compat as _compat  # noqa: E402,F401  (jax API shims)
 
 __all__ = ["Pool", "Fault", "Transaction", "ProtectConfig", "Mode",
-           "Protector", "DeferredProtector", "ProtectedState"]
+           "Protector", "DeferredProtector", "ProtectedState",
+           "MetricsRegistry", "Tracer", "HealthReport"]
 
 # Lazy re-exports (PEP 562): `python -m repro.launch.*` imports this
 # package before the launchers set XLA_FLAGS, and several core modules
@@ -38,6 +39,11 @@ _EXPORTS = {
     "Fault": ("repro.pool", "Fault"),
     "Pool": ("repro.pool", "Pool"),
     "Transaction": ("repro.pool", "Transaction"),
+    # telemetry plane (repro.obs is jax-free, but Pool re-exports pull
+    # in the full stack, so these stay lazy with the rest)
+    "MetricsRegistry": ("repro.obs.metrics", "MetricsRegistry"),
+    "Tracer": ("repro.obs.trace", "Tracer"),
+    "HealthReport": ("repro.obs.health", "HealthReport"),
 }
 
 

@@ -21,6 +21,10 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="full-length runs (default: quick)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write per-scenario JSONL span traces here "
+                         "(validated inline; scripts/trace_check.py "
+                         "re-validates offline)")
     args = ap.parse_args(argv)
 
     # 8 host devices before the first backend use, like benchmarks/run.py
@@ -33,23 +37,33 @@ def main(argv=None) -> int:
     quick = not args.full
     if args.smoke:
         out = scenarios.run_scenario("midwindow_scribble_loss",
-                                     quick=True, seed=args.seed)
+                                     quick=True, seed=args.seed,
+                                     trace_dir=args.trace_dir)
         ok = bool(out.get("golden_exact"))
-        print(json.dumps({"scenario": out["scenario"],
-                          "golden_exact": ok,
-                          "recoveries": len(out["recoveries"])}))
+        line = {"scenario": out["scenario"], "golden_exact": ok,
+                "recoveries": len(out["recoveries"]),
+                "health": out["health"]["status"]}
+        if "trace" in out:
+            line["trace"] = out["trace"]["path"]
+            line["trace_violations"] = out["trace"]["violations"]
+            ok = ok and not out["trace"]["violations"]
+        print(json.dumps(line))
         return 0 if ok else 1
     names = ([args.scenario] if args.scenario
              else list(scenarios.SCENARIOS))
     rc = 0
     for name in names:
-        out = scenarios.run_scenario(name, quick=quick, seed=args.seed)
+        out = scenarios.run_scenario(name, quick=quick, seed=args.seed,
+                                     trace_dir=args.trace_dir)
         ok = bool(out.get("golden_exact"))
+        if "trace" in out and out["trace"]["violations"]:
+            ok = False
         rc |= 0 if ok else 1
         print(json.dumps({
             "scenario": name, "golden_exact": ok,
             "commit_ms": out["commit_ms"],
-            "recovery_ms": out["recovery_ms"]}))
+            "recovery_ms": out["recovery_ms"],
+            "health": out["health"]["status"]}))
     return rc
 
 

@@ -33,12 +33,17 @@ from repro.pool import Fault
 from repro.runtime import failure
 
 
-def _pct(xs: List[float]) -> dict:
-    if not xs:
-        return {"n": 0, "p50_ms": None, "p99_ms": None}
-    a = np.asarray(xs)
-    return {"n": len(xs), "p50_ms": float(np.percentile(a, 50)),
-            "p99_ms": float(np.percentile(a, 99))}
+def _ms_summary(hist) -> dict:
+    """Distill an obs Histogram into the campaign's record shape.
+
+    The runner publishes every wall sample into the pool's metric
+    registry (one telemetry plane for live pools and campaigns alike)
+    and summarizes from there — the old private numpy percentile helper
+    is gone; percentile estimates come from the registry's fixed
+    buckets, interpolated and clamped to the observed extrema.
+    """
+    s = hist.summary()
+    return {"n": s["n"], "p50_ms": s["p50"], "p99_ms": s["p99"]}
 
 
 def _trees_equal(a, b) -> bool:
@@ -117,8 +122,14 @@ class ScenarioRunner:
         snap = wl.snapshot()
         g0 = pool.protector.group_size
         slowdown = np.ones(g0)
-        clean_ms: List[float] = []
-        during_ms: List[float] = []
+        # one telemetry plane: every wall sample goes through the pool's
+        # registry (which survives rescale — _open_kw threads it), and
+        # the campaign record is distilled from the same histograms a
+        # live monitoring scrape would read
+        reg = pool.metrics
+        h_clean = reg.histogram("chaos_commit_ms", phase="clean")
+        h_during = reg.histogram("chaos_commit_ms", phase="during")
+        h_disturb = reg.histogram("chaos_disturbance_ms")
         recoveries: List[dict] = []
         window_trace: List[tuple] = []
         disturbed = set()
@@ -137,9 +148,10 @@ class ScenarioRunner:
                     t0 = time.perf_counter()
                     wl.rescale(e.kw["shape"])
                     pool = wl.pool
+                    ms = (time.perf_counter() - t0) * 1e3
+                    h_disturb.observe(ms)
                     recoveries.append({
-                        "step": t, "kind": "rescale",
-                        "ms": (time.perf_counter() - t0) * 1e3})
+                        "step": t, "kind": "rescale", "ms": ms})
                     if pool.protector.group_size != g0:
                         g0 = pool.protector.group_size
                         slowdown = np.ones(g0)
@@ -154,17 +166,21 @@ class ScenarioRunner:
             pend: list = []
             if mid:
                 def _hook(prot, since, at_boundary, _mid=mid,
-                          _pend=pend):
+                          _pend=pend, _pool=pool):
                     out = prot
                     for e in _mid:
                         out, ev = self._inject_prot(out, e)
+                        # the arrival hook bypasses pool.inject, so the
+                        # fault must be noted explicitly to keep the
+                        # trace linkage (fault id -> recovery span)
+                        _pool.note_event(ev)
                         _pend.append(ev)
                     return out
                 pool.set_arrival_hook(_hook)
             t0 = time.perf_counter()
             wl.traffic_step()
             dt_ms = (time.perf_counter() - t0) * 1e3
-            (during_ms if t in disturbed else clean_ms).append(dt_ms)
+            (h_during if t in disturbed else h_clean).observe(dt_ms)
             if mid:
                 pool.set_arrival_hook(None)
 
@@ -185,12 +201,11 @@ class ScenarioRunner:
                 try:
                     rep = pool.recover(fault)
                     jax.block_until_ready(pool.prot.state)
-                    recoveries.append({
-                        "step": t, "kind": fault.kind,
-                        "ms": (time.perf_counter() - t0) * 1e3,
-                        "verified": bool(rep.verified),
-                        "reverified": rep.reverified,
-                        "followups": rep.followups})
+                    ms = (time.perf_counter() - t0) * 1e3
+                    h_disturb.observe(ms)
+                    rec = {"step": t, "ms": ms}
+                    rec.update(rep.to_event())
+                    recoveries.append(rec)
                 except RuntimeError as err:
                     if "syndrome budget exhausted" not in str(err):
                         raise
@@ -198,9 +213,10 @@ class ScenarioRunner:
                     # re-protect, replay the missed traffic exactly
                     wl.restore(snap)
                     wl.replay_to(t + 1)
+                    ms = (time.perf_counter() - t0) * 1e3
+                    h_disturb.observe(ms)
                     recoveries.append({
-                        "step": t, "kind": "restore_replay",
-                        "ms": (time.perf_counter() - t0) * 1e3,
+                        "step": t, "kind": "restore_replay", "ms": ms,
                         "error": str(err).splitlines()[0],
                         "replayed": t + 1 - snap["t"]})
             t += 1
@@ -210,10 +226,12 @@ class ScenarioRunner:
             "events": len(self.schedule),
             "r": pool.redundancy,
             "window": self.wl.config.window,
-            "commit_ms": {"clean": _pct(clean_ms),
-                          "during": _pct(during_ms)},
-            "recovery_ms": _pct([r["ms"] for r in recoveries]),
+            "commit_ms": {"clean": _ms_summary(h_clean),
+                          "during": _ms_summary(h_during)},
+            "recovery_ms": _ms_summary(h_disturb),
             "recoveries": recoveries,
+            "stats": pool.stats(),
+            "health": pool.health().to_dict(),
         }
         if window_trace:
             out["window_trace"] = {
@@ -255,9 +273,9 @@ def attach_schedule(host, schedule: FaultSchedule,
                     lambda p, prot, _e=e: inject_event(
                         p, prot, _e, schedule.event_seed(_e)))
                 rep = pool.recover(Fault.from_event(ev))
-                log.append({"step": t, "kind": e.kind,
-                            "verified": bool(rep.verified),
-                            "reverified": rep.reverified})
+                rec = {"step": t}
+                rec.update(rep.to_event())
+                log.append(rec)
             elif e.kind == "straggler_start" and hasattr(
                     h, "replica_slowdown"):
                 h.replica_slowdown[int(e.kw.get("rank", 0))] = float(

@@ -13,7 +13,8 @@ traffic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+import os
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 
@@ -21,6 +22,7 @@ from repro.chaos.runner import ScenarioRunner
 from repro.chaos.schedule import ChaosEvent, FaultSchedule
 from repro.chaos.workload import PoolWorkload
 from repro.configs.base import ProtectConfig
+from repro.obs import Tracer, validate_events
 
 E = ChaosEvent.make
 
@@ -130,37 +132,71 @@ STORM_CELLS: Tuple[Tuple[int, int], ...] = (
     (1, 1), (2, 16), (3, 16), (4, 16))
 
 
-def run_scenario(name: str, *, quick: bool = True,
-                 seed: int = 0) -> dict:
-    wl, sched, n = SCENARIOS[name](quick, seed)
+def _run(wl, sched, n: int, name: str,
+         trace_dir: Optional[str]) -> dict:
+    """Execute one built scenario, optionally with a file-backed trace.
+
+    With `trace_dir`, the workload's pool emits every fault/recovery/
+    scrub/rescale event into <trace_dir>/<name>.trace.jsonl, and the
+    result carries the trace's validation verdict (obs.validate_events
+    — the same check scripts/trace_check.py runs offline): a campaign
+    whose trace does not link every fault to its recovery is reported
+    broken right where it ran.
+    """
+    tracer = None
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        tracer = Tracer(os.path.join(trace_dir,
+                                     f"{name}.trace.jsonl"))
+        wl.pool.set_tracer(tracer)
     out = ScenarioRunner(wl, sched).run(n)
     out["scenario"] = name
+    if tracer is not None:
+        out["trace"] = {"path": tracer.path,
+                        "events": len(tracer.events),
+                        "violations": validate_events(tracer.events)}
+        tracer.close()
     return out
+
+
+def run_scenario(name: str, *, quick: bool = True, seed: int = 0,
+                 trace_dir: Optional[str] = None) -> dict:
+    wl, sched, n = SCENARIOS[name](quick, seed)
+    return _run(wl, sched, n, name, trace_dir)
 
 
 def run_storm_cell(r: int, window: int, *, quick: bool = True,
-                   seed: int = 0) -> dict:
+                   seed: int = 0,
+                   trace_dir: Optional[str] = None) -> dict:
     wl, sched, n = crash_replay_storm(r, window)(quick, seed)
-    out = ScenarioRunner(wl, sched).run(n)
-    out["scenario"] = f"storm_r{r}_w{window}"
-    return out
+    return _run(wl, sched, n, f"storm_r{r}_w{window}", trace_dir)
 
 
 def campaign(*, quick: bool = True, seed: int = 0,
-             storms: bool = True) -> list:
+             storms: bool = True,
+             trace_dir: Optional[str] = None) -> list:
     """The full campaign: the four core scenarios plus the storm
     matrix.  Raises if any scenario fails the golden bit-identity
-    check — a chaos campaign whose end state drifted measured nothing.
+    check — a chaos campaign whose end state drifted measured nothing —
+    or (with `trace_dir`) emits a trace that fails validation.
     """
-    results = [run_scenario(name, quick=quick, seed=seed)
+    results = [run_scenario(name, quick=quick, seed=seed,
+                            trace_dir=trace_dir)
                for name in SCENARIOS]
     if storms:
         cells = STORM_CELLS[:2] if quick else STORM_CELLS
-        results += [run_storm_cell(r, w, quick=quick, seed=seed)
+        results += [run_storm_cell(r, w, quick=quick, seed=seed,
+                                   trace_dir=trace_dir)
                     for r, w in cells]
     bad = [r["scenario"] for r in results if not r.get("golden_exact")]
     if bad:
         raise AssertionError(
             f"chaos scenarios ended non-golden: {bad} — recovered "
             "state must be bit-identical to the fault-free run")
+    broken = [r["scenario"] for r in results
+              if r.get("trace", {}).get("violations")]
+    if broken:
+        raise AssertionError(
+            f"chaos traces failed validation: {broken} — every fault "
+            "must link to the recovery span that resolved it")
     return results

@@ -196,6 +196,10 @@ class DeferredProtector:
         self.max_window = window
         self.window = window
         self.donate = donate
+        # telemetry (repro.obs): the Pool assigns its registry here;
+        # publication is host-side arithmetic on values this class already
+        # holds — wiring it never adds device traffic or retraces
+        self.metrics = None           # Optional[obs.MetricsRegistry]
         # replicate_meta mirrors the window's dirty mask + digest (a few
         # hundred bytes) across the pod at every commit, so survivors of a
         # mid-window loss can bound the lost window without checkpoint +
@@ -285,10 +289,17 @@ class DeferredProtector:
         window size; takes effect at the next commit (an already-open
         window flushes on its old cadence at the latest).
         """
+        before = self.window
         if suspect:
             self.window = 1
         else:
             self.window = min(self.max_window, max(self.window * 2, 2))
+        if self.metrics is not None:
+            self.metrics.gauge("pool_window").set(self.window)
+            if self.window < before:
+                self.metrics.counter("pool_window_collapse_total").inc()
+            elif self.window > before:
+                self.metrics.counter("pool_window_grow_total").inc()
         return self.window
 
     # -- replicated window metadata ---------------------------------------------
@@ -645,7 +656,11 @@ class DeferredProtector:
 
     def flush(self, est: EpochState) -> EpochState:
         """Refresh parity/cksums (and the row) from the window now."""
+        pending = self._since
         self._since = 0
+        if self.metrics is not None:
+            self.metrics.counter("pool_window_flush_total").inc()
+            self.metrics.histogram("pool_flush_pending").observe(pending)
         return self._jitted("flush", self.make_flush)(est)
 
     def flush_if_pending(self, est: EpochState) -> EpochState:

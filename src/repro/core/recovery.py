@@ -22,6 +22,7 @@ data pipeline and step function needed to re-execute logged steps.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -51,6 +52,38 @@ class RecoveryReport:
     # async-safe re-entry (Pool.recover): faults that arrived while this
     # recovery was in flight and were drained right after it
     followups: int = 0
+    # wall timings (ms) — reports and trace spans share one vocabulary:
+    # queue_wait is the re-entry queue dwell (0 for a direct recovery),
+    # solve the reconstruction incl. its verdict sync, reverify the
+    # post-recovery syndrome/checksum re-check, total the whole
+    # Pool.recover path including the pre-flush
+    queue_wait_ms: Optional[float] = None
+    solve_ms: Optional[float] = None
+    reverify_ms: Optional[float] = None
+    total_ms: Optional[float] = None
+
+    def to_event(self) -> dict:
+        """Flatten to the trace/record vocabulary: one flat dict usable
+        as a span's end fields or a campaign's per-recovery record —
+        RecoveryReports and trace spans stay one vocabulary."""
+        ev: dict = {"kind": self.kind, "verified": bool(self.verified),
+                    "followups": int(self.followups)}
+        if self.lost_rank is not None:
+            ev["lost_rank"] = int(self.lost_rank)
+        if self.lost_ranks:
+            ev["lost_ranks"] = [int(r) for r in self.lost_ranks]
+        if self.pages:
+            ev["pages"] = [tuple(p) for p in self.pages]
+        if self.reverified is not None:
+            ev["reverified"] = bool(self.reverified)
+        if self.window_bound is not None:
+            ev["window_bound_verified"] = bool(
+                self.window_bound.get("digest_verified"))
+        for f in ("queue_wait_ms", "solve_ms", "reverify_ms", "total_ms"):
+            v = getattr(self, f)
+            if v is not None:
+                ev[f] = round(float(v), 3)
+        return ev
 
 
 def recover_from_rank_loss(protector: txn_mod.Protector,
@@ -64,12 +97,14 @@ def recover_from_rank_loss(protector: txn_mod.Protector,
             "unrecoverable online (restore from checkpoint instead)")
     if freeze is not None:
         freeze()
+    t0 = time.perf_counter()
     prot, ok = protector.recover_rank(prot, lost_rank)
     verified = bool(jax.device_get(ok))
+    solve_ms = (time.perf_counter() - t0) * 1e3
     if resume is not None:
         resume()
     return prot, RecoveryReport("rank_loss", lost_rank, [], verified,
-                                freeze is not None)
+                                freeze is not None, solve_ms=solve_ms)
 
 
 def recover_from_e_loss(protector: txn_mod.Protector,
@@ -107,18 +142,21 @@ def recover_from_e_loss(protector: txn_mod.Protector,
             "before the next storm")
     if freeze is not None:
         freeze()
+    t0 = time.perf_counter()
     if e == 1:
         prot, ok = protector.recover_rank(prot, ranks[0])
     else:
         prot, ok = protector.recover_e(prot, ranks)
     verified = bool(jax.device_get(ok))
+    solve_ms = (time.perf_counter() - t0) * 1e3
     if resume is not None:
         resume()
     if e == 1:
         return prot, RecoveryReport("rank_loss", ranks[0], [], verified,
-                                    freeze is not None)
+                                    freeze is not None, solve_ms=solve_ms)
     return prot, RecoveryReport("multi_loss", None, [], verified,
-                                freeze is not None, lost_ranks=ranks)
+                                freeze is not None, lost_ranks=ranks,
+                                solve_ms=solve_ms)
 
 
 def recover_from_double_loss(protector: txn_mod.Protector,
@@ -142,11 +180,13 @@ def recover_from_scribble(protector: txn_mod.Protector,
         raise RuntimeError("scribble repair requires parity")
     if freeze is not None:
         freeze()
+    t0 = time.perf_counter()
     ranks = [r for r, _ in locations]
     pages = [p for _, p in locations]
     prot, ok = protector.repair_pages(prot, ranks, pages)
     verified = bool(jax.device_get(ok))
+    solve_ms = (time.perf_counter() - t0) * 1e3
     if resume is not None:
         resume()
     return prot, RecoveryReport("scribble", None, list(locations), verified,
-                                freeze is not None)
+                                freeze is not None, solve_ms=solve_ms)

@@ -8,6 +8,7 @@ repair shares the recovery routine with failure-event-triggered repair.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -69,6 +70,74 @@ class Scrubber:
         self.growth_commits = int(growth_commits)   # 0 = scrub-only growth
         self._since = 0
         self._clean_streak = 0
+        # telemetry (repro.obs): the Pool assigns its registry here; all
+        # publication is host-side counter math on values this class
+        # already fetched, so a wired registry never adds device traffic
+        self.metrics = None           # Optional[obs.MetricsRegistry]
+        # coverage accounting — prechecks and full scrubs are distinct
+        # verification events: BOTH check every rank's state blocks
+        # against the checksum table (pool_pages = G x n_blocks pages
+        # per pass), but only a FULL scrub verifies the syndrome stack
+        # against the full rows; the pre-check's folded compare moves
+        # O(r*G) words and is a compressed consistency signal, not
+        # syndrome coverage.  Tracking both cumulative counters makes
+        # the coverage fraction exact across precheck-only cycles
+        # (previously local prechecks were indistinguishable from full
+        # scrubs in any record).
+        self.pool_pages = (protector.layout.n_blocks
+                           * protector.group_size)
+        self.n_prechecks = 0
+        self.n_full_scrubs = 0
+        self.pages_checked = 0            # checksum-verified (all kinds)
+        self.pages_syndrome_verified = 0  # full-row syndrome coverage
+        self.last_suspect: Optional[bool] = None
+
+    def coverage(self) -> dict:
+        """Exact verification-coverage record (see __init__ notes)."""
+        passes = self.n_prechecks + self.n_full_scrubs
+        return {
+            "pool_pages": self.pool_pages,
+            "prechecks": self.n_prechecks,
+            "full_scrubs": self.n_full_scrubs,
+            "pages_checked": self.pages_checked,
+            "pages_syndrome_verified": self.pages_syndrome_verified,
+            # of all scrub passes, the fraction that carried full
+            # syndrome coverage (precheck-only cycles dilute this —
+            # exactly the staleness signal Vilamb says must be visible)
+            "full_fraction": (self.n_full_scrubs / passes
+                              if passes else None),
+            # of all checksum page-checks, the fraction also covered by
+            # a full-row syndrome verification
+            "syndrome_coverage": (self.pages_syndrome_verified
+                                  / self.pages_checked
+                                  if self.pages_checked else None),
+        }
+
+    def _publish(self, kind: str, report, wall_ms: float) -> None:
+        """Fold one scrub pass into the registry (no-op when unwired)."""
+        self.last_suspect = report.suspect
+        if self.metrics is None:
+            return
+        reg = self.metrics
+        reg.counter("scrub_runs_total", kind=kind).inc()
+        if report.suspect:
+            reg.counter("scrub_suspect_total", kind=kind).inc()
+        reg.histogram("scrub_wall_ms", kind=kind).observe(wall_ms)
+        reg.counter("scrub_pages_verified_total",
+                    kind=kind).inc(self.pool_pages)
+        if report.bad_locations:
+            reg.counter("scrub_bad_pages_total").inc(
+                len(report.bad_locations))
+        if report.bad_count:
+            reg.counter("scrub_precheck_bad_blocks_total").inc(
+                report.bad_count)
+        if report.synd_ok is not None and not all(report.synd_ok):
+            reg.counter("scrub_digest_mismatch_total").inc(
+                sum(1 for v in report.synd_ok if not v))
+        cov = self.coverage()
+        if cov["full_fraction"] is not None:
+            reg.gauge("scrub_coverage_full_fraction").set(
+                cov["full_fraction"])
 
     def due(self) -> bool:
         if self.period <= 0:
@@ -156,8 +225,13 @@ class Scrubber:
         if not (mode.has_cksums or mode.has_parity):
             return ScrubReport(int(prot.step), False, [], None, False,
                                None, local_only=True)
+        t0 = time.perf_counter()
         _, report = self._host_report(
             prot, self.protector.local_scrub(prot), local=True)
+        self.n_prechecks += 1
+        self.pages_checked += self.pool_pages
+        self._publish("precheck", report,
+                      (time.perf_counter() - t0) * 1e3)
         if self.engine is not None:
             self.engine.report_pressure(report.suspect)
             if report.suspect:
@@ -175,6 +249,7 @@ class Scrubber:
                                      False, None)
         if freeze is not None:
             freeze()
+        t0 = time.perf_counter()
         # one transfer for every scrub output (plus the step counter) —
         # the old code issued a device_get per field and then walked
         # np.argwhere rows in Python
@@ -186,6 +261,17 @@ class Scrubber:
             prot, ok = self.protector.repair_pages(prot, ranks, pages)
             report.repaired = True
             report.repair_ok = bool(jax.device_get(ok))
+            if self.metrics is not None:
+                self.metrics.counter("scrub_repairs_total").inc()
+                if not report.repair_ok:
+                    self.metrics.counter(
+                        "scrub_repair_failures_total").inc()
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        self.n_full_scrubs += 1
+        self.pages_checked += self.pool_pages
+        if mode.has_parity:
+            self.pages_syndrome_verified += self.pool_pages
+        self._publish("full", report, wall_ms)
         if resume is not None:
             resume()
         if self.engine is not None:

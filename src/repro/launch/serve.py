@@ -30,6 +30,14 @@ def main(argv=None):
                     help="deferred-epoch window W for the KV cache "
                          "(1 = synchronous per-commit protection)")
     ap.add_argument("--host-devices", type=int, default=8)
+    ap.add_argument("--metrics-dir", default=None,
+                    help="publish the pool's metric registry "
+                         "(server.prom + server.stats.json) here every "
+                         "--metrics-every decode steps")
+    ap.add_argument("--metrics-every", type=int, default=100)
+    ap.add_argument("--trace-dir", default=None,
+                    help="append the pool's JSONL span trace "
+                         "(server.trace.jsonl) here")
     args = ap.parse_args(argv)
 
     if "xla_force_host_platform_device_count" not in os.environ.get(
@@ -55,7 +63,9 @@ def main(argv=None):
                                     redundancy=args.redundancy,
                                     window=args.window),
                  mesh, batch=args.batch,
-                 max_len=args.prompt_len + args.new_tokens + 1)
+                 max_len=args.prompt_len + args.new_tokens + 1,
+                 metrics_dir=args.metrics_dir, trace_dir=args.trace_dir,
+                 metrics_every=args.metrics_every)
     srv.start(params)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab)
@@ -67,6 +77,16 @@ def main(argv=None):
     if srv.pool is not None:
         print("cache protection overhead:",
               srv.pool.overhead_report()["protection_fraction"])
+        health = srv.pool.health()
+        print(f"health: {health.status}"
+              + (f" ({'; '.join(health.reasons)})"
+                 if health.reasons else ""))
+        if args.metrics_dir:
+            from repro import obs
+            paths = obs.write_metrics(srv.pool.metrics, args.metrics_dir,
+                                      prefix="server",
+                                      stats=srv.pool.stats())
+            print(f"metrics: {paths['prom']}")
     return 0
 
 

@@ -45,6 +45,14 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--host-devices", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-dir", default=None,
+                    help="publish the pool's metric registry "
+                         "(trainer.prom + trainer.stats.json) here "
+                         "every --metrics-every resolved steps")
+    ap.add_argument("--metrics-every", type=int, default=25)
+    ap.add_argument("--trace-dir", default=None,
+                    help="append the pool's JSONL span trace "
+                         "(trainer.trace.jsonl) here")
     args = ap.parse_args(argv)
 
     if "xla_force_host_platform_device_count" not in os.environ.get(
@@ -71,7 +79,9 @@ def main(argv=None):
                       redundancy=args.redundancy, window=args.window,
                       overlap_commit=args.overlap_commit),
         mesh, seq_len=args.seq_len, global_batch=args.global_batch,
-        checkpoint_dir=args.ckpt_dir, seed=args.seed)
+        checkpoint_dir=args.ckpt_dir, seed=args.seed,
+        metrics_dir=args.metrics_dir, trace_dir=args.trace_dir,
+        metrics_every=args.metrics_every)
     trainer.initialize()
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} protect={args.protect} "
           f"overhead={trainer.pool.overhead_report()}")
@@ -79,6 +89,15 @@ def main(argv=None):
     for o in outs[:: max(args.steps // 10, 1)]:
         print(f"step {o['step']:5d}  loss {o['loss']:.4f}")
     print(f"final: step {outs[-1]['step']} loss {outs[-1]['loss']:.4f}")
+    health = trainer.pool.health()
+    print(f"health: {health.status}"
+          + (f" ({'; '.join(health.reasons)})" if health.reasons else ""))
+    if args.metrics_dir:
+        from repro import obs
+        paths = obs.write_metrics(trainer.pool.metrics, args.metrics_dir,
+                                  prefix="trainer",
+                                  stats=trainer.pool.stats())
+        print(f"metrics: {paths['prom']}")
     return 0
 
 

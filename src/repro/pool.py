@@ -45,6 +45,7 @@ layer; `Pool` is the contract new subsystems plug into.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
@@ -58,6 +59,9 @@ from repro.core.scrub import ScrubReport, Scrubber
 from repro.core.txn import Mode, ProtectedState, Protector
 from repro.dist import elastic
 from repro.dist.straggler import StragglerPolicy
+from repro.obs import health as obs_health
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 
 PyTree = Any
 
@@ -246,7 +250,9 @@ class Pool(EngineHost):
                  replicate_meta: Optional[bool] = None,
                  on_freeze: Optional[Callable] = None,
                  on_resume: Optional[Callable] = None,
-                 straggler_policy: Optional[StragglerPolicy] = None):
+                 straggler_policy: Optional[StragglerPolicy] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.config = config if config is not None else ProtectConfig()
         self.mesh = mesh
         self.abstract_state = abstract_state
@@ -254,11 +260,22 @@ class Pool(EngineHost):
         self.donate = bool(donate)
         self.on_freeze = on_freeze
         self.on_resume = on_resume
+        # telemetry plane (repro.obs) — every pool owns a registry and a
+        # tracer; a caller-supplied pair survives rescale (threaded
+        # through _open_kw below) so one campaign is one metric namespace
+        # and one connected trace.  Publication is host-side only:
+        # commit-path instrumentation is perf_counter + dict hits, never
+        # a device fetch or a jit wrapper, so a wired pool compiles
+        # byte-identical programs (benchmarks/obs_overhead.py asserts).
+        self.metrics = (metrics if metrics is not None
+                        else MetricsRegistry())
+        self.tracer = tracer if tracer is not None else Tracer()
         self._open_kw = dict(data_axis=data_axis,
                              dirty_leaf_idx=dirty_leaf_idx,
                              dirty_capacity=dirty_capacity,
                              donate=donate, replicate_meta=replicate_meta,
-                             straggler_policy=straggler_policy)
+                             straggler_policy=straggler_policy,
+                             metrics=self.metrics, tracer=self.tracer)
         mode = self.config.resolved_mode
         self.protector = Protector(
             mesh, abstract_state, state_specs, data_axis=data_axis,
@@ -299,6 +316,33 @@ class Pool(EngineHost):
             self.protector, period=self.config.scrub_period,
             engine=self._engine,
             growth_commits=self.config.window_growth_commits)
+        self.scrubber.metrics = self.metrics
+        if self._engine is not None:
+            self._engine.metrics = self.metrics
+        r_armed = (self.protector.redundancy
+                   if self.protector.mode.has_parity else 0)
+        self.metrics.gauge("pool_window").set(
+            self._engine.window if self._engine is not None else 1)
+        self.metrics.gauge("pool_redundancy").set(r_armed)
+        self.metrics.gauge("pool_budget_remaining").set(r_armed)
+        # hot-path handles: commit() publishes through these cached
+        # objects (no registry lookup per transaction)
+        self._m_commits = self.metrics.counter("pool_commits_total")
+        self._m_aborted = self.metrics.counter(
+            "pool_commit_aborted_total")
+        self._m_commit_ms = self.metrics.histogram(
+            "pool_commit_dispatch_ms")
+        # health bookkeeping (host flags; pool.health() folds these)
+        self._n_recoveries = 0
+        self._n_followups = 0
+        self._suspect = False
+        self._budget_exhausted = False
+        self._last_reverify_ok: Optional[bool] = None
+        self._unrepaired_pages = 0
+        # fault ids noted (note_fault / inject) and not yet consumed by
+        # the recovery/repair span that resolves them — the trace-linkage
+        # currency (obs/trace.validate_events)
+        self._open_fault_ids: list = []
         # straggler mitigation (ProtectConfig.straggler_threshold > 0):
         # the policy tracks per-replica commit-loop durations and drops
         # replicas past threshold x the fleet median; while ANY replica
@@ -344,8 +388,20 @@ class Pool(EngineHost):
         return pool
 
     def init(self, state: PyTree) -> "Pool":
-        """Build parity/checksums/row for `state` (fresh protection)."""
+        """Build parity/checksums/row for `state` (fresh protection).
+
+        Also the re-arm point after a budget-exhausted storm: fresh
+        protection clears the exhaust/corruption health flags and
+        restores the full syndrome budget.
+        """
         self.prot = self.protector.init(state)
+        self._budget_exhausted = False
+        self._unrepaired_pages = 0
+        self._last_reverify_ok = None
+        self._suspect = False
+        self.metrics.gauge("pool_budget_remaining").set(
+            self.protector.redundancy
+            if self.protector.mode.has_parity else 0)
         return self
 
     # -- introspection ----------------------------------------------------------
@@ -381,6 +437,52 @@ class Pool(EngineHost):
                          else 1)
         return rep
 
+    # -- telemetry surface -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """One host-side snapshot of the pool's telemetry: commit
+        counters and dispatch-wall summary, window state, exact scrub
+        coverage, recovery history, degradation flags, and the full
+        metric registry.  Never touches the device — poll it at any
+        cadence (the step counter stays a device value; fetch
+        `pool.step` explicitly when you want it)."""
+        eng = self._engine
+        return {
+            "mode": self.mode.value,
+            "redundancy": self.redundancy,
+            "engine": "deferred" if eng is not None else "sync",
+            "window": eng.window if eng is not None else 1,
+            "max_window": eng.max_window if eng is not None else 1,
+            "commits": int(self._m_commits.value),
+            "aborted_commits": int(self._m_aborted.value),
+            "commit_dispatch_ms": self._m_commit_ms.summary(),
+            "scrub": self.scrubber.coverage(),
+            "recoveries": self._n_recoveries,
+            "recovery_followups": self._n_followups,
+            "dropped_replicas": self.dropped_replicas,
+            "suspect": self._suspect,
+            "budget_exhausted": self._budget_exhausted,
+            "metrics": self.metrics.snapshot(),
+        }
+
+    def health(self) -> obs_health.HealthReport:
+        """Green / degraded / critical with named reasons — host state
+        only, see obs/health.py for the exact semantics."""
+        eng = self._engine
+        return obs_health.assess(
+            window=eng.window if eng is not None else 1,
+            max_window=eng.max_window if eng is not None else 1,
+            dropped_replicas=self._dropped,
+            suspect=self._suspect,
+            redundancy=(self.redundancy
+                        if self.mode.has_parity else 0),
+            budget_exhausted=self._budget_exhausted,
+            scrub_coverage=self.scrubber.coverage(),
+            unrepaired_pages=self._unrepaired_pages,
+            reverify_failed=self._last_reverify_ok is False,
+            recoveries=self._n_recoveries,
+            recovery_followups=self._n_followups)
+
     def commit_program(self, *, dirty_pages=None, verify_old: bool = False):
         """The compiled synchronous-commit program the facade routes
         through (for benchmarks asserting facade == direct bytes)."""
@@ -406,6 +508,7 @@ class Pool(EngineHost):
         feeds the right one to the engine it built.
         """
         assert self.prot is not None, "Pool.commit before init()"
+        t0 = time.perf_counter()
         if self._engine is not None:
             assert not verify_old, \
                 "verify_old is a synchronous-engine feature (window=1)"
@@ -428,6 +531,14 @@ class Pool(EngineHost):
         # the scrub cadence + clean-streak window growth ride on the
         # host-known canary verdict (no device sync on the hot path)
         self.scrubber.on_commit(clean=bool(canary_ok))
+        # telemetry: the observed wall is DISPATCH wall — commits return
+        # a device verdict unfetched, so this measures the host cost of
+        # launching the program, which is exactly what instrumentation
+        # could perturb (the device-side cost is the benchmarks' job)
+        self._m_commits.inc()
+        if not canary_ok:
+            self._m_aborted.inc()
+        self._m_commit_ms.observe((time.perf_counter() - t0) * 1e3)
         return ok
 
     def transaction(self, *, data_cursor=0, rng_key=None) -> Transaction:
@@ -459,13 +570,51 @@ class Pool(EngineHost):
                             else dataclasses.replace(est, prot=new))
                 self._engine.arrival_hook = _hook
 
+    def note_fault(self, kind: str, **fields) -> int:
+        """Record a fault's arrival in the telemetry plane; returns the
+        trace id.  The id stays "open" until the next recovery (or
+        repairing scrub) span consumes it into its `faults` list — the
+        linkage `validate_events` / scripts/trace_check.py enforce.
+        Injectors routed through `inject` are noted automatically; a
+        harness that corrupts state by other means (e.g. an arrival-hook
+        scribble inside an open window) must call this itself so the
+        trace stays connected.
+        """
+        self.metrics.counter("pool_faults_total", kind=str(kind)).inc()
+        fid = self.tracer.emit("fault", fault_kind=str(kind), **fields)
+        self._open_fault_ids.append(fid)
+        return fid
+
+    def note_event(self, event) -> int:
+        """`note_fault` from a FailureEvent (duck-typed) — what a
+        harness calls when it corrupted state without going through
+        `inject` (e.g. inside an arrival hook)."""
+        fields = {}
+        if getattr(event, "lost_rank", None) is not None:
+            fields["lost_rank"] = int(event.lost_rank)
+        if getattr(event, "lost_ranks", None):
+            fields["lost_ranks"] = [int(r) for r in event.lost_ranks]
+        if getattr(event, "locations", None):
+            fields["pages"] = [[int(r), int(p)]
+                               for r, p in event.locations]
+        return self.note_fault(getattr(event, "kind", "inject"),
+                               **fields)
+
+    def set_tracer(self, tracer: Tracer) -> None:
+        """Swap the trace sink (e.g. for a file-backed tracer after the
+        pool was built) — threaded through `_open_kw` so pools built by
+        `rescale` keep emitting into the new sink."""
+        self.tracer = tracer
+        self._open_kw["tracer"] = tracer
+
     def inject(self, fn: Callable):
         """Apply a failure injector `fn(protector, prot) -> (prot, event)`
         to the live protected state IN PLACE, preserving any open
         window's bookkeeping (the `prot` setter would wrap a fresh
         window, silently discarding the accumulator a later flush
         needs).  Returns the injector's FailureEvent — the chaos
-        harness's between-commit corruption point.
+        harness's between-commit corruption point.  The event is noted
+        as a fault in the trace (see `note_fault`).
         """
         assert self.prot is not None, "Pool.inject before init()"
         new_prot, event = fn(self.protector, self.prot)
@@ -473,6 +622,7 @@ class Pool(EngineHost):
             self._est = dataclasses.replace(self._est, prot=new_prot)
         else:
             self._prot = new_prot
+        self.note_event(event)
         return event
 
     # -- straggler degradation path ---------------------------------------------
@@ -502,11 +652,23 @@ class Pool(EngineHost):
         for rank, dur in enumerate(durations):
             self.straggler.observe(rank, float(dur))
         mask = self.straggler.replica_mask()
+        before = self._dropped
         self._dropped = set(int(r) for r in np.flatnonzero(~mask))
         if self._dropped:
             if self._engine is not None:
                 self._engine.report_pressure(True)
             self.scrubber.note_suspect()
+        newly, healed = self._dropped - before, before - self._dropped
+        if newly:
+            self.metrics.counter(
+                "pool_straggler_drop_total").inc(len(newly))
+            self.tracer.emit("straggler_drop",
+                             replicas=sorted(int(r) for r in newly))
+        if healed:
+            self.metrics.counter(
+                "pool_straggler_heal_total").inc(len(healed))
+        self.metrics.gauge("pool_dropped_replicas").set(
+            len(self._dropped))
         return mask
 
     # -- scrub ------------------------------------------------------------------
@@ -517,9 +679,26 @@ class Pool(EngineHost):
         window."""
         assert self.prot is not None
         self.flush()                 # scrub must see current redundancy
-        prot, report = self.scrubber.run(
-            self.prot, freeze=self._freeze, resume=self._resume)
-        self.prot = prot
+        with self.tracer.span("scrub", scope="full") as span:
+            prot, report = self.scrubber.run(
+                self.prot, freeze=self._freeze, resume=self._resume)
+            self.prot = prot
+            span.annotate(suspect=bool(report.suspect),
+                          bad_pages=len(report.bad_locations),
+                          repaired=bool(report.repaired))
+            # a scrub whose repair actually fixed pages resolves any
+            # open fault ids — link them here exactly like a recovery
+            # span would (note_fault docs the contract)
+            if report.repaired and self._open_fault_ids:
+                fault_ids, self._open_fault_ids = \
+                    self._open_fault_ids, []
+                span.annotate(faults=fault_ids)
+        self._fold_scrub_health(report)
+        repaired_ok = report.repaired and bool(report.repair_ok)
+        if report.bad_locations and not repaired_ok:
+            self._unrepaired_pages = len(report.bad_locations)
+        else:
+            self._unrepaired_pages = 0
         return report
 
     def precheck(self) -> ScrubReport:
@@ -528,7 +707,23 @@ class Pool(EngineHost):
         folded-syndrome compare — no full-row collective."""
         assert self.prot is not None
         self.flush()
-        return self.scrubber.precheck(self.prot)
+        with self.tracer.span("scrub", scope="precheck") as span:
+            report = self.scrubber.precheck(self.prot)
+            span.annotate(suspect=bool(report.suspect))
+        self._fold_scrub_health(report)
+        return report
+
+    def _fold_scrub_health(self, report: ScrubReport) -> None:
+        """Scrub verdict -> health flags: suspicion follows the latest
+        checked pass (clean clears it, symmetric with the adaptive
+        window's pressure loop); a clean pass also retires a stale
+        reverify-failed flag (the residual corruption it warned about
+        no longer exists)."""
+        if not report.checked:
+            return
+        self._suspect = bool(report.suspect)
+        if not report.suspect:
+            self._last_reverify_ok = None
 
     def maybe_scrub(self) -> Optional[ScrubReport]:
         """Run a scrub iff the cadence says one is due.
@@ -586,73 +781,122 @@ class Pool(EngineHost):
         if not isinstance(fault, Fault):
             fault = Fault.from_event(fault)   # accept raw FailureEvents
         if self._recovering:
-            self._pending_faults.append(fault)
+            self._pending_faults.append((fault, time.perf_counter()))
+            self.metrics.counter("pool_recovery_queued_total").inc()
             return None
         self._recovering = True
         try:
             rep = self._recover_one(fault, reverify=reverify)
             drained = 0
             while self._pending_faults:
-                self._recover_one(self._pending_faults.pop(0),
-                                  reverify=reverify)
+                qfault, t_enq = self._pending_faults.pop(0)
+                self._recover_one(
+                    qfault, reverify=reverify,
+                    queue_wait_ms=(time.perf_counter() - t_enq) * 1e3)
                 drained += 1
             rep.followups = drained
+            self._n_followups += drained
             return rep
         finally:
             self._recovering = False
             self._pending_faults.clear()
 
-    def _recover_one(self, fault: Fault, *,
-                     reverify: bool) -> recovery_mod.RecoveryReport:
-        if fault.kind == "multi_loss":
-            # refuse an over-budget solve up front, before the flush
-            # touches anything — the actionable form of "e > r"
-            e = len(fault.ranks)
-            r = (self.protector.redundancy
-                 if self.protector.mode.has_parity else 0)
-            if e > r:
-                raise RuntimeError(
-                    f"syndrome budget exhausted: ranks "
-                    f"{list(fault.ranks)} are lost simultaneously "
-                    f"(e={e}) but this pool holds redundancy={r} "
-                    "syndrome row(s) — at most r losses solve online.  "
-                    "Restore from the checkpoint + redo-log tier and "
-                    "re-arm the stack by re-protecting (pool.init), or "
-                    f"raise ProtectConfig.redundancy>={e} (<= 4) before "
-                    "the next storm")
-        # survivors' copy of the window metadata, captured BEFORE the
-        # flush mutates the window
-        meta = (self._engine.window_meta
-                if self._engine is not None else None)
-        self.flush()
-        if fault.kind == "rank_loss":
-            prot, rep = recovery_mod.recover_from_rank_loss(
-                self.protector, self.prot, fault.rank,
-                freeze=self._freeze, resume=self._resume)
-        elif fault.kind == "multi_loss":
-            prot, rep = recovery_mod.recover_from_e_loss(
-                self.protector, self.prot, fault.ranks,
-                freeze=self._freeze, resume=self._resume)
-        elif fault.kind == "scribble":
-            prot, rep = recovery_mod.recover_from_scribble(
-                self.protector, self.prot, fault.locations,
-                freeze=self._freeze, resume=self._resume)
-        else:
-            raise ValueError(f"no recovery path for fault {fault.kind!r}")
-        self.prot = prot
-        if reverify:
-            self._reverify(rep)
-        if self._engine is not None:
-            self._engine.report_pressure(True)
-            self.scrubber.note_suspect()
-            if meta is not None:
-                rep.window_bound = {
-                    "pending": meta["pending"],
-                    "dirty_pages": meta["dirty_pages"],
-                    "digest_verified": self._engine.verify_window_bound(
-                        self._est),
-                }
-        return rep
+    def _recover_one(self, fault: Fault, *, reverify: bool,
+                     queue_wait_ms: Optional[float] = None
+                     ) -> recovery_mod.RecoveryReport:
+        t_total = time.perf_counter()
+        # consume every fault id noted since the last resolving span:
+        # THIS recovery is what resolves them (a drained follow-up grabs
+        # ids noted while the outer recovery ran, so the linkage stays
+        # exact across the re-entry queue)
+        fault_ids, self._open_fault_ids = self._open_fault_ids, []
+        with self.tracer.span("recovery", fault_kind=fault.kind,
+                              faults=fault_ids) as span:
+            if fault.kind == "multi_loss":
+                # refuse an over-budget solve up front, before the flush
+                # touches anything — the actionable form of "e > r".
+                # The health surface latches critical here (cleared by
+                # the pool.init re-arm) and the span ends with the error
+                # attached, still linking its fault ids.
+                e = len(fault.ranks)
+                r = (self.protector.redundancy
+                     if self.protector.mode.has_parity else 0)
+                if e > r:
+                    self._budget_exhausted = True
+                    self.metrics.counter(
+                        "pool_budget_exhausted_total").inc()
+                    self.metrics.gauge("pool_budget_remaining").set(0)
+                    raise RuntimeError(
+                        f"syndrome budget exhausted: ranks "
+                        f"{list(fault.ranks)} are lost simultaneously "
+                        f"(e={e}) but this pool holds redundancy={r} "
+                        "syndrome row(s) — at most r losses solve "
+                        "online.  Restore from the checkpoint + "
+                        "redo-log tier and re-arm the stack by "
+                        "re-protecting (pool.init), or raise "
+                        f"ProtectConfig.redundancy>={e} (<= 4) before "
+                        "the next storm")
+            # survivors' copy of the window metadata, captured BEFORE
+            # the flush mutates the window
+            meta = (self._engine.window_meta
+                    if self._engine is not None else None)
+            self.flush()
+            if fault.kind == "rank_loss":
+                prot, rep = recovery_mod.recover_from_rank_loss(
+                    self.protector, self.prot, fault.rank,
+                    freeze=self._freeze, resume=self._resume)
+            elif fault.kind == "multi_loss":
+                prot, rep = recovery_mod.recover_from_e_loss(
+                    self.protector, self.prot, fault.ranks,
+                    freeze=self._freeze, resume=self._resume)
+            elif fault.kind == "scribble":
+                prot, rep = recovery_mod.recover_from_scribble(
+                    self.protector, self.prot, fault.locations,
+                    freeze=self._freeze, resume=self._resume)
+            else:
+                raise ValueError(
+                    f"no recovery path for fault {fault.kind!r}")
+            self.prot = prot
+            if reverify:
+                t_rv = time.perf_counter()
+                self._reverify(rep)
+                rep.reverify_ms = (time.perf_counter() - t_rv) * 1e3
+            if self._engine is not None:
+                self._engine.report_pressure(True)
+                self.scrubber.note_suspect()
+                if meta is not None:
+                    rep.window_bound = {
+                        "pending": meta["pending"],
+                        "dirty_pages": meta["dirty_pages"],
+                        "digest_verified":
+                            self._engine.verify_window_bound(self._est),
+                    }
+            rep.queue_wait_ms = queue_wait_ms
+            rep.total_ms = (time.perf_counter() - t_total) * 1e3
+            self._publish_recovery(rep)
+            ev = rep.to_event()
+            # the span's own `kind` ("recovery") wins; the report's kind
+            # (rank_loss/multi_loss/scribble) rides as recovery_kind
+            ev["recovery_kind"] = ev.pop("kind")
+            span.annotate(**ev)
+            return rep
+
+    def _publish_recovery(self,
+                          rep: recovery_mod.RecoveryReport) -> None:
+        self._suspect = True                  # until the next clean scrub
+        self._n_recoveries += 1
+        self._last_reverify_ok = rep.reverified
+        reg = self.metrics
+        reg.counter("pool_recoveries_total", kind=rep.kind).inc()
+        for name, v in (("pool_recovery_solve_ms", rep.solve_ms),
+                        ("pool_recovery_reverify_ms", rep.reverify_ms),
+                        ("pool_recovery_queue_wait_ms",
+                         rep.queue_wait_ms),
+                        ("pool_recovery_total_ms", rep.total_ms)):
+            if v is not None:
+                reg.histogram(name).observe(v)
+        if rep.reverified is False:
+            reg.counter("pool_reverify_failed_total").inc()
 
     def _reverify(self, rep: recovery_mod.RecoveryReport) -> None:
         """Re-run verify_syndromes (+ checksums + row cache) after a
@@ -689,15 +933,24 @@ class Pool(EngineHost):
         """
         assert self.prot is not None
         self.flush()
-        if into is None:
-            into = Pool(new_mesh, self.abstract_state, self.state_specs,
-                        self.config, **self._open_kw)
-        # elastic.rescale owns the reshard -> rebuild -> step-carry
-        # sequence; the facade adds flush-before-rescale and pool wiring
-        _, prot_new = elastic.rescale(
-            self.protector, self.prot, lambda _m: into.protector,
-            new_mesh)
-        into.prot = prot_new
+        with self.tracer.span("rescale") as span:
+            if into is None:
+                # _open_kw carries metrics= and tracer=, so the new pool
+                # publishes into this one's registry and trace — one
+                # campaign stays one metric namespace across resizes
+                into = Pool(new_mesh, self.abstract_state,
+                            self.state_specs, self.config,
+                            **self._open_kw)
+            # elastic.rescale owns the reshard -> rebuild -> step-carry
+            # sequence; the facade adds flush-before-rescale and wiring
+            _, prot_new = elastic.rescale(
+                self.protector, self.prot, lambda _m: into.protector,
+                new_mesh)
+            into.prot = prot_new
+            span.annotate(
+                groups=(self.protector.group_size,
+                        into.protector.group_size))
+        self.metrics.counter("pool_rescales_total").inc()
         return into
 
     # -- freeze/resume hooks ----------------------------------------------------

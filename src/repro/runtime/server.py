@@ -26,6 +26,7 @@ steady-state decode allocates no row-sized buffers.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Optional
 
 import jax
@@ -33,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.configs.base import ModelConfig, ProtectConfig
 from repro.core import layout as layout_mod
 from repro.models import api
@@ -45,7 +47,10 @@ PyTree = Any
 class Server(PoolHost):
     def __init__(self, cfg: ModelConfig, protect_cfg: ProtectConfig, mesh,
                  *, batch: int, max_len: int, protect_cache: bool = True,
-                 window: Optional[int] = None):
+                 window: Optional[int] = None,
+                 metrics_dir: Optional[str] = None,
+                 trace_dir: Optional[str] = None,
+                 metrics_every: int = 100):
         self.cfg = cfg
         self.mesh = mesh
         self.batch = batch
@@ -63,6 +68,15 @@ class Server(PoolHost):
             # (and validates it; folded only when a pool is actually
             # built, so unprotected servers accept any window)
             protect_cfg = dataclasses.replace(protect_cfg, window=window)
+        # telemetry surfaces (repro.obs) — mirrors the trainer's flags;
+        # on an unprotected server (no pool) they are inert
+        self.metrics_dir = metrics_dir
+        self.metrics_every = max(1, int(metrics_every))
+        tracer = None
+        if trace_dir:
+            os.makedirs(trace_dir, exist_ok=True)
+            tracer = obs.Tracer(
+                os.path.join(trace_dir, "server.trace.jsonl"))
         self.pool: Optional[Pool] = None
         if self.protect_cache:
             cache_abs = jax.eval_shape(
@@ -78,7 +92,8 @@ class Server(PoolHost):
                 dirty_capacity=(
                     None if self.window == 1
                     else (lambda lo: layout_mod.time_slice_page_capacity(
-                        lo, max_len))))
+                        lo, max_len))),
+                tracer=tracer)
             self._page_cache: dict = {}
             self._word_cache: dict = {}
         # chaos/observability: hooks fired after every decode step with
@@ -141,6 +156,13 @@ class Server(PoolHost):
                     new_cache,
                     dirty_pages=self._dirty_pages(self.pos).tolist())
             self.pool.maybe_scrub()
+            reg = self.pool.metrics
+            reg.counter("server_steps_total").inc()
+            if (self.metrics_dir
+                    and (self.pos + 1) % self.metrics_every == 0):
+                obs.write_metrics(reg, self.metrics_dir,
+                                  prefix="server",
+                                  stats=self.pool.stats())
         else:
             self.cache = new_cache
         self.pos += 1

@@ -32,6 +32,7 @@ replay-verifiable mid-window).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Optional
 
@@ -40,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.configs.base import ModelConfig, ProtectConfig, TrainConfig
 from repro.core import redolog
 from repro.data.synthetic import batch_for
@@ -53,7 +55,10 @@ class Trainer(PoolHost):
     def __init__(self, cfg: ModelConfig, train_cfg: TrainConfig,
                  protect_cfg: ProtectConfig, mesh, *,
                  seq_len: int = 128, global_batch: int = 8,
-                 checkpoint_dir: Optional[str] = None, seed: int = 0):
+                 checkpoint_dir: Optional[str] = None, seed: int = 0,
+                 metrics_dir: Optional[str] = None,
+                 trace_dir: Optional[str] = None,
+                 metrics_every: int = 25):
         self.cfg = cfg
         self.train_cfg = train_cfg
         self.protect_cfg = protect_cfg
@@ -70,10 +75,22 @@ class Trainer(PoolHost):
 
         abstract_state = api.abstract_train_state(self.model, self.optimizer)
         state_specs = api.train_state_specs(self.model, self.optimizer, mesh)
+        # telemetry surfaces (repro.obs): --trace-dir gives the pool a
+        # file-backed tracer; --metrics-dir makes the step loop publish
+        # the registry + stats snapshot every `metrics_every` resolved
+        # steps (publication is host-side; see pool.stats())
+        self.metrics_dir = metrics_dir
+        self.metrics_every = max(1, int(metrics_every))
+        tracer = None
+        if trace_dir:
+            os.makedirs(trace_dir, exist_ok=True)
+            tracer = obs.Tracer(
+                os.path.join(trace_dir, "trainer.trace.jsonl"))
         # one cold pool: engine selection, scrub pressure loop and
         # window-meta replication all wired from the ProtectConfig
         self.pool = Pool(mesh, abstract_state, state_specs, protect_cfg,
-                         on_freeze=self.freeze, on_resume=self.resume)
+                         on_freeze=self.freeze, on_resume=self.resume,
+                         tracer=tracer)
 
         self._train_step = jax.jit(api.make_train_step(
             self.model, self.optimizer, train_cfg))
@@ -180,6 +197,19 @@ class Trainer(PoolHost):
         report = self.pool.maybe_scrub()
         if report is not None:
             out["scrub"] = dataclasses.asdict(report)
+        # step-loop publication: the loss/verdict were already fetched
+        # above, so folding them into the registry costs no extra sync
+        reg = self.pool.metrics
+        reg.counter("trainer_steps_total").inc()
+        if not committed:
+            reg.counter("trainer_aborted_steps_total").inc()
+        reg.gauge("trainer_loss").set(out["loss"])
+        reg.histogram("trainer_step_wall_ms").observe(
+            (time.perf_counter() - pending["t0"]) * 1e3)
+        if (self.metrics_dir
+                and self._host_step % self.metrics_every == 0):
+            obs.write_metrics(reg, self.metrics_dir, prefix="trainer",
+                              stats=self.pool.stats())
         for hook in list(self._step_hooks):
             hook(self, out)
         return out

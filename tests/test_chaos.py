@@ -325,5 +325,11 @@ def test_trainer_schedule_attachment(mesh42):
         [E(1, "rank_loss", rank=2)], seed=0))
     outs = t.run(3)
     assert all(o["committed"] for o in outs)
-    assert log == [{"step": 1, "kind": "rank_loss", "verified": True,
-                    "reverified": True}]
+    # the log record is the full RecoveryReport.to_event() payload:
+    # identity fields plus the timing breakdown the telemetry plane adds
+    assert len(log) == 1
+    rec = log[0]
+    assert rec["step"] == 1 and rec["kind"] == "rank_loss"
+    assert rec["verified"] is True and rec["reverified"] is True
+    assert rec["lost_rank"] == 2
+    assert rec["solve_ms"] >= 0 and rec["total_ms"] >= rec["solve_ms"]
