@@ -32,6 +32,7 @@ try:
 except ImportError:
     import _bootstrap                  # noqa: F401  (run as a script)
 
+import gc
 import time
 
 import jax
@@ -127,14 +128,26 @@ def _wall_ab(mesh, state, specs, new_state, key, *, batch: int,
             p.commit(new_state, rng_key=key)
         jax.block_until_ready(p.state)
     best = {name: float("inf") for name in pools}
-    for _ in range(reps):
-        for name, p in pools.items():       # interleaved: same ambient
-            t0 = time.perf_counter()
-            for _i in range(batch):
-                p.commit(new_state, rng_key=key)
-            dt = time.perf_counter() - t0   # dispatch wall only
-            jax.block_until_ready(p.state)  # drain outside the timer
-            best[name] = min(best[name], dt)
+    # a long benchmark process accretes garbage, and a gen-2 collection
+    # landing inside a 16-commit batch swamps a 3% bound — park the
+    # collector for the timed region and alternate arm order per rep so
+    # neither arm systematically pays first-of-pair costs
+    gc.collect()
+    gc.disable()
+    try:
+        order = list(pools.items())
+        for rep in range(reps):
+            if rep % 2:
+                order = order[::-1]         # alternate: cancel pair order
+            for name, p in order:           # interleaved: same ambient
+                t0 = time.perf_counter()
+                for _i in range(batch):
+                    p.commit(new_state, rng_key=key)
+                dt = time.perf_counter() - t0   # dispatch wall only
+                jax.block_until_ready(p.state)  # drain outside the timer
+                best[name] = min(best[name], dt)
+    finally:
+        gc.enable()
     instr_us = best["instrumented"] / batch * 1e6
     bare_us = best["bare"] / batch * 1e6
     return {"batch": batch, "reps": reps,
@@ -152,7 +165,7 @@ def run(quick: bool = False) -> dict:
 
     rows = _bytes_rows(mesh, state, specs, new_state, key)
     wall = _wall_ab(mesh, state, specs, new_state, key,
-                    batch=16, reps=(8 if quick else 20))
+                    batch=16, reps=(12 if quick else 20))
 
     common.print_table("instrumented vs bare commit program (XLA MB)",
                        rows, ["engine", "mode", "window",

@@ -25,7 +25,7 @@ import traceback
 
 BENCHES = ["storage_overhead", "txn_latency", "commit_sweep", "deferred",
            "scalability", "app_kv", "scrub_freq", "recovery", "roofline",
-           "chaos", "obs_overhead"]
+           "chaos", "obs_overhead", "tenancy"]
 
 
 def emit_commit_json(txn_result: dict, quick: bool, path: str,
@@ -34,7 +34,8 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
                      recovery_result: dict = None,
                      roofline_result: dict = None,
                      chaos_result: dict = None,
-                     obs_result: dict = None) -> None:
+                     obs_result: dict = None,
+                     tenancy_result: dict = None) -> None:
     """Write the per-PR commit-latency record (BENCH_commit.json).
 
     Distills txn_latency down to the commit hot path (overwrite latency
@@ -90,6 +91,14 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
         # overhead_pct within the bound)
         payload["obs"] = {"bytes": obs_result["bytes"],
                           "wall": obs_result["wall"]}
+    if tenancy_result and tenancy_result.get("throughput"):
+        # §tenancy: the multi-tenant PoolGroup A/B (gate: record-
+        # presence, batched aggregate commits/s >= looped at N >= 8
+        # structurally — same-run interleaved — and the scrub-storm
+        # interference p99 ratio as a pathology bound)
+        payload["tenancy"] = {
+            "throughput": tenancy_result["throughput"],
+            "interference": tenancy_result["interference"]}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"commit benchmark record -> {path}")
@@ -127,7 +136,8 @@ def main():
                          recovery_result=results.get("recovery"),
                          roofline_result=results.get("roofline"),
                          chaos_result=results.get("chaos"),
-                         obs_result=results.get("obs_overhead"))
+                         obs_result=results.get("obs_overhead"),
+                         tenancy_result=results.get("tenancy"))
     print("\n" + "=" * 70)
     for name, s in status.items():
         print(f"{name:20s} {s}")

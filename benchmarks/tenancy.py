@@ -1,0 +1,150 @@
+"""Multi-tenant PoolGroup benchmark (BENCH_commit.json §tenancy).
+
+Two records over one sync mlpc cohort (same shape x config tenants, so
+they share one Protector and one compiled-program cache):
+
+  * throughput — N in {1, 8, 64} tenants committing one wave through
+    the batched stacked program (ONE dispatch) vs the looped per-pool
+    baseline (N dispatches).  Both paths run inside the SAME PoolGroup
+    (`batched=False` forces the loop), so protector state and compiled
+    programs are shared and the A/B isolates dispatch count, not
+    compile count; the two sides are interleaved rep-by-rep in one run
+    so ambient load cancels.  The gate checks the structural direction
+    (batched aggregate commits/s >= looped at N >= 8) — the batch is
+    bit-identical to the loop by tests/test_tenancy.py, so this is
+    pure dispatch-amortization accounting.
+
+  * interference — 8 tenants; the SAME all-tenant batched commit wave
+    is timed with and without a scrub storm on tenant 0 between waves
+    (shared ScrubScheduler under a one-pool page budget, so the
+    scheduler keeps serving the hot tenant).  A/B waves interleave;
+    the storm-side p99 over the baseline p99 gates as a pathology
+    bound — scheduler pressure may cost scrub time, never neighbor
+    commit tails.
+
+Quick mode keeps the full N in {1, 8, 64} column set (the N=64
+ordering is the acceptance gate) and trims only per-tenant state size
+and rep counts.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+
+def _pct(ts, q):
+    return float(np.percentile(np.asarray(ts, dtype=np.float64), q) * 1e3)
+
+
+def _build_group(mesh, n, cfg, state_bytes, weights=None):
+    import jax
+
+    from repro.tenancy import PoolGroup
+
+    grp = PoolGroup(mesh)
+    base, specs = common.state_of_bytes(state_bytes, mesh)
+    updates = {}
+    for t in range(n):
+        st = jax.tree.map(lambda x, t=t: x + np.float32(t + 1), base)
+        grp.admit(f"t{t}", st, specs, config=cfg,
+                  weight=(weights or {}).get(f"t{t}", 1))
+        # a fixed candidate per tenant: committing it repeatedly is
+        # idempotent on the protected bytes, so reps time pure dispatch
+        updates[f"t{t}"] = jax.tree.map(
+            lambda x, t=t: x * np.float32(1.5) + np.float32(t), st)
+    return grp, updates
+
+
+def _throughput(mesh, cfg, n, state_bytes, reps):
+    import jax
+
+    grp, updates = _build_group(mesh, n, cfg, state_bytes)
+    # warm both programs (batched stack + per-pool loop)
+    for _ in range(2):
+        jax.block_until_ready(grp.commit(updates))
+        jax.block_until_ready(grp.commit(updates, batched=False))
+    tb, tl = [], []
+    for _ in range(reps):                      # interleaved A/B
+        t0 = time.perf_counter()
+        jax.block_until_ready(grp.commit(updates))
+        tb.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(grp.commit(updates, batched=False))
+        tl.append(time.perf_counter() - t0)
+    med_b = float(np.median(tb))
+    med_l = float(np.median(tl))
+    return {
+        "n_tenants": n,
+        "state_B": state_bytes,
+        "batched_ms": med_b * 1e3,
+        "looped_ms": med_l * 1e3,
+        "batched_commits_per_s": n / med_b,
+        "looped_commits_per_s": n / med_l,
+        "speedup": med_l / med_b,
+        "reps": reps,
+    }
+
+
+def _interference(mesh, cfg, state_bytes, waves):
+    import jax
+
+    n = 8
+    # one-pool page budget: every tick the scheduler serves (about) one
+    # tenant, and the weight skew keeps it coming back to tenant 0
+    grp, updates = _build_group(mesh, n, cfg, state_bytes,
+                                weights={"t0": 16})
+    budget = grp["t0"].pool.scrubber.pool_pages
+    for _ in range(2):
+        jax.block_until_ready(grp.commit(updates))
+    base_t, storm_t = [], []
+    for _ in range(waves):                     # interleaved A/B waves
+        t0 = time.perf_counter()
+        jax.block_until_ready(grp.commit(updates))
+        base_t.append(time.perf_counter() - t0)
+        grp.scrub_tick(page_budget=budget)     # storm pressure on t0
+        t0 = time.perf_counter()
+        jax.block_until_ready(grp.commit(updates))
+        storm_t.append(time.perf_counter() - t0)
+    return {
+        "n_tenants": n,
+        "waves": waves,
+        "scrub_pages_per_tick": budget,
+        "base_p50_ms": _pct(base_t, 50),
+        "base_p99_ms": _pct(base_t, 99),
+        "storm_p50_ms": _pct(storm_t, 50),
+        "storm_p99_ms": _pct(storm_t, 99),
+        "p99_ratio": _pct(storm_t, 99) / _pct(base_t, 99),
+    }
+
+
+def run(quick: bool = False) -> dict:
+    from repro.configs.base import ProtectConfig
+
+    mesh = common.get_mesh(data=4, model=2)
+    cfg = ProtectConfig(mode="mlpc", redundancy=2, window=1,
+                        block_words=256)
+    state_bytes = 16 << 10 if quick else 64 << 10
+    reps = 8 if quick else 15
+    sizes = [1, 8, 64]        # the N=64 ordering is the acceptance gate,
+    rows = [_throughput(mesh, cfg, n, state_bytes, reps) for n in sizes]
+    interference = _interference(mesh, cfg, state_bytes,
+                                 waves=24 if quick else 60)
+
+    fmt = lambda v: round(v, 2) if isinstance(v, float) else v  # noqa: E731
+    common.print_table(
+        "PoolGroup throughput: batched stacked program vs per-pool loop",
+        [{k: fmt(v) for k, v in r.items()} for r in rows],
+        ["n_tenants", "state_B", "batched_ms", "looped_ms",
+         "batched_commits_per_s", "looped_commits_per_s", "speedup"])
+    common.print_table(
+        "PoolGroup interference: neighbor commit wall under scrub storm",
+        [{k: fmt(v) for k, v in interference.items()}],
+        ["n_tenants", "waves", "scrub_pages_per_tick", "base_p50_ms",
+         "base_p99_ms", "storm_p50_ms", "storm_p99_ms", "p99_ratio"])
+
+    out = {"throughput": rows, "interference": interference}
+    common.save_result("tenancy", out)
+    return out

@@ -11,6 +11,12 @@ repro/obs/trace.py (`validate_events` is the single source of truth):
     silently forgotten;
   * no span references an unknown fault id (no orphan links).
 
+Rotated traces (obs.Tracer rotate_lines/rotate_bytes) write numbered
+segments `<stem>-0001.jsonl`, `<stem>-0002.jsonl`, …; a span may begin
+in one segment and end in the next, so the segments of one family are
+concatenated (in index order) and validated as ONE logical event
+stream.  Unrotated files are validated individually, as before.
+
 Usage:
     python scripts/trace_check.py TRACE.jsonl [...]
     python scripts/trace_check.py --dir TRACE_DIR    # every *.jsonl
@@ -24,21 +30,57 @@ from __future__ import annotations
 import argparse
 import glob
 import os
+import re
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.obs.trace import load_jsonl, validate_events  # noqa: E402
 
+_SEGMENT = re.compile(r"^(?P<stem>.+)-(?P<idx>\d{4})(?P<ext>\.jsonl)$")
 
-def check_file(path: str) -> list:
-    try:
-        events = load_jsonl(path)
-    except Exception as e:  # malformed JSON is a violation, not a crash
-        return [f"unreadable: {e}"]
+
+def group_segments(paths: list) -> list:
+    """Group rotated-segment paths into families.
+
+    Returns [(display_name, [paths...])]: segments sharing a stem become
+    one family sorted by index; everything else stays a singleton.
+    Order follows first appearance in `paths`.
+    """
+    families: dict = {}
+    order: list = []
+    for path in paths:
+        m = _SEGMENT.match(os.path.basename(path))
+        key = (os.path.join(os.path.dirname(path),
+                            m.group("stem") + m.group("ext"))
+               if m else path)
+        if key not in families:
+            families[key] = []
+            order.append(key)
+        families[key].append(path)
+    out = []
+    for key in order:
+        segs = sorted(families[key])
+        name = key if len(segs) == 1 and segs[0] == key else (
+            f"{key} [{len(segs)} segment(s)]")
+        out.append((name, segs))
+    return out
+
+
+def check_files(paths: list) -> list:
+    events = []
+    for path in paths:
+        try:
+            events += load_jsonl(path)
+        except Exception as e:  # malformed JSON is a violation, not a crash
+            return [f"unreadable {path}: {e}"]
     if not events:
         return ["empty trace"]
     return validate_events(events)
+
+
+def check_file(path: str) -> list:
+    return check_files([path])
 
 
 def main(argv=None) -> int:
@@ -55,16 +97,16 @@ def main(argv=None) -> int:
         ap.error("no trace files given (pass paths or --dir)")
 
     rc = 0
-    for path in paths:
-        violations = check_file(path)
-        n = len(load_jsonl(path)) if os.path.exists(path) else 0
+    for name, segs in group_segments(paths):
+        violations = check_files(segs)
+        n = sum(len(load_jsonl(p)) for p in segs if os.path.exists(p))
         if violations:
             rc = 1
-            print(f"FAIL {path} ({n} events)")
+            print(f"FAIL {name} ({n} events)")
             for v in violations:
                 print(f"  - {v}")
         else:
-            print(f"ok   {path} ({n} events)")
+            print(f"ok   {name} ({n} events)")
     return rc
 
 

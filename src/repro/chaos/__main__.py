@@ -50,7 +50,7 @@ def main(argv=None) -> int:
         print(json.dumps(line))
         return 0 if ok else 1
     names = ([args.scenario] if args.scenario
-             else list(scenarios.SCENARIOS))
+             else [*scenarios.SCENARIOS, *scenarios.GROUP_SCENARIOS])
     rc = 0
     for name in names:
         out = scenarios.run_scenario(name, quick=quick, seed=args.seed,

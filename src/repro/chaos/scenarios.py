@@ -119,11 +119,138 @@ def crash_replay_storm(r: int, window: int):
     return build
 
 
+def multi_tenant_interference(quick: bool, seed: int,
+                              trace_dir: Optional[str] = None) -> dict:
+    """Interference under multi-tenancy: a PoolGroup of four same-cohort
+    tenants commits batched waves while tenant 0 is scribbled, put
+    through a quarantined recovery, and the shared scrub scheduler
+    keeps one-pool-per-wave verification pressure on the whole group.
+    The neighbors must (a) end bit-identical to a fault-free reference
+    group run (chaos costs latency, never bytes — for ANY tenant) and
+    (b) keep committing through the victim's quarantine window.  The
+    result carries baseline-vs-interference wave latency for the
+    benchmark tier; the golden check is what campaigns gate on.
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.pool import Fault
+    from repro.runtime import failure
+    from repro.tenancy import PoolGroup
+
+    n = 24 if quick else 60
+    n_t = 4
+    mesh = _mesh((4, 2))
+    cfg = _cfg(window=1)                      # sync: one dispatch/wave
+    step_fn = jax.jit(lambda s, c: {"w": s["w"] * 1.0000001 + c})
+
+    def build_group(tracer=None):
+        grp = PoolGroup(mesh, scrub_page_budget=0,
+                        tracer=tracer if tracer is not None else None)
+        states = {}
+        for t in range(n_t):
+            wl = PoolWorkload(mesh, cfg, n_bytes=1 << 14,
+                              seed=seed + 13 * t)
+            states[f"t{t}"] = wl.pool.state
+            grp.admit(f"t{t}", wl.pool.state, wl.specs, config=cfg)
+        return grp, states
+
+    tracer = None
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        tracer = Tracer(os.path.join(
+            trace_dir, "multi_tenant_interference.trace.jsonl"))
+    grp, states = build_group(tracer)
+    ref, ref_states = build_group()
+
+    def wave(g, st, i, interfere: bool) -> float:
+        ups = {tid: step_fn(g[tid].pool.state,
+                            jax.numpy.float32((i % 7) * 1e-6))
+               for tid in st}
+        t0 = _time.perf_counter()
+        g.commit(ups, data_cursor=i)
+        jax.block_until_ready(g["t1"].pool.prot.state)
+        wall = (_time.perf_counter() - t0) * 1e3
+        if interfere:
+            budget = g["t0"].pool.scrubber.pool_pages
+            g.scrub_tick(page_budget=budget)
+        return wall
+
+    base_ms, intf_ms, recoveries = [], [], []
+    for i in range(n):
+        interfere = n // 3 <= i < 2 * n // 3
+        (intf_ms if interfere else base_ms).append(
+            wave(grp, states, i, interfere))
+        wave(ref, ref_states, i, False)
+        if i == n // 3:
+            # scribble t0 mid-campaign; the quarantined recovery runs
+            # while the other three tenants' traffic keeps flowing
+            grp["t0"].pool.inject(
+                lambda p, pr: failure.inject_scribble(
+                    p, pr, rank=1, word_offsets=range(6)))
+            t_r = _time.perf_counter()
+            rep = grp.recover("t0", Fault.scribble(1, [0]))
+            recoveries.append({
+                "kind": "scribble", "tenant": "t0",
+                "verified": bool(rep.verified),
+                "ms": (_time.perf_counter() - t_r) * 1e3})
+
+    golden = True
+    for tid in states:
+        a = jax.device_get(grp[tid].pool.state)
+        b = jax.device_get(ref[tid].pool.state)
+        golden &= all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    def _pct(xs, q):
+        return float(np.percentile(np.asarray(xs), q)) if xs else None
+
+    rec_ms = [r["ms"] for r in recoveries]
+    # the campaign-standard result shape (benchmarks/chaos.py _row and
+    # the §chaos gate consume it uniformly): clean = waves with no
+    # scrub-storm pressure, during = waves inside the storm+quarantine
+    # interference window
+    out = {
+        "scenario": "multi_tenant_interference",
+        "golden_exact": bool(golden),
+        "steps": n,
+        "events": len(recoveries),
+        "r": cfg.redundancy,
+        "window": cfg.window,
+        "tenants": n_t,
+        "quarantined_during_run": True,
+        "commit_ms": {
+            "clean": {"p50_ms": _pct(base_ms, 50),
+                      "p99_ms": _pct(base_ms, 99)},
+            "during": {"p50_ms": _pct(intf_ms, 50),
+                       "p99_ms": _pct(intf_ms, 99)}},
+        "recovery_ms": {"p50_ms": _pct(rec_ms, 50),
+                        "p99_ms": _pct(rec_ms, 99)},
+        "recoveries": recoveries,
+        "scheduler": grp.scheduler.stats(),
+        "health": grp.health(),
+    }
+    if tracer is not None:
+        out["trace"] = {"path": tracer.path,
+                        "events": len(tracer.events),
+                        "violations": validate_events(tracer.events)}
+        tracer.close()
+    return out
+
+
 SCENARIOS: Dict[str, Callable] = {
     "rescale_under_traffic": rescale_under_traffic,
     "straggler": straggler,
     "midwindow_scribble_loss": midwindow_scribble_loss,
     "budget_exhaust_rearm": budget_exhaust_rearm,
+}
+
+# group scenarios run their own loop (a PoolGroup is not a single-pool
+# workload) but return the same result-dict shape the campaign gates
+GROUP_SCENARIOS: Dict[str, Callable] = {
+    "multi_tenant_interference": multi_tenant_interference,
 }
 
 # the storm matrix is bench-only by default (r x W cells); the four
@@ -161,6 +288,8 @@ def _run(wl, sched, n: int, name: str,
 
 def run_scenario(name: str, *, quick: bool = True, seed: int = 0,
                  trace_dir: Optional[str] = None) -> dict:
+    if name in GROUP_SCENARIOS:
+        return GROUP_SCENARIOS[name](quick, seed, trace_dir)
     wl, sched, n = SCENARIOS[name](quick, seed)
     return _run(wl, sched, n, name, trace_dir)
 
@@ -182,7 +311,7 @@ def campaign(*, quick: bool = True, seed: int = 0,
     """
     results = [run_scenario(name, quick=quick, seed=seed,
                             trace_dir=trace_dir)
-               for name in SCENARIOS]
+               for name in (*SCENARIOS, *GROUP_SCENARIOS)]
     if storms:
         cells = STORM_CELLS[:2] if quick else STORM_CELLS
         results += [run_storm_cell(r, w, quick=quick, seed=seed,

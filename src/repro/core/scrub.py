@@ -91,6 +91,14 @@ class Scrubber:
         self.pages_checked = 0            # checksum-verified (all kinds)
         self.pages_syndrome_verified = 0  # full-row syndrome coverage
         self.last_suspect: Optional[bool] = None
+        # budgeted-scheduler hooks (repro.tenancy.scheduler): commit-age
+        # counters a shared scheduler reads to rank tenants and bound
+        # every tenant's full-scrub age.  `commits_since_check` resets on
+        # ANY verification pass (precheck or full); `commits_since_full`
+        # only on a full scrub — together with `pool_pages` (the page
+        # cost of one pass over this pool) they are the whole interface.
+        self.commits_since_check = 0
+        self.commits_since_full = 0
 
     def coverage(self) -> dict:
         """Exact verification-coverage record (see __init__ notes)."""
@@ -150,6 +158,8 @@ class Scrubber:
         dirty commit resets the clean streak; a long enough streak
         regrows the adaptive window under load."""
         self._since += 1
+        self.commits_since_check += 1
+        self.commits_since_full += 1
         if not clean:
             self._clean_streak = 0
             return
@@ -230,6 +240,7 @@ class Scrubber:
             prot, self.protector.local_scrub(prot), local=True)
         self.n_prechecks += 1
         self.pages_checked += self.pool_pages
+        self.commits_since_check = 0
         self._publish("precheck", report,
                       (time.perf_counter() - t0) * 1e3)
         if self.engine is not None:
@@ -269,6 +280,8 @@ class Scrubber:
         wall_ms = (time.perf_counter() - t0) * 1e3
         self.n_full_scrubs += 1
         self.pages_checked += self.pool_pages
+        self.commits_since_check = 0
+        self.commits_since_full = 0
         if mode.has_parity:
             self.pages_syndrome_verified += self.pool_pages
         self._publish("full", report, wall_ms)

@@ -151,6 +151,73 @@ def fused_commit_old_terms_s(old: jax.Array, new: jax.Array, coeffs=None, *,
 
 
 # ---------------------------------------------------------------------------
+# tenant-batched dispatch (repro.tenancy cohorts)
+# ---------------------------------------------------------------------------
+# A cohort of T same-shape tenants commits through ONE kernel dispatch by
+# folding the leading tenant axis into the block grid: every kernel here
+# is per-block independent (each (block_words,) page produces its own
+# delta / Fletcher pair / verify bit), so a (T, n_blocks, bw) stack
+# reshaped to (T*n_blocks, bw) is bit-identical to T separate calls —
+# the batched entries are pure reshape wrappers, no new kernel code.
+# Outputs come back per-tenant: checksums (T, nb, 2), verify bits
+# (T, nb), and the syndrome-delta stack as (T, r, n_local) rows ready
+# for the tenant-folded `coll.syndrome_apply_delta` collective.
+
+def _tb_split(x: jax.Array) -> tuple:
+    assert x.ndim == 3, f"expected (T, n_blocks, block_words), got {x.shape}"
+    t, nb, bw = x.shape
+    return (t, nb), x.reshape(t * nb, bw)
+
+
+def fletcher_blocks_tb(blocks: jax.Array, *,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    (t, nb), flat = _tb_split(blocks)
+    return fletcher_blocks(flat, interpret=interpret).reshape(t, nb, 2)
+
+
+def fused_commit_s_tb(old: jax.Array, new: jax.Array, coeffs=None, *,
+                      interpret: Optional[bool] = None):
+    (t, nb), old_f = _tb_split(old)
+    _, new_f = _tb_split(new)
+    sdelta, ck = fused_commit_s(old_f, new_f, coeffs, interpret=interpret)
+    r = sdelta.shape[0]
+    return (sdelta.reshape(r, t, -1).swapaxes(0, 1),
+            ck.reshape(t, nb, 2))
+
+
+def fused_verify_commit_s_tb(old: jax.Array, new: jax.Array,
+                             stored: jax.Array, coeffs=None, *,
+                             interpret: Optional[bool] = None):
+    (t, nb), old_f = _tb_split(old)
+    _, new_f = _tb_split(new)
+    sdelta, ck, bad = fused_verify_commit_s(
+        old_f, new_f, stored.reshape(t * nb, -1), coeffs,
+        interpret=interpret)
+    r = sdelta.shape[0]
+    return (sdelta.reshape(r, t, -1).swapaxes(0, 1),
+            ck.reshape(t, nb, 2), bad.reshape(t, nb))
+
+
+def fused_accum_commit_tb(acc: jax.Array, old: jax.Array, new: jax.Array,
+                          *, interpret: Optional[bool] = None):
+    (t, nb), acc_f = _tb_split(acc)
+    _, old_f = _tb_split(old)
+    _, new_f = _tb_split(new)
+    acc_out, delta, ck = fused_accum_commit(acc_f, old_f, new_f,
+                                            interpret=interpret)
+    return (acc_out.reshape(t, nb, -1), delta.reshape(t, nb, -1),
+            ck.reshape(t, nb, 2))
+
+
+def syndrome_scale_tb(delta: jax.Array, coeffs, *,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """(T, n) per-tenant deltas -> (T, r, n) weighted stacks."""
+    t, n = delta.shape
+    stack = syndrome_scale(delta.reshape(-1), coeffs, interpret=interpret)
+    return stack.reshape(stack.shape[0], t, n).swapaxes(0, 1)
+
+
+# ---------------------------------------------------------------------------
 # blockwise double-buffered streaming dispatch
 # ---------------------------------------------------------------------------
 # The streamed variants return the flat outputs PLUS the combined (A, B)

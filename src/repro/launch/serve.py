@@ -38,6 +38,10 @@ def main(argv=None):
     ap.add_argument("--trace-dir", default=None,
                     help="append the pool's JSONL span trace "
                          "(server.trace.jsonl) here")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the live Prometheus scrape endpoint "
+                         "(obs.serve_metrics) on this port for the run "
+                         "(0 = OS-assigned; the bound port is printed)")
     args = ap.parse_args(argv)
 
     if "xla_force_host_platform_device_count" not in os.environ.get(
@@ -67,6 +71,13 @@ def main(argv=None):
                  metrics_dir=args.metrics_dir, trace_dir=args.trace_dir,
                  metrics_every=args.metrics_every)
     srv.start(params)
+    scrape = None
+    if args.metrics_port is not None and srv.pool is not None:
+        from repro import obs
+        scrape = obs.serve_metrics(srv.pool.metrics,
+                                   port=args.metrics_port)
+        print("metrics endpoint: "
+              f"http://127.0.0.1:{scrape.server_address[1]}/metrics")
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab)
     t0 = time.time()
@@ -87,6 +98,8 @@ def main(argv=None):
                                       prefix="server",
                                       stats=srv.pool.stats())
             print(f"metrics: {paths['prom']}")
+    if scrape is not None:
+        scrape.shutdown()
     return 0
 
 

@@ -53,6 +53,10 @@ def main(argv=None):
     ap.add_argument("--trace-dir", default=None,
                     help="append the pool's JSONL span trace "
                          "(trainer.trace.jsonl) here")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the live Prometheus scrape endpoint "
+                         "(obs.serve_metrics) on this port for the run "
+                         "(0 = OS-assigned; the bound port is printed)")
     args = ap.parse_args(argv)
 
     if "xla_force_host_platform_device_count" not in os.environ.get(
@@ -83,6 +87,13 @@ def main(argv=None):
         metrics_dir=args.metrics_dir, trace_dir=args.trace_dir,
         metrics_every=args.metrics_every)
     trainer.initialize()
+    scrape = None
+    if args.metrics_port is not None:
+        from repro import obs
+        scrape = obs.serve_metrics(trainer.pool.metrics,
+                                   port=args.metrics_port)
+        print("metrics endpoint: "
+              f"http://127.0.0.1:{scrape.server_address[1]}/metrics")
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} protect={args.protect} "
           f"overhead={trainer.pool.overhead_report()}")
     outs = trainer.run(args.steps, checkpoint_every=args.ckpt_every)
@@ -98,6 +109,8 @@ def main(argv=None):
                                   prefix="trainer",
                                   stats=trainer.pool.stats())
         print(f"metrics: {paths['prom']}")
+    if scrape is not None:
+        scrape.shutdown()
     return 0
 
 

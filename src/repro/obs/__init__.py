@@ -21,14 +21,15 @@ Entry points on a live pool: `pool.metrics`, `pool.tracer`,
 time) — safe to import before XLA flags are set, like repro itself.
 """
 from repro.obs.health import CRITICAL, DEGRADED, GREEN, HealthReport
-from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                               default_buckets)
+from repro.obs.metrics import (Counter, Gauge, Histogram, LabeledRegistry,
+                               MetricsRegistry, default_buckets)
 from repro.obs.trace import Tracer, load_jsonl, validate_events
-from repro.obs.export import prometheus_text, write_metrics
+from repro.obs.export import prometheus_text, serve_metrics, write_metrics
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_buckets",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "LabeledRegistry",
+    "default_buckets",
     "Tracer", "load_jsonl", "validate_events",
     "HealthReport", "GREEN", "DEGRADED", "CRITICAL",
-    "prometheus_text", "write_metrics",
+    "prometheus_text", "serve_metrics", "write_metrics",
 ]

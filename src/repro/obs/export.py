@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import json
 import os
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 
 from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
@@ -84,3 +86,35 @@ def write_metrics(registry: MetricsRegistry, metrics_dir: str, *,
             json.dump(stats, f, indent=1, default=str)
         out["stats"] = sj
     return out
+
+
+def serve_metrics(registry: MetricsRegistry, port: int = 0,
+                  host: str = "0.0.0.0") -> ThreadingHTTPServer:
+    """Serve `prometheus_text(registry)` over HTTP on a daemon thread.
+
+    This is the live scrape endpoint behind the launchers'
+    --metrics-port flag.  Stdlib-only and jax-free: the handler renders
+    the registry fresh per GET (a dict walk over host floats), so it
+    can run beside a busy commit loop without touching device state.
+    Returns the running server; the bound port is
+    `server.server_address[1]` (pass port=0 to let the OS pick, as the
+    smoke tests do) and `server.shutdown()` stops it.
+    """
+    class _Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            body = prometheus_text(registry).encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):   # quiet: the launcher owns stdout
+            pass
+
+    server = ThreadingHTTPServer((host, port), _Handler)
+    thread = threading.Thread(target=server.serve_forever, daemon=True,
+                              name="metrics-scrape")
+    thread.start()
+    return server

@@ -189,6 +189,18 @@ class MetricsRegistry:
                   **labels) -> Histogram:
         return self._get(name, labels, Histogram, buckets)
 
+    def labeled(self, **labels) -> "LabeledRegistry":
+        """A view of this registry with `labels` bound onto every metric.
+
+        The view quacks like a registry (counter/gauge/histogram/collect/
+        snapshot), so a `Pool` handed `group_registry.labeled(tenant="t3")`
+        publishes every series with a `tenant="t3"` label into the shared
+        parent — per-tenant namespacing without any call-site changes —
+        while `collect()`/`snapshot()` on the view see only that tenant's
+        slice (what the per-tenant `stats()` embeds).
+        """
+        return LabeledRegistry(self, labels)
+
     # -- read side --------------------------------------------------------------
 
     def collect(self) -> Iterable[Tuple[str, dict, object]]:
@@ -207,3 +219,48 @@ class MetricsRegistry:
             else:
                 cell[lkey] = m.summary()
         return out
+
+
+class LabeledRegistry:
+    """Label-binding view over a `MetricsRegistry` (see `labeled`).
+
+    Writes go to the parent with the bound labels merged in (explicit
+    labels win on key collision is deliberately NOT supported: a bound
+    label is an identity, so rebinding it from a call site is a bug and
+    asserts).  Reads (`collect`/`snapshot`) filter the parent down to
+    metrics carrying every bound label and strip those labels from the
+    result, so a tenant's snapshot looks exactly like a private
+    registry's.
+    """
+
+    def __init__(self, base: MetricsRegistry, labels: dict):
+        self.base = base
+        self.labels = {k: str(v) for k, v in labels.items()}
+
+    def _merge(self, labels: dict) -> dict:
+        clash = set(self.labels) & set(labels)
+        assert not clash, f"label(s) {sorted(clash)} already bound"
+        return {**self.labels, **labels}
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self.base.counter(name, **self._merge(labels))
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self.base.gauge(name, **self._merge(labels))
+
+    def histogram(self, name: str,
+                  buckets: Optional[Sequence[float]] = None,
+                  **labels) -> Histogram:
+        return self.base.histogram(name, buckets, **self._merge(labels))
+
+    def labeled(self, **labels) -> "LabeledRegistry":
+        return LabeledRegistry(self.base, self._merge(labels))
+
+    def collect(self) -> Iterable[Tuple[str, dict, object]]:
+        bound = set(self.labels.items())
+        for name, labels, m in self.base.collect():
+            if bound <= set(labels.items()):
+                yield name, {k: v for k, v in labels.items()
+                             if k not in self.labels}, m
+
+    snapshot = MetricsRegistry.snapshot

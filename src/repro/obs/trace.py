@@ -31,28 +31,79 @@ tests and `validate_events` consume.
 from __future__ import annotations
 
 import json
+import os
 import time
 from typing import IO, List, Optional
 
 
 class Tracer:
-    """Append-only structured event stream (host-side, jax-free)."""
+    """Append-only structured event stream (host-side, jax-free).
 
-    def __init__(self, path: Optional[str] = None):
+    With `rotate_lines` / `rotate_bytes`, the JSONL output is rotated
+    into numbered segments (`trace-0001.jsonl`, `trace-0002.jsonl`, …
+    derived from `path`) once a segment reaches either threshold, so a
+    long-soak or multi-tenant run never grows one file unbounded.  A
+    span may begin in one segment and end in the next — segments are a
+    storage artifact, not a semantic boundary — which is why
+    scripts/trace_check.py validates a rotated family as ONE logical
+    event stream.  The in-memory `events` list is unaffected by
+    rotation; `segments` lists the files written so far.
+    """
+
+    def __init__(self, path: Optional[str] = None, *,
+                 rotate_lines: Optional[int] = None,
+                 rotate_bytes: Optional[int] = None):
+        assert rotate_lines is None or rotate_lines > 0
+        assert rotate_bytes is None or rotate_bytes > 0
         self.path = path
+        self.rotate_lines = rotate_lines
+        self.rotate_bytes = rotate_bytes
+        self.segments: List[str] = []
         self.events: List[dict] = []
         self._next_id = 0
         self._t0 = time.perf_counter()
         self._fh: Optional[IO] = None
+        self._seg_lines = 0
+        self._seg_bytes = 0
         if path is not None:
-            self._fh = open(path, "a", buffering=1)   # line-buffered
+            self._fh = open(self._target(), "a", buffering=1)  # line-buffered
+
+    @property
+    def _rotating(self) -> bool:
+        return self.rotate_lines is not None or self.rotate_bytes is not None
+
+    def _target(self) -> str:
+        if not self._rotating:
+            self.segments.append(self.path)
+            return self.path
+        stem, ext = os.path.splitext(self.path)
+        seg = f"{stem}-{len(self.segments) + 1:04d}{ext or '.jsonl'}"
+        self.segments.append(seg)
+        return seg
+
+    def _maybe_rotate(self, line_bytes: int) -> None:
+        if not (self._rotating and self._seg_lines > 0):
+            return
+        full = ((self.rotate_lines is not None
+                 and self._seg_lines >= self.rotate_lines)
+                or (self.rotate_bytes is not None
+                    and self._seg_bytes + line_bytes > self.rotate_bytes))
+        if full:
+            self._fh.close()
+            self._fh = open(self._target(), "a", buffering=1)
+            self._seg_lines = 0
+            self._seg_bytes = 0
 
     # -- emission ---------------------------------------------------------------
 
     def _write(self, event: dict) -> dict:
         self.events.append(event)
         if self._fh is not None:
-            self._fh.write(json.dumps(event) + "\n")
+            line = json.dumps(event) + "\n"
+            self._maybe_rotate(len(line))
+            self._fh.write(line)
+            self._seg_lines += 1
+            self._seg_bytes += len(line)
         return event
 
     def _fresh(self, ev: str, kind: str, fields: dict) -> dict:

@@ -252,7 +252,8 @@ class Pool(EngineHost):
                  on_resume: Optional[Callable] = None,
                  straggler_policy: Optional[StragglerPolicy] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 protector: Optional[Protector] = None):
         self.config = config if config is not None else ProtectConfig()
         self.mesh = mesh
         self.abstract_state = abstract_state
@@ -277,14 +278,28 @@ class Pool(EngineHost):
                              straggler_policy=straggler_policy,
                              metrics=self.metrics, tracer=self.tracer)
         mode = self.config.resolved_mode
-        self.protector = Protector(
-            mesh, abstract_state, state_specs, data_axis=data_axis,
-            mode=mode, redundancy=self.config.resolved_redundancy,
-            block_words=self.config.block_words,
-            hybrid_threshold=self.config.hybrid_threshold,
-            log_capacity=self.config.log_capacity,
-            stream_threshold_words=self.config.stream_threshold_words,
-            stream_chunk_words=self.config.stream_chunk_words)
+        if protector is not None:
+            # cohort sharing (repro.tenancy): same-shape pools on the
+            # same mesh+config hand in one Protector so they share its
+            # layout and `_jit_cache` — N tenants compile each commit /
+            # scrub / recovery program once, not N times.  The caller
+            # owns the compatibility claim; the cheap invariants are
+            # asserted.
+            assert protector.mesh is mesh, \
+                "shared protector must be built on this pool's mesh"
+            assert protector.mode is mode and \
+                protector.redundancy == self.config.resolved_redundancy, \
+                "shared protector's mode/redundancy must match config"
+            self.protector = protector
+        else:
+            self.protector = Protector(
+                mesh, abstract_state, state_specs, data_axis=data_axis,
+                mode=mode, redundancy=self.config.resolved_redundancy,
+                block_words=self.config.block_words,
+                hybrid_threshold=self.config.hybrid_threshold,
+                log_capacity=self.config.log_capacity,
+                stream_threshold_words=self.config.stream_threshold_words,
+                stream_chunk_words=self.config.stream_chunk_words)
         self._due_scrubs = 0          # full_scrub_every cadence counter
         # footprint arguments may be callables of the built zone layout
         # (e.g. lambda lo: range(len(lo.slots))) so callers need not

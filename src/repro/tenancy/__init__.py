@@ -1,0 +1,20 @@
+"""Multi-tenant plane over the Pool facade.
+
+`PoolGroup` hosts many protected pools at once: same-shape same-config
+tenants share one `Cohort` (one Protector, one jit cache) and commit
+through batched compiled programs — N tenants per dispatch instead of
+N dispatches — while a shared `ScrubScheduler` spreads verification
+pressure across tenants under a global page budget and `QoSClass`
+presets map tenants onto the protection ladder.  See group.py for the
+full design notes.
+"""
+from repro.tenancy.group import (Cohort, PoolGroup, TenantHandle,
+                                 cohort_key)
+from repro.tenancy.qos import BRONZE, GOLD, PRESETS, SILVER, QoSClass
+from repro.tenancy.scheduler import ScrubScheduler
+
+__all__ = [
+    "PoolGroup", "TenantHandle", "Cohort", "cohort_key",
+    "QoSClass", "GOLD", "SILVER", "BRONZE", "PRESETS",
+    "ScrubScheduler",
+]

@@ -1,0 +1,817 @@
+"""Multi-tenant `PoolGroup` — many pools, one dispatch.
+
+A serving host protects many small model/cache pools at once.  Running
+them as N independent `Pool`s costs N compiled-program dispatches per
+commit wave and N copies of every compiled program; this module layers
+a tenancy plane over the Pool facade that collapses both:
+
+  * **Cohorts.** Tenants whose (state signature x specs x config) match
+    share one `Cohort`: ONE `Protector` (so one zone layout and one
+    `_jit_cache` — commit/scrub/recovery programs compile once for the
+    whole cohort, the `protector=` kwarg Pool grew for exactly this)
+    and, for deferred engines, one shared engine jit dict.
+  * **Batched commit programs.** A commit wave over a cohort's tenants
+    runs ONE jitted program: the per-tenant rows are stacked *inside*
+    the traced computation, the fused verify/commit kernels dispatch
+    once over the (T·n_blocks, block_words) page grid (`kernels.ops`
+    `_tb` wrappers — per-block kernels, so the reshape is bit-exact),
+    and the r-syndrome collectives of all T tenants fold into a single
+    (T·r)-row batched all-to-all.  Per-tenant verdicts, redo-log
+    appends and `ProtectedState`s come back out, bit-identical to T
+    sequential `pool.commit` calls (tests/test_tenancy.py pins this
+    across engines and redundancies) — N tenants cost one dispatch
+    instead of N.
+  * **Shared scrub scheduler** (`tenancy/scheduler.py`): verification
+    pressure round-robins across tenants under a global page budget,
+    weighted by QoS class, starvation-free.
+  * **Admission control.** `capacity` bounds the tenant count; at
+    capacity, `admit` either refuses or evicts the least-recently
+    committed tenant (flush-before-evict: the victim's open window
+    lands and its final state is returned to the caller).
+  * **Quarantined recovery.** `group.recover(tid, fault)` quarantines
+    only the faulted tenant — the rest of the group keeps committing
+    (quarantined tenants are excluded from batched rosters and their
+    updates are rejected) — runs the tenant's own recovery, and lifts
+    the quarantine on success.  A failed recovery (budget exhausted)
+    leaves the tenant quarantined.
+
+Scope of the batched fast path: the bulk engines only — synchronous
+bulk commits (no `dirty_pages`) and bulk deferred steps/flushes, on
+parity/checksum modes.  Patch commits (static dirty footprints), modes
+without parity+checksums, tenants with arrival hooks, and every rare
+operation (scrub, precheck, recover, rescale, inject) route through
+the tenant's own `Pool` — which shares the cohort `Protector`, so even
+the looped paths compile once per cohort.  The batched programs use
+the flat `_tb` kernels regardless of row size (the streamed variants
+are bit-identical per kernels/ops.py, so verdicts and bytes still
+match a streaming single pool).
+
+Telemetry: the group owns one `MetricsRegistry` and one `Tracer`; each
+tenant's Pool publishes through `registry.labeled(tenant=tid)`, so
+every pool metric rides a `tenant=` Prometheus label and a tenant's
+own view filters to its slice.  Group-level events (admit / evict /
+quarantine) land in the shared trace with tenant ids attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ProtectConfig
+from repro.core import checksum as ck
+from repro.core import gf
+from repro.core import layout as layout_mod
+from repro.core import redolog
+from repro.core.epoch import EpochState
+from repro.core.txn import ProtectedState, Protector, tree_select
+from repro.dist import collectives as coll
+from repro.kernels import ops as kops
+from repro.obs import health as obs_health
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.pool import Fault, Pool, _is_abstract
+from repro.tenancy.qos import QoSClass
+from repro.tenancy.scheduler import ScrubScheduler
+
+PyTree = Any
+U32 = jnp.uint32
+
+
+def _spec_leaf(x):
+    return isinstance(x, P)
+
+
+def cohort_key(abstract_state: PyTree, state_specs: PyTree,
+               config: ProtectConfig, data_axis: str) -> tuple:
+    """Tenants sharing this key share a Protector and commit programs:
+    same leaf shapes/dtypes + treedef, same sharding, same config —
+    exactly the inputs that determine a zone layout and its programs."""
+    leaves, treedef = jax.tree.flatten(abstract_state)
+    sig = tuple((tuple(l.shape), str(jnp.dtype(l.dtype))) for l in leaves)
+    specs = tuple(str(s) for s in jax.tree.leaves(
+        state_specs, is_leaf=_spec_leaf))
+    return (treedef, sig, specs, config, data_axis)
+
+
+@dataclasses.dataclass
+class TenantHandle:
+    """The group's per-tenant record.  `pool` is a full `Pool` (sharing
+    its cohort's Protector) — every single-tenant operation is available
+    on it directly; the group only owns batching, scheduling, admission
+    and quarantine."""
+    tenant_id: str
+    pool: Pool
+    cohort: "Cohort"
+    qos: Optional[QoSClass]
+    weight: int
+    last_used: int = 0
+
+
+class Cohort:
+    """Same-shape x same-config tenants: one Protector, batched programs."""
+
+    def __init__(self, mesh, abstract_state: PyTree, state_specs: PyTree,
+                 config: ProtectConfig, *, data_axis: str = "data",
+                 name: str = "c0"):
+        self.name = name
+        self.config = config
+        mode = config.resolved_mode
+        self.protector = Protector(
+            mesh, abstract_state, state_specs, data_axis=data_axis,
+            mode=mode, redundancy=config.resolved_redundancy,
+            block_words=config.block_words,
+            hybrid_threshold=config.hybrid_threshold,
+            log_capacity=config.log_capacity,
+            stream_threshold_words=config.stream_threshold_words,
+            stream_chunk_words=config.stream_chunk_words)
+        self.members: Dict[str, Pool] = {}     # insertion order = roster
+        self._cache: dict = {}                 # batched program cache
+        # deferred engines of this cohort share one jit dict: their
+        # step/flush closures only read protector-derived statics, which
+        # are identical cohort-wide, so the first engine to compile
+        # serves them all.  `donate` is the one per-engine flag baked
+        # into those programs — the first member pins it and a mismatch
+        # opts out of sharing (engine_donate below).
+        self.engine_jit: dict = {}
+        self.engine_donate: Optional[bool] = None
+
+    # -- batching eligibility ---------------------------------------------
+
+    def batchable(self, pool: Pool) -> bool:
+        mode = self.protector.mode
+        if not (mode.has_parity or mode.has_cksums):
+            return False
+        if pool._arrival_fn is not None:       # chaos hook: loop path
+            return False
+        if pool.engine is not None and pool.engine.patch:
+            return False                       # patch engines: loop path
+        return True
+
+    # -- batched synchronous commit ---------------------------------------
+
+    def _sync_program(self, t: int, verify_old: bool):
+        """One compiled commit for T tenants (synchronous engines).
+
+        Mirrors `Protector.make_commit`'s bulk path with a leading
+        tenant axis: stack rows, dispatch the fused kernels once over
+        (T·nb, bw), fold all T syndrome stacks into one (T·r)-row
+        collective, select per tenant on its own verdict.  The canary
+        verdicts ride in as a traced (T,) vector, exactly like the
+        single program's traced `canary_ok` scalar — one compiled
+        program serves every abort pattern.
+        """
+        key = ("sync", t, verify_old)
+        if key in self._cache:
+            return self._cache[key]
+        p = self.protector
+        lo, ax, mode, r = p.layout, p.data_axis, p.mode, p.redundancy
+        bw, nb, seg = lo.block_words, lo.n_blocks, lo.seg_words
+        cc = p.coll_chunks()
+        z = p._zone_spec
+        n_axes = p.n_axes
+
+        def _protect(row_caches, synds, cksums, digests, states_old,
+                     states_new, canary_ok):
+            coeffs = (gf.rank_syndrome_coeffs(p.group_size, r, ax)
+                      if r > 1 else None)
+            # with verify_old the old rows re-flatten from the live
+            # states (a scribble lives in the state; a clean cache
+            # would launder it) — exactly the single program's choice
+            rows_old = jnp.stack([
+                layout_mod.flatten_row(lo, s) if verify_old
+                else p._unpack(rc)
+                for s, rc in zip(states_old, row_caches)])     # (T, rw)
+            rows_new = jnp.stack([layout_mod.flatten_row(lo, s)
+                                  for s in states_new])        # (T, rw)
+            dig_l = jnp.stack([p._unpack(d) for d in digests])  # (T, 2)
+            synd_l = (jnp.stack([p._unpack(s) for s in synds])
+                      if mode.has_parity else None)        # (T, r, seg)
+            cks_l = (jnp.stack([p._unpack(c) for c in cksums])
+                     if mode.has_cksums else None)         # (T, nb, 2)
+            pages_new = rows_new.reshape(t, nb, bw)
+            ok = canary_ok                                     # (T,)
+            new_synd, new_cks = synd_l, cks_l
+            if verify_old and mode.has_cksums:
+                sdelta, fresh, bad = kops.fused_verify_commit_s_tb(
+                    rows_old.reshape(t, nb, bw), pages_new, cks_l,
+                    coeffs)
+                # per-tenant _zone_clean: pmin over the data axis is
+                # elementwise on the (T,) verdict vector
+                ok = jnp.logical_and(
+                    ok, jnp.logical_not(jnp.any(bad, axis=1)))
+                ok = lax.pmin(ok.astype(jnp.int32), ax) > 0
+                if mode.has_parity:
+                    # T syndrome stacks fold into ONE (T·r)-row batched
+                    # all-to-all — each row rides independently, so the
+                    # fold is bit-identical to T separate collectives
+                    new_synd = coll.syndrome_apply_delta(
+                        synd_l.reshape(t * r, seg),
+                        sdelta.reshape(t * r, -1), ax,
+                        chunks=cc).reshape(t, r, seg)
+            else:
+                fresh = kops.fletcher_blocks_tb(pages_new)
+                if mode.has_parity:
+                    # rebuild-from-new as apply-onto-zeros: XOR is
+                    # exact/associative, so 0 ^ rs(weighted new rows)
+                    # equals build_syndromes(row_new) bit-for-bit
+                    sdelta = kops.syndrome_scale_tb(rows_new, coeffs)
+                    new_synd = coll.syndrome_apply_delta(
+                        jnp.zeros((t * r, seg), U32),
+                        sdelta.reshape(t * r, -1), ax,
+                        chunks=cc).reshape(t, r, seg)
+            if mode.has_cksums:
+                new_cks = fresh
+            new_dig = jax.vmap(lambda c: ck.combine(c, bw))(fresh)
+            outs = {"ok": ok,
+                    "row": p._pack(jnp.where(ok[:, None], rows_new,
+                                             rows_old)),
+                    "digest": p._pack(jnp.where(ok[:, None], new_dig,
+                                                dig_l))}
+            if mode.has_parity:
+                outs["synd"] = p._pack(jnp.where(ok[:, None, None],
+                                                 new_synd, synd_l))
+            if mode.has_cksums:
+                outs["cksums"] = p._pack(jnp.where(ok[:, None, None],
+                                                   new_cks, cks_l))
+            return outs
+
+        out_specs = {"ok": P(), "row": z, "digest": z}
+        if mode.has_parity:
+            out_specs["synd"] = z
+        if mode.has_cksums:
+            out_specs["cksums"] = z
+        protect = p._smap(
+            _protect,
+            in_specs=((z,) * t, (z,) * t, (z,) * t, (z,) * t,
+                      (p.state_specs,) * t, (p.state_specs,) * t, P()),
+            out_specs=out_specs)
+
+        def commit_b(prots, states_new, data_cursors, rng_keys,
+                     canaries):
+            canaries = jnp.asarray(canaries, bool)
+            outs = protect(tuple(pr.row for pr in prots),
+                           tuple(pr.synd for pr in prots),
+                           tuple(pr.cksums for pr in prots),
+                           tuple(pr.digest for pr in prots),
+                           tuple(pr.state for pr in prots),
+                           tuple(states_new), canaries)
+            ok_all = outs["ok"]                            # (T,)
+            new_prots, oks = [], []
+            for i, pr in enumerate(prots):
+                ok = ok_all[i]
+                oks.append(ok)
+                step = pr.step + U32(1)
+
+                def sl(name, _i=i):
+                    return lax.index_in_dim(outs[name], _i, axis=n_axes,
+                                            keepdims=False)
+
+                new_digest = sl("digest")
+                log = pr.log
+                if mode.has_log:
+                    rk = rng_keys[i]
+                    if rk is None:
+                        rk = jax.random.PRNGKey(0)
+                    log = redolog.append(pr.log, step, data_cursors[i],
+                                         rk, new_digest.reshape(-1, 2)[0])
+                    log = tree_select(ok, redolog.commit_mark(log, step),
+                                      log)
+                new_prots.append(ProtectedState(
+                    state=tree_select(ok, states_new[i], pr.state),
+                    synd=sl("synd") if mode.has_parity else pr.synd,
+                    cksums=sl("cksums") if mode.has_cksums else pr.cksums,
+                    digest=new_digest, replica=pr.replica, log=log,
+                    step=jnp.where(ok, step, pr.step), row=sl("row")))
+            # per-tenant ok scalars split INSIDE the program: indexing
+            # the (T,) verdict on the host would dispatch one eager
+            # gather per tenant — pure host overhead per wave
+            return tuple(new_prots), tuple(oks)
+
+        self._cache[key] = jax.jit(commit_b, donate_argnums=(0,))
+        return self._cache[key]
+
+    def commit_sync(self, items: list, *, verify_old: bool = False) -> dict:
+        """Batched commit for synchronous-engine tenants.
+
+        `items`: [(tid, state_new, canary_ok, data_cursor, rng_key)] in
+        roster order.  Returns {tid: device ok}.  Canary-aborted tenants
+        still get their redo record appended (mark unset) and their
+        state untouched — exactly the single program's abort semantics.
+        """
+        t0 = time.perf_counter()
+        tids = [it[0] for it in items]
+        pools = [self.members[tid] for tid in tids]
+        canaries = tuple(bool(it[2]) for it in items)
+        prog = self._sync_program(len(items), bool(verify_old))
+        new_prots, oks = prog(
+            tuple(pool._prot for pool in pools),
+            tuple(it[1] for it in items),
+            tuple(it[3] for it in items),
+            tuple(it[4] for it in items),
+            np.asarray(canaries, bool))
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        out = {}
+        for i, (tid, pool) in enumerate(zip(tids, pools)):
+            pool._prot = new_prots[i]
+            self._bookkeep(pool, canaries[i], wall_ms / len(items))
+            out[tid] = oks[i]
+        return out
+
+    # -- batched deferred step + flush -------------------------------------
+
+    def _step_program(self, t: int, canaries: tuple):
+        """One compiled in-window step for T bulk deferred tenants.
+
+        Mirrors `DeferredProtector.make_step_commit`'s bulk branch with
+        a leading tenant axis; canary-aborted tenants are compiled as
+        pure pass-throughs (the single engine's static no-op), so only
+        the live tenants ride the stacked kernel.
+        """
+        key = ("step", t, canaries)
+        if key in self._cache:
+            return self._cache[key]
+        p = self.protector
+        lo, ax, mode = p.layout, p.data_axis, p.mode
+        bw, nb = lo.block_words, lo.n_blocks
+        z = p._zone_spec
+        n_axes = p.n_axes
+        live = tuple(i for i in range(t) if canaries[i])
+        tl = len(live)
+
+        def _step(accs, row_caches, states_new):
+            rows_new = jnp.stack([layout_mod.flatten_row(lo, s)
+                                  for s in states_new])        # (Tl, rw)
+            old_v = jnp.stack([p._unpack(rc)
+                               for rc in row_caches]).reshape(tl, nb, bw)
+            acc_v = jnp.stack([p._unpack(a)
+                               for a in accs]).reshape(tl, nb, bw)
+            acc_v, _, new_ck = kops.fused_accum_commit_tb(
+                acc_v, old_v, rows_new.reshape(tl, nb, bw))
+            new_dig = jax.vmap(lambda c: ck.combine(c, bw))(new_ck)
+            outs = {"row": p._pack(rows_new),
+                    "acc": p._pack(acc_v.reshape(tl, -1)),
+                    "digest": p._pack(new_dig)}
+            if mode.has_cksums:
+                outs["cksums"] = p._pack(new_ck)
+            return outs
+
+        out_specs = {"row": z, "acc": z, "digest": z}
+        if mode.has_cksums:
+            out_specs["cksums"] = z
+        protect = p._smap(
+            _step,
+            in_specs=((z,) * tl, (z,) * tl, (p.state_specs,) * tl),
+            out_specs=out_specs)
+
+        def step_b(prots, pendings, accs, states_new, data_cursors,
+                   rng_keys):
+            outs = (protect(tuple(accs[i] for i in live),
+                            tuple(prots[i].row for i in live),
+                            tuple(states_new[i] for i in live))
+                    if live else None)
+            new = []
+            for i in range(t):
+                pr = prots[i]
+                if not canaries[i]:
+                    new.append((pr, pendings[i], accs[i],
+                                jnp.zeros((), bool)))
+                    continue
+                j = live.index(i)
+
+                def sl(name, _j=j):
+                    return lax.index_in_dim(outs[name], _j, axis=n_axes,
+                                            keepdims=False)
+
+                step = pr.step + U32(1)
+                new_digest = sl("digest")
+                log = pr.log
+                if mode.has_log:
+                    rk = rng_keys[i]
+                    if rk is None:
+                        rk = jax.random.PRNGKey(0)
+                    # deferred ordering: the record persists per step
+                    # and is marked unconditionally (canary aborts were
+                    # short-circuited statically above)
+                    log = redolog.append(pr.log, step, data_cursors[i],
+                                         rk, new_digest.reshape(-1, 2)[0])
+                    log = redolog.commit_mark(log, step)
+                new_prot = ProtectedState(
+                    state=states_new[i], synd=pr.synd,
+                    cksums=sl("cksums") if mode.has_cksums else pr.cksums,
+                    digest=new_digest, replica=pr.replica, log=log,
+                    step=step, row=sl("row"))
+                new.append((new_prot, pendings[i] + U32(1), sl("acc"),
+                            jnp.ones((), bool)))
+            prots_o, pend_o, accs_o, oks = zip(*new)
+            return tuple(prots_o), tuple(pend_o), tuple(accs_o), \
+                tuple(oks)
+
+        self._cache[key] = jax.jit(step_b, donate_argnums=(0, 1, 2))
+        return self._cache[key]
+
+    def _flush_program(self, tf: int):
+        """One compiled epoch flush for Tf bulk deferred tenants: all
+        accumulators weight into their syndrome stacks through one
+        (Tf·r)-row batched collective (`make_flush`'s bulk branch)."""
+        key = ("flush", tf)
+        if key in self._cache:
+            return self._cache[key]
+        p = self.protector
+        lo, ax, mode, r = p.layout, p.data_axis, p.mode, p.redundancy
+        seg = lo.seg_words
+        cc = p.coll_chunks()
+        z = p._zone_spec
+        n_axes = p.n_axes
+
+        def _flush(synds, accs):
+            acc_l = jnp.stack([p._unpack(a) for a in accs])    # (Tf, rw)
+            outs = {"acc": p._pack(jnp.zeros_like(acc_l))}
+            if mode.has_parity:
+                coeffs = (gf.rank_syndrome_coeffs(p.group_size, r, ax)
+                          if r > 1 else None)
+                synd_l = jnp.stack([p._unpack(s) for s in synds])
+                sdelta = kops.syndrome_scale_tb(acc_l, coeffs)
+                outs["synd"] = p._pack(coll.syndrome_apply_delta(
+                    synd_l.reshape(tf * r, seg),
+                    sdelta.reshape(tf * r, -1), ax,
+                    chunks=cc).reshape(tf, r, seg))
+            return outs
+
+        out_specs = {"acc": z}
+        if mode.has_parity:
+            out_specs["synd"] = z
+        fn = p._smap(_flush, in_specs=((z,) * tf, (z,) * tf),
+                     out_specs=out_specs)
+
+        def flush_b(prots, accs):
+            outs = fn(tuple(pr.synd for pr in prots), tuple(accs))
+            new_prots, new_accs = [], []
+            for i, pr in enumerate(prots):
+
+                def sl(name, _i=i):
+                    return lax.index_in_dim(outs[name], _i, axis=n_axes,
+                                            keepdims=False)
+
+                new_prots.append(dataclasses.replace(
+                    pr, synd=sl("synd") if mode.has_parity else pr.synd))
+                new_accs.append(sl("acc"))
+            return tuple(new_prots), tuple(new_accs)
+
+        self._cache[key] = jax.jit(flush_b, donate_argnums=(0, 1))
+        return self._cache[key]
+
+    def commit_deferred(self, items: list) -> dict:
+        """Batched commit for bulk deferred-engine tenants.
+
+        One stacked step program, then ONE stacked flush over exactly
+        the tenants whose windows came due — per-tenant host
+        bookkeeping (`_since`, adaptive window, flush metrics, meta
+        mirror, scrub cadence) mirrors `DeferredProtector.commit` +
+        `Pool.commit` in their exact order.
+        """
+        t0 = time.perf_counter()
+        tids = [it[0] for it in items]
+        pools = [self.members[tid] for tid in tids]
+        canaries = tuple(bool(it[2]) for it in items)
+        prog = self._step_program(len(items), canaries)
+        ests = [pool._est for pool in pools]
+        prots, pendings, accs, oks = prog(
+            tuple(e.prot for e in ests),
+            tuple(e.pending for e in ests),
+            tuple(e.acc for e in ests),
+            tuple(it[1] for it in items),
+            tuple(it[3] for it in items),
+            tuple(it[4] for it in items))
+        due = []
+        for i, pool in enumerate(pools):
+            pool._est = EpochState(prot=prots[i], dirty=None,
+                                   pending=pendings[i], acc=accs[i])
+            # the host cadence counts every commit — aborts included —
+            # exactly like DeferredProtector.commit's unconditional
+            # `_since += 1`
+            eng = pool.engine
+            eng._since += 1
+            if eng._since >= eng.window:
+                due.append(i)
+        if due:
+            fprog = self._flush_program(len(due))
+            d_ests = [pools[i]._est for i in due]
+            f_prots, f_accs = fprog(tuple(e.prot for e in d_ests),
+                                    tuple(e.acc for e in d_ests))
+            for j, i in enumerate(due):
+                eng = pools[i].engine
+                pending = eng._since
+                eng._since = 0
+                if eng.metrics is not None:
+                    eng.metrics.counter("pool_window_flush_total").inc()
+                    eng.metrics.histogram(
+                        "pool_flush_pending").observe(pending)
+                pools[i]._est = EpochState(
+                    prot=f_prots[j], dirty=None,
+                    pending=jnp.zeros((), U32), acc=f_accs[j])
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        out = {}
+        for i, (tid, pool) in enumerate(zip(tids, pools)):
+            if pool.engine.replicate_meta:
+                pool.engine._mirror_meta(pool._est)
+            self._bookkeep(pool, canaries[i], wall_ms / len(items))
+            out[tid] = oks[i]
+        return out
+
+    # -- shared per-tenant post-commit bookkeeping -------------------------
+
+    @staticmethod
+    def _bookkeep(pool: Pool, canary_ok: bool, wall_ms: float) -> None:
+        """`Pool.commit`'s host bookkeeping, in its exact order."""
+        pool.scrubber.on_commit(clean=bool(canary_ok))
+        pool._m_commits.inc()
+        if not canary_ok:
+            pool._m_aborted.inc()
+        pool._m_commit_ms.observe(wall_ms)
+
+
+class PoolGroup:
+    """The multi-tenant front door: admit / commit / scrub_tick /
+    recover / evict / rescale over a fleet of cohort-sharing pools."""
+
+    def __init__(self, mesh, *, capacity: int = 0,
+                 evict_on_full: bool = True, data_axis: str = "data",
+                 scrub_page_budget: int = 0, full_scrub_every: int = 4,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
+        assert capacity >= 0, capacity
+        self.mesh = mesh
+        self.capacity = int(capacity)          # 0 = unbounded
+        self.evict_on_full = bool(evict_on_full)
+        self.data_axis = data_axis
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.scheduler = ScrubScheduler(page_budget=scrub_page_budget,
+                                        full_every=full_scrub_every)
+        self._cohorts: Dict[tuple, Cohort] = {}
+        self._tenants: Dict[str, TenantHandle] = {}
+        self._quarantined: set = set()
+        self._clock = 0
+        self._m_admit = self.metrics.counter("group_admissions_total")
+        self._m_evict = self.metrics.counter("group_evictions_total")
+        self._m_batches = self.metrics.counter(
+            "group_commit_batches_total")
+        self._m_rejected = self.metrics.counter(
+            "group_commit_rejected_total")
+
+    # -- membership --------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    def __contains__(self, tid) -> bool:
+        return tid in self._tenants
+
+    def __getitem__(self, tid) -> TenantHandle:
+        return self._tenants[tid]
+
+    @property
+    def tenants(self) -> Tuple[str, ...]:
+        return tuple(self._tenants)
+
+    @property
+    def quarantined(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._quarantined))
+
+    @property
+    def cohorts(self) -> Tuple[Cohort, ...]:
+        return tuple(self._cohorts.values())
+
+    def admit(self, tid: str, state: PyTree, specs: PyTree, *,
+              config: Optional[ProtectConfig] = None,
+              qos: Optional[QoSClass] = None,
+              weight: Optional[int] = None, **open_kw) -> TenantHandle:
+        """Admit a tenant (the multi-tenant `pgl_open`).
+
+        `state` may be concrete or a ShapeDtypeStruct pytree (a cold
+        tenant — call `handle.pool.init(state)` later).  The protection
+        config comes from `config`, else the QoS class, else defaults;
+        the QoS weight feeds the scrub scheduler.  At capacity the
+        least-recently-committed tenant is evicted (flush-before-evict)
+        when `evict_on_full`, otherwise admission raises.
+        """
+        if tid in self._tenants:
+            raise ValueError(f"tenant {tid!r} already admitted")
+        if self.capacity and len(self._tenants) >= self.capacity:
+            if not self.evict_on_full:
+                raise RuntimeError(
+                    f"group at capacity ({self.capacity} tenants) and "
+                    "evict_on_full=False — evict explicitly or raise "
+                    "capacity")
+            victims = [t for t in self._tenants
+                       if t not in self._quarantined]
+            if not victims:
+                raise RuntimeError(
+                    "group at capacity with every tenant quarantined — "
+                    "nothing is safely evictable")
+            self.evict(min(victims,
+                           key=lambda t: self._tenants[t].last_used))
+        if config is None:
+            config = (qos.config if qos is not None else ProtectConfig())
+        abstract = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), state)
+        key = cohort_key(abstract, specs, config, self.data_axis)
+        cohort = self._cohorts.get(key)
+        if cohort is None:
+            cohort = Cohort(self.mesh, abstract, specs, config,
+                            data_axis=self.data_axis,
+                            name=f"c{len(self._cohorts)}")
+            self._cohorts[key] = cohort
+        pool = Pool(self.mesh, abstract, specs, config,
+                    data_axis=self.data_axis,
+                    metrics=self.metrics.labeled(tenant=str(tid)),
+                    tracer=self.tracer,
+                    protector=cohort.protector, **open_kw)
+        if pool.engine is not None:
+            if cohort.engine_donate is None:
+                cohort.engine_donate = pool.engine.donate
+            if pool.engine.donate == cohort.engine_donate:
+                pool.engine._jit = cohort.engine_jit
+        if not _is_abstract(state):
+            pool.init(state)
+        cohort.members[tid] = pool
+        w = int(weight if weight is not None
+                else (qos.weight if qos is not None else 1))
+        handle = TenantHandle(tenant_id=tid, pool=pool, cohort=cohort,
+                              qos=qos, weight=w)
+        self._tenants[tid] = handle
+        self.scheduler.register(tid, pool, weight=w)
+        self._clock += 1
+        handle.last_used = self._clock
+        self._m_admit.inc()
+        self.metrics.gauge("group_tenants").set(len(self._tenants))
+        self.tracer.emit("tenant_admit", tenant=str(tid),
+                         cohort=cohort.name,
+                         qos=qos.name if qos is not None else None)
+        return handle
+
+    def evict(self, tid: str) -> PyTree:
+        """Remove a tenant, flushing its open window first; returns its
+        final (redundancy-current) state for the caller to persist."""
+        handle = self._tenants.pop(tid)
+        handle.pool.flush()                    # flush-before-evict
+        state = handle.pool.state
+        del handle.cohort.members[tid]
+        self.scheduler.unregister(tid)
+        self._quarantined.discard(tid)
+        self._m_evict.inc()
+        self.metrics.gauge("group_tenants").set(len(self._tenants))
+        self.tracer.emit("tenant_evict", tenant=str(tid))
+        return state
+
+    # -- commit ------------------------------------------------------------
+
+    def commit(self, updates: Dict[str, PyTree], *,
+               canary_ok=True, data_cursor=0, rng_keys=None,
+               batched: bool = True, verify_old: bool = False) -> dict:
+        """Commit a wave of per-tenant updates; returns {tid: verdict}.
+
+        Tenants are grouped by cohort; each cohort's batchable members
+        commit through ONE stacked program (sync or deferred by the
+        cohort's window), the rest loop through their own `pool.commit`
+        — verdicts and bytes are identical either way (`batched=False`
+        forces the loop, which is the benchmark baseline).  `canary_ok`
+        is a bool or a {tid: bool} dict; quarantined tenants' updates
+        are rejected with a host `False` verdict.
+        """
+        self._clock += 1
+        rng_keys = rng_keys or {}
+        out: dict = {}
+
+        def canary(tid):
+            return (canary_ok.get(tid, True)
+                    if isinstance(canary_ok, dict) else canary_ok)
+
+        for tid in updates:
+            if tid not in self._tenants:
+                raise KeyError(f"unknown tenant {tid!r}")
+            if tid in self._quarantined:
+                out[tid] = False
+                self._m_rejected.inc()
+            else:
+                self._tenants[tid].last_used = self._clock
+        for cohort in self._cohorts.values():
+            items, loop = [], []
+            for tid, pool in cohort.members.items():
+                if tid not in updates or tid in self._quarantined:
+                    continue
+                it = (tid, updates[tid], canary(tid), data_cursor,
+                      rng_keys.get(tid))
+                if batched and cohort.batchable(pool):
+                    items.append(it)
+                else:
+                    loop.append(it)
+            if len(items) == 1:
+                loop += items
+                items = []
+            if items:
+                self._m_batches.inc()
+                if cohort.config.window > 1:
+                    out.update(cohort.commit_deferred(items))
+                else:
+                    out.update(cohort.commit_sync(
+                        items, verify_old=verify_old))
+            for tid, state_new, can, dc, rk in loop:
+                pool = cohort.members[tid]
+                # verify_old is a synchronous-engine feature; Pool.commit
+                # asserts on it for deferred pools
+                vkw = ({"verify_old": verify_old}
+                       if pool.engine is None else {})
+                out[tid] = pool.commit(
+                    state_new, canary_ok=can, data_cursor=dc,
+                    rng_key=rk, **vkw)
+        return out
+
+    # -- scrub / recover / rescale ----------------------------------------
+
+    def scrub_tick(self, page_budget: Optional[int] = None) -> list:
+        """One shared-scheduler pass: serve scrub/precheck pressure by
+        QoS-weighted commit age under the global page budget."""
+        return self.scheduler.tick(page_budget)
+
+    def recover(self, tid: str, fault: Fault, **kw):
+        """Quarantined recovery: only the faulted tenant stops taking
+        commits; the rest of the group keeps going.  Re-raises the
+        tenant's recovery error (budget exhausted) with the tenant left
+        quarantined; lifts the quarantine on success."""
+        handle = self._tenants[tid]
+        self._quarantined.add(tid)
+        self.scheduler.set_quarantined(tid, True)
+        self.metrics.counter("group_quarantines_total").inc()
+        self.tracer.emit("tenant_quarantine", tenant=str(tid),
+                         fault_kind=fault.kind)
+        rep = handle.pool.recover(fault, **kw)
+        self._quarantined.discard(tid)
+        self.scheduler.set_quarantined(tid, False)
+        self.tracer.emit("tenant_unquarantine", tenant=str(tid))
+        return rep
+
+    def release(self, tid: str) -> None:
+        """Lift a quarantine manually (after an out-of-band repair,
+        e.g. `handle.pool.init` re-arm following a budget exhaust)."""
+        self._quarantined.discard(tid)
+        self.scheduler.set_quarantined(tid, False)
+
+    def rescale(self, new_mesh) -> "PoolGroup":
+        """Move every tenant to `new_mesh`; returns the new group.
+
+        Tenants re-admit into fresh cohorts built for the new zone
+        geometry and each pool reshards through `Pool.rescale` (flush →
+        bit-exact reshard → re-protect).  The metric registry and trace
+        are shared, so tenant labels survive the move."""
+        new = PoolGroup(
+            new_mesh, capacity=self.capacity,
+            evict_on_full=self.evict_on_full, data_axis=self.data_axis,
+            scrub_page_budget=self.scheduler.page_budget,
+            full_scrub_every=self.scheduler.full_every,
+            metrics=self.metrics, tracer=self.tracer)
+        for tid, handle in self._tenants.items():
+            cold = new.admit(tid, handle.pool.abstract_state,
+                             handle.pool.state_specs,
+                             config=handle.pool.config, qos=handle.qos,
+                             weight=handle.weight)
+            handle.pool.rescale(new_mesh, into=cold.pool)
+        return new
+
+    # -- telemetry ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "tenants": len(self._tenants),
+            "cohorts": {c.name: sorted(c.members)
+                        for c in self._cohorts.values()},
+            "quarantined": sorted(self._quarantined),
+            "scheduler": self.scheduler.stats(),
+            "per_tenant": {tid: h.pool.stats()
+                           for tid, h in self._tenants.items()},
+        }
+
+    def health(self) -> dict:
+        """Worst-of aggregation over tenant health, plus per-tenant
+        reports: a group is only as healthy as its sickest tenant (a
+        quarantined tenant is at least degraded)."""
+        rank = {obs_health.GREEN: 0, obs_health.DEGRADED: 1,
+                obs_health.CRITICAL: 2}
+        per = {tid: h.pool.health()
+               for tid, h in self._tenants.items()}
+        worst = obs_health.GREEN
+        for tid, rep in per.items():
+            status = rep.status
+            if tid in self._quarantined and rank[status] < 1:
+                status = obs_health.DEGRADED
+            if rank[status] > rank[worst]:
+                worst = status
+        return {"status": worst, "per_tenant": per,
+                "quarantined": sorted(self._quarantined)}

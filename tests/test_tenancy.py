@@ -1,0 +1,324 @@
+"""Multi-tenant PoolGroup (repro/tenancy): the batched commit programs
+must be bit-identical to N independent Pools across engines and
+redundancies (including canary aborts and the redo log), eviction
+flushes the open window before handing the state back, recovery
+quarantines only the faulted tenant, the shared scrub scheduler is
+starvation-free under skewed weights and a page budget, QoS classes key
+cohorts, and every pool metric rides a tenant= label in the group
+registry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ProtectConfig
+from repro.pool import Fault, Pool
+from repro.runtime import failure
+from repro.tenancy import BRONZE, GOLD, SILVER, PoolGroup
+from tests.conftest import small_state
+
+
+@pytest.fixture(scope="module")
+def setup(mesh42):
+    state, specs, shardings = small_state(mesh42)
+    return mesh42, state, specs
+
+
+def _evolve(cur, k=0):
+    return jax.tree.map(
+        lambda x: (x * (1.01 + 0.001 * k) + 0.003).astype(x.dtype), cur)
+
+
+def _tstate(state, t):
+    """Per-tenant distinct initial state (same shapes -> same cohort)."""
+    return _evolve(state, 7 * t + 1)
+
+
+def _assert_prot_equal(pa, pb, msg=""):
+    for f in ("synd", "digest", "row", "cksums", "step"):
+        a, b = getattr(pa, f), getattr(pb, f)
+        if a is None or b is None:
+            assert a is None and b is None, (msg, f)
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{msg}:{f}")
+    for f in ("step", "data_cursor", "rng", "digest", "mark"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(pa.log, f)),
+            np.asarray(getattr(pb.log, f)), err_msg=f"{msg}:log.{f}")
+
+
+# -- batched == N independent pools, engines x redundancies -------------------
+
+@pytest.mark.parametrize("window,red", [(1, 1), (1, 3), (4, 1), (4, 3)])
+def test_group_commit_bit_identical(setup, window, red):
+    """ISSUE acceptance: a PoolGroup commit wave over one cohort — ONE
+    batched dispatch — must land the exact bytes N sequential
+    `pool.commit` calls land: syndromes, checksums, digest, row cache,
+    step counters and the redo log (records AND marks), through both
+    engines, with a mid-run canary abort exercising the select paths."""
+    mesh, state, specs = setup
+    cfg = ProtectConfig(mode="mlpc", redundancy=red, window=window,
+                        block_words=64)
+    grp = PoolGroup(mesh)
+    n = 3
+    for t in range(n):
+        grp.admit(f"t{t}", _tstate(state, t), specs, config=cfg)
+    refs = [Pool.open(_tstate(state, t), specs, mesh=mesh, config=cfg,
+                      donate=False) for t in range(n)]
+    assert len(grp.cohorts) == 1      # same shape x config: one cohort
+
+    curs = [_tstate(state, t) for t in range(n)]
+    for i in range(2 * window + 1):
+        for t in range(n):
+            curs[t] = _evolve(curs[t], i)
+        ups = {f"t{t}": curs[t] for t in range(n)}
+        # one tenant aborts mid-run: its state must not move while its
+        # neighbors' commits land in the same batched dispatch
+        can = {f"t{t}": not (i == 1 and t == 1) for t in range(n)}
+        keys = {f"t{t}": jax.random.PRNGKey(100 * t + i)
+                for t in range(n)}
+        oks = grp.commit(ups, canary_ok=can, data_cursor=i,
+                         rng_keys=keys)
+        for t in range(n):
+            ok_ref = refs[t].commit(
+                curs[t], canary_ok=can[f"t{t}"], data_cursor=i,
+                rng_key=jax.random.PRNGKey(100 * t + i))
+            assert (bool(jax.device_get(oks[f"t{t}"]))
+                    == bool(jax.device_get(ok_ref)))
+    for t in range(n):
+        _assert_prot_equal(grp[f"t{t}"].pool.prot, refs[t].prot,
+                           msg=f"w{window} r{red} t{t}")
+    # the wave really was batched: one group dispatch per commit wave
+    assert grp.metrics.counter("group_commit_batches_total").value \
+        == 2 * window + 1
+
+
+def test_group_commit_verify_old_and_looped_fallback(setup):
+    """verify_old rides the batched verify kernels bit-identically; and
+    `batched=False` (the benchmark baseline) lands the same bytes
+    through the per-tenant loop."""
+    mesh, state, specs = setup
+    cfg = ProtectConfig(mode="mlpc", redundancy=2, block_words=64)
+    grp = PoolGroup(mesh)
+    grp_loop = PoolGroup(mesh)
+    refs = []
+    for t in range(2):
+        grp.admit(f"t{t}", _tstate(state, t), specs, config=cfg)
+        grp_loop.admit(f"t{t}", _tstate(state, t), specs, config=cfg)
+        refs.append(Pool.open(_tstate(state, t), specs, mesh=mesh,
+                              config=cfg, donate=False))
+    curs = [_tstate(state, t) for t in range(2)]
+    for i in range(3):
+        for t in range(2):
+            curs[t] = _evolve(curs[t], i)
+        ups = {f"t{t}": curs[t] for t in range(2)}
+        grp.commit(ups, data_cursor=i, verify_old=True)
+        grp_loop.commit(ups, data_cursor=i, verify_old=True,
+                        batched=False)
+        for t in range(2):
+            refs[t].commit(curs[t], data_cursor=i, verify_old=True)
+    for t in range(2):
+        _assert_prot_equal(grp[f"t{t}"].pool.prot, refs[t].prot,
+                           msg=f"batched t{t}")
+        _assert_prot_equal(grp_loop[f"t{t}"].pool.prot, refs[t].prot,
+                           msg=f"looped t{t}")
+    assert grp_loop.metrics.counter(
+        "group_commit_batches_total").value == 0
+
+
+# -- scrub + recover bit-identity, quarantine isolation -----------------------
+
+def test_group_scrub_and_recover_bit_identical(setup):
+    """Scheduler-driven scrubs and quarantined recovery route through
+    the tenant's own Pool (cohort-shared programs): the post-scrub and
+    post-recovery protection must equal an independent pool's, and the
+    faulted tenant's neighbors must come through recovery untouched."""
+    mesh, state, specs = setup
+    cfg = ProtectConfig(mode="mlpc", redundancy=2, block_words=64)
+    grp = PoolGroup(mesh, full_scrub_every=1)   # every serve = full
+    n = 3
+    for t in range(n):
+        grp.admit(f"t{t}", _tstate(state, t), specs, config=cfg)
+    ref = Pool.open(_tstate(state, 1), specs, mesh=mesh, config=cfg,
+                    donate=False)
+    curs = [_tstate(state, t) for t in range(n)]
+    for i in range(2):
+        for t in range(n):
+            curs[t] = _evolve(curs[t], i)
+        grp.commit({f"t{t}": curs[t] for t in range(n)}, data_cursor=i,
+                   rng_keys={f"t{t}": jax.random.PRNGKey(100 * t + i)
+                             for t in range(n)})
+        ref.commit(curs[1], data_cursor=i,
+                   rng_key=jax.random.PRNGKey(100 + i))
+
+    served = grp.scrub_tick()
+    assert {tid for tid, _, _ in served} == {f"t{t}" for t in range(n)}
+    assert all(kind == "full" and not rep.suspect
+               for _, kind, rep in served)
+    _, ref_rep = ref.scrubber.run(ref.prot)
+    assert not ref_rep.suspect
+    _assert_prot_equal(grp["t1"].pool.prot, ref.prot, msg="post-scrub")
+
+    # same rank loss injected into the group tenant and the reference
+    grp["t1"].pool.inject(
+        lambda p, pr: failure.inject_rank_loss(p, pr, 2))
+    ref.inject(lambda p, pr: failure.inject_rank_loss(p, pr, 2))
+    before = {t: np.asarray(grp[f"t{t}"].pool.prot.row)
+              for t in (0, 2)}
+    rep = grp.recover("t1", Fault.rank_loss(2))
+    ref_rep = ref.recover(Fault.rank_loss(2))
+    assert rep.verified and ref_rep.verified
+    _assert_prot_equal(grp["t1"].pool.prot, ref.prot,
+                       msg="post-recovery")
+    assert grp.quarantined == ()      # lifted on success
+    for t in (0, 2):                  # neighbors never touched
+        np.testing.assert_array_equal(
+            np.asarray(grp[f"t{t}"].pool.prot.row), before[t])
+
+
+def test_quarantine_rejects_commits_until_release(setup):
+    """A failed (budget-exhausted) recovery leaves the tenant
+    quarantined: its commits are rejected host-side while neighbors
+    keep committing in the same wave; `release` (after a re-arm)
+    restores it."""
+    mesh, state, specs = setup
+    cfg = ProtectConfig(mode="mlpc", redundancy=1, block_words=64)
+    grp = PoolGroup(mesh)
+    for t in range(2):
+        grp.admit(f"t{t}", _tstate(state, t), specs, config=cfg)
+    with pytest.raises(RuntimeError, match="budget exhausted"):
+        grp.recover("t0", Fault.multi_loss(0, 1))   # e=2 > r=1
+    assert grp.quarantined == ("t0",)
+    assert grp.health()["status"] != "green"
+
+    curs = {f"t{t}": _evolve(_tstate(state, t)) for t in range(2)}
+    oks = grp.commit(curs)
+    assert oks["t0"] is False                       # host rejection
+    assert bool(jax.device_get(oks["t1"]))          # neighbor lands
+    assert grp.metrics.counter(
+        "group_commit_rejected_total").value == 1
+    step0 = int(jax.device_get(grp["t0"].pool.prot.step))
+
+    grp["t0"].pool.init(curs["t0"])                 # re-arm
+    grp.release("t0")
+    oks = grp.commit({"t0": _evolve(curs["t0"])})
+    assert bool(jax.device_get(oks["t0"]))
+    assert int(jax.device_get(grp["t0"].pool.prot.step)) == step0 + 1
+
+
+# -- admission / eviction -----------------------------------------------------
+
+def test_eviction_flushes_open_window_lru(setup):
+    """At capacity the least-recently-committed tenant is evicted; the
+    victim's open deferred window is flushed first (its returned state
+    carries current redundancy — a clean precheck proves it)."""
+    mesh, state, specs = setup
+    cfg = ProtectConfig(mode="mlpc", redundancy=1, window=4,
+                        block_words=64)
+    grp = PoolGroup(mesh, capacity=2)
+    grp.admit("a", _tstate(state, 0), specs, config=cfg)
+    grp.admit("b", _tstate(state, 1), specs, config=cfg)
+    # one in-window commit each -> both windows open; then touch "a" so
+    # "b" is the LRU victim
+    grp.commit({"a": _evolve(_tstate(state, 0)),
+                "b": _evolve(_tstate(state, 1))})
+    grp.commit({"a": _evolve(_tstate(state, 0), 1)})
+    hb = grp["b"]
+    assert hb.pool.engine._since == 1               # window open
+    grp.admit("c", _tstate(state, 2), specs, config=cfg)
+    assert "b" not in grp and "a" in grp and "c" in grp
+    assert hb.pool.engine._since == 0               # flushed on evict
+    assert not hb.pool.precheck().suspect           # redundancy current
+    assert grp.metrics.counter("group_evictions_total").value == 1
+
+    strict = PoolGroup(mesh, capacity=1, evict_on_full=False)
+    strict.admit("x", _tstate(state, 0), specs, config=cfg)
+    with pytest.raises(RuntimeError, match="capacity"):
+        strict.admit("y", _tstate(state, 1), specs, config=cfg)
+
+
+# -- shared scrub scheduler ---------------------------------------------------
+
+def test_scheduler_starvation_free_under_budget_and_weights(setup):
+    """Under a one-pool-per-tick page budget and skewed QoS weights,
+    every tenant is still served within a bounded number of ticks (the
+    additive aging term), and the full-scrub cadence bounds every
+    tenant's commits-since-full-scrub."""
+    mesh, state, specs = setup
+    cfg = ProtectConfig(mode="mlpc", redundancy=1, block_words=64)
+    pages = None
+    grp = PoolGroup(mesh, full_scrub_every=2)
+    n = 3
+    for t in range(n):
+        grp.admit(f"t{t}", _tstate(state, t), specs, config=cfg,
+                  weight=(8 if t == 0 else 1))      # t0 hogs priority
+        pages = grp[f"t{t}"].pool.scrubber.pool_pages
+    served_kinds = {f"t{t}": set() for t in range(n)}
+    max_age = 0
+    for round_ in range(4 * n):
+        # keep t0's commit pressure maximal every round
+        grp.commit({f"t{t}": _evolve(_tstate(state, t), round_)
+                    for t in range(n)})
+        for tid, kind, rep in grp.scrub_tick(page_budget=pages):
+            served_kinds[tid].add(kind)
+            assert not rep.suspect
+        max_age = max(max_age, grp.scheduler.max_check_age())
+    # starvation-freedom: every tenant's wait is bounded despite t0's
+    # x8 weight — everyone gets BOTH cadences and the check age never
+    # exceeds the aging-term bound
+    for t in range(n):
+        assert served_kinds[f"t{t}"] == {"precheck", "full"}, \
+            f"t{t} starved: {served_kinds}"
+    assert max_age <= 2 * n + 1
+    stats = grp.scheduler.stats()
+    assert stats["pages_spent"] == stats["passes"] * pages
+    # quarantined tenants drop out of scheduling entirely
+    grp.scheduler.set_quarantined("t0", True)
+    assert "t0" not in {tid for tid, _, _ in grp.scrub_tick()}
+
+
+# -- QoS classes + cohort keying ---------------------------------------------
+
+def test_qos_classes_key_cohorts(setup):
+    """Same shape + same QoS class -> one cohort (one shared Protector,
+    one batched program); a different class or config -> its own
+    cohort.  QoS weight feeds the scheduler."""
+    mesh, state, specs = setup
+    grp = PoolGroup(mesh)
+    a = grp.admit("a", _tstate(state, 0), specs, qos=GOLD)
+    b = grp.admit("b", _tstate(state, 1), specs, qos=GOLD)
+    c = grp.admit("c", _tstate(state, 2), specs, qos=BRONZE)
+    assert a.cohort is b.cohort and a.cohort is not c.cohort
+    assert a.pool.protector is b.pool.protector
+    assert a.pool.redundancy == 3 and a.pool.engine is None  # gold: sync
+    assert c.pool.engine is not None and c.pool.engine.window == 8
+    assert grp.scheduler._tenants["a"].weight == GOLD.weight
+    # derived class stays in-tier but re-keys the cohort
+    d = grp.admit("d", _tstate(state, 3), specs,
+                  qos=SILVER.configure(block_words=64))
+    assert d.cohort not in (a.cohort, c.cohort)
+    assert len(grp.cohorts) == 3
+
+
+def test_tenant_metric_labels(setup):
+    """Every pool metric in the group registry rides a tenant= label,
+    and a tenant's labeled view filters to its own slice."""
+    mesh, state, specs = setup
+    cfg = ProtectConfig(mode="mlpc", redundancy=1, block_words=64)
+    grp = PoolGroup(mesh)
+    for t in range(2):
+        grp.admit(f"t{t}", _tstate(state, t), specs, config=cfg)
+    grp.commit({f"t{t}": _evolve(_tstate(state, t)) for t in range(2)})
+    for t in range(2):
+        assert grp.metrics.counter(
+            "pool_commits_total", tenant=f"t{t}").value == 1
+        view = grp[f"t{t}"].pool.metrics
+        names = {name for name, _, _ in view.collect()}
+        assert "pool_commits_total" in names
+    snap = grp.metrics.snapshot()
+    assert any("tenant=t0" in lkey
+               for lkey in snap.get("pool_commits_total", {}))
+    st = grp.stats()
+    assert st["tenants"] == 2 and st["per_tenant"]["t0"]["commits"] == 1
+    assert grp.health()["status"] == "green"
