@@ -1,0 +1,141 @@
+"""Async commit pipeline benchmark (BENCH_commit.json §async).
+
+The depth sweep: one synchronous-engine mlpc r=2 pool per ring depth
+d in {1, 2, 4, 8} (all sharing ONE Protector, so every depth runs the
+very same compiled commit program — the A/B isolates resolution
+policy, not compile luck).  Each rep times a burst of N chained
+commits (state t+1 is computed from state t by a jitted update, so
+the device chain is real) followed by a `drain()`:
+
+  * depth 1 resolves every verdict before the next dispatch — the
+    host blocks for the full commit program N times (the classic
+    resolve-per-commit loop).
+  * depth d > 1 dispatches up to d commits ahead of resolution; the
+    host's dispatch work (program launch, ticket bookkeeping) overlaps
+    the device's in-flight commit programs, and verdicts resolve as
+    their scalars land.
+
+Reps interleave across all depths (one rep = one burst per depth,
+back to back) so ambient load cancels; the wall medians give
+commits/s per depth, and each pool's `pool_commit_resolve_ms`
+histogram gives the resolve-latency tail the ring introduces.  The
+gate checks the structural direction — best depth >= 4 aggregate
+commits/s at least depth=1's — plus a resolve-p99 pathology bound;
+bit-identity of the drained pipeline against the synchronous engine
+is tests/test_pipeline.py's job, so this file measures only wall.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+DEPTHS = (1, 2, 4, 8)
+
+
+def _build_pools(mesh, cfg_base, state_bytes, protector=None):
+    import dataclasses
+
+    import jax
+
+    from repro.pool import Pool
+
+    state, specs = common.state_of_bytes(state_bytes, mesh)
+    pools = {}
+    for d in DEPTHS:
+        cfg = dataclasses.replace(cfg_base, pipeline_depth=d)
+        # donate=False: the burst re-reads pool.state per commit
+        pool = Pool.open(jax.tree.map(lambda x: x + np.float32(0), state),
+                         specs, mesh=mesh, config=cfg, donate=False,
+                         protector=protector)
+        protector = pool.protector
+        pools[d] = pool
+    return pools
+
+
+def _burst(pool, step_fn, n_commits) -> float:
+    import jax
+    import jax.numpy as jnp
+
+    t0 = time.perf_counter()
+    for i in range(n_commits):
+        pool.commit_async(step_fn(pool.state, jnp.float32(i * 1e-6)))
+    pool.drain()
+    jax.block_until_ready(pool.prot.state)
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ProtectConfig
+
+    mesh = common.get_mesh(4, 2)
+    state_bytes = (1 << 15) if quick else (1 << 17)
+    n_commits = 8 if quick else 16
+    reps = 3 if quick else 6
+    cfg = ProtectConfig(mode="mlpc", redundancy=2, window=1,
+                        scrub_period=0)
+    step_fn = jax.jit(
+        lambda s, c: jax.tree.map(
+            lambda x: x * jnp.float32(1.0000001) + c, s))
+
+    # warm the shared commit program on a scratch pool FIRST, so no
+    # measured pool's resolve histogram carries compile wall; the
+    # measured pools (built after, sharing the warmed Protector) then
+    # get one tiny burst each for their own ticket/drain plumbing
+    from repro.pool import Pool
+    state, specs = common.state_of_bytes(state_bytes, mesh)
+    scratch = Pool.open(state, specs, mesh=mesh, config=cfg,
+                        donate=False)
+    for _ in range(3):
+        _burst(scratch, step_fn, 2)
+    pools = _build_pools(mesh, cfg, state_bytes,
+                         protector=scratch.protector)
+    for pool in pools.values():
+        _burst(pool, step_fn, 2)
+
+    walls = {d: [] for d in DEPTHS}
+    for _ in range(reps):                      # interleaved A/B
+        for d, pool in pools.items():
+            walls[d].append(_burst(pool, step_fn, n_commits))
+
+    rows = []
+    for d, pool in pools.items():
+        med = float(np.median(walls[d]))
+        rs = pool.metrics.histogram("pool_commit_resolve_ms").summary()
+        rows.append({
+            "depth": d,
+            "commits": n_commits,
+            "state_B": state_bytes,
+            "wall_ms": med * 1e3,
+            "commits_per_s": n_commits / med,
+            "resolve_p50_ms": rs["p50"],
+            "resolve_p99_ms": rs["p99"],
+            "reps": reps,
+        })
+    base = rows[0]["commits_per_s"]
+    for r in rows:
+        r["speedup_vs_depth1"] = r["commits_per_s"] / base
+
+    common.print_table(
+        "async commit pipeline: ring depth sweep (sync mlpc r=2)",
+        rows, ["depth", "wall_ms", "commits_per_s",
+               "speedup_vs_depth1", "resolve_p50_ms", "resolve_p99_ms"])
+    out = {"depths": rows}
+    common.save_result("async_pipeline", out)
+    return out
+
+
+if __name__ == "__main__":
+    import os
+
+    if "--xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8")
+    run(quick=True)

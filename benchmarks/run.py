@@ -25,7 +25,7 @@ import traceback
 
 BENCHES = ["storage_overhead", "txn_latency", "commit_sweep", "deferred",
            "scalability", "app_kv", "scrub_freq", "recovery", "roofline",
-           "chaos", "obs_overhead", "tenancy"]
+           "chaos", "obs_overhead", "tenancy", "async_pipeline"]
 
 
 def emit_commit_json(txn_result: dict, quick: bool, path: str,
@@ -35,7 +35,8 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
                      roofline_result: dict = None,
                      chaos_result: dict = None,
                      obs_result: dict = None,
-                     tenancy_result: dict = None) -> None:
+                     tenancy_result: dict = None,
+                     async_result: dict = None) -> None:
     """Write the per-PR commit-latency record (BENCH_commit.json).
 
     Distills txn_latency down to the commit hot path (overwrite latency
@@ -99,6 +100,12 @@ def emit_commit_json(txn_result: dict, quick: bool, path: str,
         payload["tenancy"] = {
             "throughput": tenancy_result["throughput"],
             "interference": tenancy_result["interference"]}
+    if async_result and async_result.get("depths"):
+        # §async: the commit-ring depth sweep — commits/s + resolve
+        # tail per depth over one shared compiled program (gate:
+        # record-presence, best depth>=4 commits/s >= depth=1
+        # structural, resolve-p99 wall pathology)
+        payload["async"] = {"depths": async_result["depths"]}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"commit benchmark record -> {path}")
@@ -137,7 +144,8 @@ def main():
                          roofline_result=results.get("roofline"),
                          chaos_result=results.get("chaos"),
                          obs_result=results.get("obs_overhead"),
-                         tenancy_result=results.get("tenancy"))
+                         tenancy_result=results.get("tenancy"),
+                         async_result=results.get("async_pipeline"))
     print("\n" + "=" * 70)
     for name, s in status.items():
         print(f"{name:20s} {s}")

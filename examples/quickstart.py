@@ -8,6 +8,8 @@ Pangolin's three-call API (paper Listing 2):
     pgl_open            ->  Pool.open(state, specs, mesh=..., config=...)
     pgl_tx_begin/commit ->  with pool.transaction() as tx: tx.stage(new)
     pgl_tx_abort        ->  canary mismatch inside the context
+    async commit (FliT) ->  pool.commit_async(new) -> CommitTicket;
+                            pool.drain() at any boundary
     SIGBUS handler      ->  pool.recover(Fault.rank_loss(r))
     scrubbing thread    ->  pool.scrub() / pool.maybe_scrub()
 
@@ -135,4 +137,26 @@ assert np.array_equal(
     np.asarray(grp["alice"].pool.state["w_fsdp"]),
     np.asarray(updates["alice"]["w_fsdp"]))
 print(f"pool group: {len(grp)} tenants, 1 cohort, batched commit ok")
+
+# 9. async commit pipeline: `commit_async` returns a CommitTicket — a
+#    future over the commit program's device verdict — and up to
+#    `ProtectConfig.pipeline_depth` commits stay in flight at once, so
+#    the host dispatches commit t+k while the device still runs commit
+#    t.  Verdicts resolve out of dispatch order (`poll`), and `drain()`
+#    at any boundary lands the pipeline bit-identical to synchronous
+#    commits (flush / scrub / recover all drain first, automatically).
+apool = Pool.open(make_state(5), specs, mesh=mesh,
+                  config=ProtectConfig(mode="mlpc", block_words=64,
+                                       pipeline_depth=4))
+tickets = []
+cur = make_state(5)
+for i in range(4):
+    cur = jax.tree.map(lambda x: (x * 1.01).astype(x.dtype), cur)
+    tickets.append(apool.commit_async(cur, data_cursor=i))
+print(f"async: {apool.in_flight} commits in flight")
+apool.drain()
+assert all(t.result() for t in tickets)          # every verdict landed
+lat = apool.stats()["commit_resolve_ms"]
+print(f"async: drained, resolve p99={lat['p99']:.2f} ms "
+      f"(span id of last dispatch: {tickets[-1].span_id})")
 print("all quickstart checks passed")

@@ -272,6 +272,48 @@ def check(fresh: dict, base: dict, wall_tol: float,
             bad.append(f"tenancy.throughput{key}: batched_ms "
                        f"{row['batched_ms']} vs baseline "
                        f"{ref['batched_ms']} (> {1 + wall_tol:.1f}x)")
+    # -- §async: commit-ring depth sweep ---------------------------------------
+    fas = _index(fresh.get("async", {}).get("depths", []), ("depth",))
+    bas = _index(base.get("async", {}).get("depths", []), ("depth",))
+    if bas and not fas:
+        bad.append("async: record missing from fresh run (the commit-"
+                   "ring depth sweep is no longer measured)")
+    if fas:
+        d1 = fas.get((1,))
+        deep = [r for (d,), r in fas.items() if d >= 4]
+        if d1 is None or not deep:
+            bad.append("async: the depth sweep needs a depth=1 row and "
+                       "at least one depth>=4 row")
+        else:
+            # structural: the ring must pay for itself — the best
+            # depth >= 4 configuration's aggregate commits/s at least
+            # the resolve-per-commit baseline's.  The depths interleave
+            # rep-by-rep in the SAME run over the SAME Protector
+            # (shared compiled commit program), so ambient load cancels
+            # and the ordering is the pipelining claim itself.
+            best = max(r["commits_per_s"] for r in deep)
+            if not best >= d1["commits_per_s"]:
+                bad.append(
+                    f"async: best depth>=4 throughput {best:.0f} "
+                    f"commits/s below depth=1 "
+                    f"{d1['commits_per_s']:.0f} — the commit ring "
+                    "lost to resolve-per-commit")
+    for key, row in fas.items():
+        ref = bas.get(key)
+        # wall: resolve-latency tail gates as pathology catch-all only
+        # (the ring trades per-commit resolve latency for throughput
+        # by design; only a hang-class blowup should trip)
+        if (ref and row.get("resolve_p99_ms") and ref.get("resolve_p99_ms")
+                and row["resolve_p99_ms"]
+                > ref["resolve_p99_ms"] * (1 + wall_tol)):
+            bad.append(f"async{key}: resolve_p99_ms "
+                       f"{row['resolve_p99_ms']} vs baseline "
+                       f"{ref['resolve_p99_ms']} (> {1 + wall_tol:.1f}x)")
+        if ref and row["wall_ms"] > ref["wall_ms"] * (1 + wall_tol):
+            bad.append(f"async{key}: wall_ms {row['wall_ms']} vs "
+                       f"baseline {ref['wall_ms']} "
+                       f"(> {1 + wall_tol:.1f}x)")
+
     fint = ften.get("interference")
     if fint:
         # wall: the scrub storm on one tenant may cost scrub time,
@@ -329,6 +371,7 @@ def main():
           f"{len(fresh.get('obs', {}).get('bytes', []))} obs cells, "
           f"{len(fresh.get('tenancy', {}).get('throughput', []))} "
           "tenancy cells, "
+          f"{len(fresh.get('async', {}).get('depths', []))} async cells, "
           f"wall tol {args.wall_tol}, bytes tol {args.bytes_tol})")
     return 0
 

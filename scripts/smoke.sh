@@ -38,9 +38,9 @@ python scripts/trace_check.py --dir "$TRACE_DIR"
 rm -rf "$TRACE_DIR"
 
 if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== perf: commit latency + recovery + chaos + obs + tenancy (quick) =="
+    echo "== perf: commit latency + recovery + chaos + obs + tenancy + async (quick) =="
     python -m benchmarks.run --quick \
-        --only txn_latency,commit_sweep,deferred,recovery,roofline,chaos,obs_overhead,tenancy \
+        --only txn_latency,commit_sweep,deferred,recovery,roofline,chaos,obs_overhead,tenancy,async_pipeline \
         --commit-json BENCH_commit.fresh.json
     echo "== perf: bench gate =="
     python scripts/bench_gate.py

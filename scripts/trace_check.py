@@ -17,9 +17,17 @@ in one segment and end in the next, so the segments of one family are
 concatenated (in index order) and validated as ONE logical event
 stream.  Unrotated files are validated individually, as before.
 
+With `--prom METRICS.prom`, the OpenMetrics exemplar suffixes the
+exporter attaches to histogram buckets (` # {span_id="N"} value`) are
+cross-checked against the traces: every exemplar's span id must exist
+as an event id in the trace stream, so a p99 commit sample in the
+metrics surface always links back to a real dispatch span — a dangling
+exemplar means the metrics and trace planes disagree about what ran.
+
 Usage:
     python scripts/trace_check.py TRACE.jsonl [...]
     python scripts/trace_check.py --dir TRACE_DIR    # every *.jsonl
+    python scripts/trace_check.py --dir TRACE_DIR --prom METRICS.prom
 
 Exit 0 = every trace valid; exit 1 = violations (printed per file).
 This module is jax-free (repro.obs imports no jax), so it runs anywhere
@@ -38,6 +46,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.obs.trace import load_jsonl, validate_events  # noqa: E402
 
 _SEGMENT = re.compile(r"^(?P<stem>.+)-(?P<idx>\d{4})(?P<ext>\.jsonl)$")
+_EXEMPLAR = re.compile(r'#\s*\{span_id="(?P<id>[^"]+)"\}')
 
 
 def group_segments(paths: list) -> list:
@@ -83,11 +92,45 @@ def check_file(path: str) -> list:
     return check_files([path])
 
 
+def check_exemplars(prom_path: str, trace_paths: list) -> list:
+    """Cross-check exporter exemplars against the trace id space.
+
+    Every ` # {span_id="N"}` suffix in the .prom text must name an id
+    that exists as a trace event id; returns violations (empty = ok).
+    A .prom with zero exemplar suffixes is itself a violation when this
+    check was requested — it means the p99 sample lost its span link.
+    """
+    try:
+        with open(prom_path) as f:
+            text = f.read()
+    except OSError as e:
+        return [f"unreadable {prom_path}: {e}"]
+    span_ids = [m.group("id") for m in _EXEMPLAR.finditer(text)]
+    if not span_ids:
+        return [f"{prom_path}: no exemplar suffixes found"]
+    known = set()
+    for path in trace_paths:
+        try:
+            for e in load_jsonl(path):
+                if e.get("id") is not None:
+                    known.add(str(e["id"]))
+        except Exception as e:
+            return [f"unreadable {path}: {e}"]
+    bad = []
+    for sid in span_ids:
+        if sid not in known:
+            bad.append(f"exemplar span_id={sid!r} matches no trace event")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="trace_check")
     ap.add_argument("paths", nargs="*", help="trace .jsonl files")
     ap.add_argument("--dir", default=None,
                     help="validate every *.jsonl under this directory")
+    ap.add_argument("--prom", default=None,
+                    help="also cross-check this OpenMetrics text file's "
+                         "exemplar span ids against the trace event ids")
     args = ap.parse_args(argv)
 
     paths = list(args.paths)
@@ -107,6 +150,15 @@ def main(argv=None) -> int:
                 print(f"  - {v}")
         else:
             print(f"ok   {name} ({n} events)")
+    if args.prom:
+        violations = check_exemplars(args.prom, paths)
+        if violations:
+            rc = 1
+            print(f"FAIL {args.prom} (exemplar linkage)")
+            for v in violations:
+                print(f"  - {v}")
+        else:
+            print(f"ok   {args.prom} (exemplar linkage)")
     return rc
 
 

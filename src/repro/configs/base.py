@@ -134,6 +134,13 @@ class ProtectConfig:
     log_capacity: int = 64
     overlap_commit: bool = False      # dispatch step t+1 before awaiting
                                       # epoch t's protection program
+    pipeline_depth: int = 1           # async commit ring: up to this many
+                                      # commits stay in flight with
+                                      # unresolved verdicts (commit t+k
+                                      # dispatches before t resolves);
+                                      # 1 = resolve-per-commit.  The
+                                      # runtimes fold overlap_commit into
+                                      # an effective depth >= 2
     window: int = 1                   # deferred-epoch window W; 1 = the
                                       # synchronous per-commit engine
     redundancy: int = 1               # syndrome stack height r (1..4) =
@@ -229,6 +236,13 @@ class ProtectConfig:
                 "parity/checksum refreshes, which this mode does not "
                 "maintain; use a parity/checksum mode (mlp or mlpc) or "
                 "window=1")
+        if self.pipeline_depth < 1:
+            raise ValueError(
+                f"ProtectConfig.pipeline_depth={self.pipeline_depth} — "
+                "the async commit ring holds at least one in-flight "
+                "commit (1 = resolve every verdict before the next "
+                "dispatch; larger depths pipeline dispatches ahead of "
+                "resolution)")
         if self.window_growth_commits < 0:
             raise ValueError(
                 f"ProtectConfig.window_growth_commits="

@@ -85,6 +85,7 @@ from repro.core import layout as layout_mod
 from repro.core import parity as parity_mod
 from repro.core import redolog
 from repro.core.txn import ProtectedState, Protector
+from repro.dist import collectives as coll
 from repro.kernels import ops as kops
 
 PyTree = Any
@@ -332,16 +333,20 @@ class DeferredProtector:
         rank loss the survivors' copy bounds exactly which pages the lost
         window could have touched and what the row digests must be after
         flush + reconstruction — no checkpoint + redo replay needed to
-        re-derive them.  The snapshot is an *async device copy* (the
-        stand-in for a secondary pod-axis all-gather): jnp.copy gives the
-        mirror its own buffers — donation of the live EpochState can't
-        invalidate them — without a host sync, so overlap_commit keeps
-        dispatching ahead; `window_meta` fetches to host only when a
-        failure actually consults the mirror.
+        re-derive them.  The snapshot rides the *secondary pod-axis
+        all-gather* (`dist.collectives.make_meta_mirror`): one cached
+        jitted reshard to the fully-replicated sharding, dispatched
+        asynchronously — no `device_get`, no host sync, so the commit
+        path (and an N-deep pipeline dispatching ahead) never stalls —
+        and landing in fresh replicated buffers on EVERY device, so
+        donation of the live EpochState can't invalidate the mirror and
+        a lost rank's copy survives on the others.  `window_meta`
+        fetches to host only when a failure actually consults it.
         """
-        self._meta = jax.tree.map(
-            jnp.copy, (est.prot.digest, est.prot.step, est.pending,
-                       est.dirty))
+        if "wmeta_mirror" not in self._jit:
+            self._jit["wmeta_mirror"] = coll.make_meta_mirror(self.p.mesh)
+        self._meta = self._jit["wmeta_mirror"](
+            (est.prot.digest, est.prot.step, est.pending, est.dirty))
 
     def verify_window_bound(self, est: EpochState) -> Optional[bool]:
         """Check the live rows against the replicated digests.
@@ -482,6 +487,37 @@ class DeferredProtector:
             return (new_prot, outs.get("dirty", dirty),
                     pending + U32(1), outs.get("acc", acc),
                     jnp.ones((), bool))
+
+        return commit
+
+    def make_step_commit_staged(self):
+        """The in-window commit with a DEVICE-side canary verdict.
+
+        `make_step_commit` keys the canary statically — the host knows
+        the verdict before dispatch, so abort compiles to a pure no-op.
+        An async pipeline can't always know it: a staged canary page is
+        checked by a device program whose scalar hasn't landed when the
+        next commit dispatches.  This variant takes the canary as a
+        traced bool: the all-clear body runs unconditionally and every
+        output is selected per-leaf against the previous window state —
+        on a False canary the result is bit-identical to the static
+        abort no-op (old prot/dirty/pending/acc pass through, the log
+        untouched), so a drained pipeline matches the synchronous
+        engine exactly whichever way the verdict arrived.
+        """
+        inner = self.make_step_commit()
+
+        def commit(prot: ProtectedState, dirty, pending, acc, state_new,
+                   dirty_words, data_cursor, rng_key, canary):
+            new_prot, new_dirty, new_pending, new_acc, _ = inner(
+                prot, dirty, pending, acc, state_new, dirty_words,
+                data_cursor, rng_key, True)
+            v = jnp.asarray(canary, bool).reshape(())
+            sel_prot, sel_dirty, sel_pending, sel_acc = jax.tree.map(
+                lambda n, o: jnp.where(v, n, o),
+                (new_prot, new_dirty, new_pending, new_acc),
+                (prot, dirty, pending, acc))
+            return sel_prot, sel_dirty, sel_pending, sel_acc, v
 
         return commit
 
@@ -639,6 +675,32 @@ class DeferredProtector:
             est.prot, est.dirty, est.pending, est.acc, state_new,
             dirty_words, data_cursor, rng_key, bool(canary_ok))
         est = EpochState(prot=prot, dirty=dirty, pending=pending, acc=acc)
+        return self._after_step(est), ok
+
+    def commit_staged(self, est: EpochState, state_new: PyTree, *,
+                      canary, dirty_words=None, data_cursor=0,
+                      rng_key=None):
+        """`commit` with a device-resident canary verdict (`canary` is
+        an unfetched bool scalar, e.g. `kernels.ops.stage_verdict` over
+        guarded staging buffers).  The abort select rides inside the
+        program (see make_step_commit_staged), so dispatch never waits
+        for the verdict — the returned `ok` is the canary itself, still
+        unfetched.  Host cadence (`_since`, the boundary flush) counts
+        the ATTEMPT exactly like the static path, so drained pipelines
+        stay bit-identical to synchronous resolution.
+        """
+        assert dirty_words is None or self.patch, \
+            "dirty_words requires a patch engine (static dirty_leaf_idx)"
+        prot, dirty, pending, acc, ok = self._jitted(
+            "step_staged", self.make_step_commit_staged, n_donated=4)(
+            est.prot, est.dirty, est.pending, est.acc, state_new,
+            dirty_words, data_cursor, rng_key, canary)
+        est = EpochState(prot=prot, dirty=dirty, pending=pending, acc=acc)
+        return self._after_step(est), ok
+
+    def _after_step(self, est: EpochState) -> EpochState:
+        """Shared post-commit host cadence: attempt count, the
+        fault-arrival hook, the boundary flush, the meta mirror."""
         self._since += 1
         if self.arrival_hook is not None:
             # the mid-window fault-arrival point: the hook sees the
@@ -652,7 +714,7 @@ class DeferredProtector:
             est = self.flush(est)
         if self.replicate_meta:
             self._mirror_meta(est)
-        return est, ok
+        return est
 
     def flush(self, est: EpochState) -> EpochState:
         """Refresh parity/cksums (and the row) from the window now."""

@@ -158,6 +158,36 @@ def syndrome_apply_delta(synd: jax.Array, sdelta: jax.Array,
     return synd ^ jnp.concatenate(pieces, axis=-1)
 
 
+def meta_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
+    """Replicate small per-rank metadata across the zone (window meta).
+
+    Inside a shard_map: every rank receives the stacked (G, *x.shape)
+    table — out[i] is rank i's value, identical on every rank.  This is
+    the *secondary* all-gather the deferred engine's window-meta mirror
+    rides: a few hundred bytes per commit (dirty mask + digests +
+    pending count), dispatched asynchronously so the commit path never
+    blocks on the host, and pod-replicated so the survivors of a
+    mid-window rank loss still hold the lost rank's copy (a rank-local
+    `jnp.copy` mirror dies with its rank).
+    """
+    return lax.all_gather(x, axis_name, axis=0, tiled=False)
+
+
+def make_meta_mirror(mesh):
+    """Build the async window-meta replication program (host-callable).
+
+    A jitted identity whose outputs are forced to the fully-replicated
+    sharding: XLA lowers the resharding to the pod all-gather, the call
+    dispatches without any host synchronization, and the result is a
+    fresh replicated buffer set — donation of the live window state can
+    never invalidate it, and every device holds every rank's copy.
+    `None` leaves (a bulk engine's absent dirty mask) pass through.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    repl = NamedSharding(mesh, PartitionSpec())
+    return jax.jit(lambda tree: tree, out_shardings=repl)
+
+
 def xor_tree_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     """Recursive-doubling XOR all-reduce (power-of-two zones).
 

@@ -150,6 +150,27 @@ def fused_commit_old_terms_s(old: jax.Array, new: jax.Array, coeffs=None, *,
     return _gf.fused_commit_old_terms_s(old, new, coeffs, interpret=p)
 
 
+def stage_verdict(checks) -> jax.Array:
+    """Fold per-buffer canary verdicts into ONE device scalar.
+
+    The async commit pipeline's device-side canary staging: each guarded
+    staging buffer yields a device bool (`microbuffer.check` /
+    `check_nd`), and instead of `device_get`-ing every one on the host —
+    a sync per buffer, serializing the pipeline — the checks fold to a
+    single unfetched bool that rides straight into the staged commit
+    program (`DeferredProtector.commit_staged`, `Pool.commit_async`).
+    The fold is a scalar reduction over a handful of bools; there is no
+    Pallas variant because there is nothing to tile — jnp is the kernel.
+    An empty check list is vacuously clean (all-True).
+    """
+    if not checks:
+        return jnp.ones((), jnp.bool_)
+    flat = [jnp.asarray(c, jnp.bool_).reshape(-1) for c in checks]
+    if len(flat) == 1 and flat[0].shape == (1,):
+        return flat[0].reshape(())
+    return jnp.all(jnp.concatenate(flat))
+
+
 # ---------------------------------------------------------------------------
 # tenant-batched dispatch (repro.tenancy cohorts)
 # ---------------------------------------------------------------------------

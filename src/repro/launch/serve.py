@@ -29,6 +29,10 @@ def main(argv=None):
     ap.add_argument("--window", type=int, default=1,
                     help="deferred-epoch window W for the KV cache "
                          "(1 = synchronous per-commit protection)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="async commit ring depth: decode commits "
+                         "dispatch up to this many verdicts ahead of "
+                         "resolution (1 = resolve per token)")
     ap.add_argument("--host-devices", type=int, default=8)
     ap.add_argument("--metrics-dir", default=None,
                     help="publish the pool's metric registry "
@@ -65,7 +69,8 @@ def main(argv=None):
     srv = Server(cfg, ProtectConfig(mode=args.protect, block_words=256,
                                     scrub_period=args.scrub_period,
                                     redundancy=args.redundancy,
-                                    window=args.window),
+                                    window=args.window,
+                                    pipeline_depth=args.pipeline_depth),
                  mesh, batch=args.batch,
                  max_len=args.prompt_len + args.new_tokens + 1,
                  metrics_dir=args.metrics_dir, trace_dir=args.trace_dir,

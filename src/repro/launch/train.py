@@ -36,7 +36,12 @@ def main(argv=None):
                     help="deferred-epoch window W (1 = synchronous "
                          "per-commit protection)")
     ap.add_argument("--overlap-commit", action="store_true",
-                    help="dispatch step t+1 before awaiting commit t")
+                    help="dispatch step t+1 before awaiting commit t "
+                         "(shorthand for --pipeline-depth 2)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="async commit ring depth: up to this many "
+                         "steps stay dispatched with unresolved "
+                         "verdicts (1 = resolve every step)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--optimizer", default="adamw",
                     choices=["adamw", "adafactor"])
@@ -81,7 +86,8 @@ def main(argv=None):
                     optimizer=args.optimizer),
         ProtectConfig(mode=args.protect, scrub_period=args.scrub_period,
                       redundancy=args.redundancy, window=args.window,
-                      overlap_commit=args.overlap_commit),
+                      overlap_commit=args.overlap_commit,
+                      pipeline_depth=args.pipeline_depth),
         mesh, seq_len=args.seq_len, global_batch=args.global_batch,
         checkpoint_dir=args.ckpt_dir, seed=args.seed,
         metrics_dir=args.metrics_dir, trace_dir=args.trace_dir,

@@ -44,6 +44,22 @@ def _labels(labels: dict, extra: Optional[dict] = None) -> str:
     return "{" + body + "}"
 
 
+def _exemplar(exemplars, i: int) -> str:
+    """OpenMetrics exemplar suffix for bucket i, or '' when absent.
+
+    Rendered as ` # {span_id="N"} value` — a scrape of a tail-latency
+    bucket carries the trace span id of the exact sample that landed
+    there, so a p99 commit links straight to its trace span
+    (scripts/trace_check.py validates the linkage against the trace
+    file).  Classic-format parsers treat the suffix as a comment, so
+    the exposition stays 0.0.4-compatible.
+    """
+    if not exemplars or exemplars[i] is None:
+        return ""
+    eid, v = exemplars[i]
+    return f' # {{span_id="{eid}"}} {_fmt(float(v))}'
+
+
 def prometheus_text(registry: MetricsRegistry) -> str:
     """Render the registry in the Prometheus text exposition format."""
     lines = []
@@ -58,12 +74,15 @@ def prometheus_text(registry: MetricsRegistry) -> str:
             lines.append(f"{name}{_labels(labels)} {_fmt(m.value)}")
             continue
         cum = 0
-        for edge, c in zip(m.edges, m.counts):
+        ex = getattr(m, "exemplars", None)
+        for i, (edge, c) in enumerate(zip(m.edges, m.counts)):
             cum += c
             lines.append(f"{name}_bucket"
-                         f"{_labels(labels, {'le': _fmt(edge)})} {cum}")
+                         f"{_labels(labels, {'le': _fmt(edge)})} {cum}"
+                         f"{_exemplar(ex, i)}")
         lines.append(f"{name}_bucket"
-                     f"{_labels(labels, {'le': '+Inf'})} {m.count}")
+                     f"{_labels(labels, {'le': '+Inf'})} {m.count}"
+                     f"{_exemplar(ex, len(m.edges))}")
         lines.append(f"{name}_sum{_labels(labels)} {_fmt(m.sum)}")
         lines.append(f"{name}_count{_labels(labels)} {m.count}")
     return "\n".join(lines) + ("\n" if lines else "")

@@ -86,7 +86,8 @@ class Histogram:
     O(log len(buckets)) per observe — cheap enough for per-commit use.
     """
 
-    __slots__ = ("edges", "counts", "count", "sum", "min", "max")
+    __slots__ = ("edges", "counts", "count", "sum", "min", "max",
+                 "exemplars")
 
     def __init__(self, buckets: Optional[Sequence[float]] = None):
         self.edges = sorted(float(b) for b in (buckets if buckets
@@ -98,10 +99,19 @@ class Histogram:
         self.sum = 0.0
         self.min = math.inf
         self.max = -math.inf
+        # per-bucket last (exemplar_id, value) pair or None — the
+        # OpenMetrics exemplar model: a tail-latency bucket remembers a
+        # trace span id, so a p99 sample in a scrape links back to the
+        # exact traced commit that produced it
+        self.exemplars: List[Optional[Tuple[object, float]]] = \
+            [None] * (len(self.edges) + 1)
 
-    def observe(self, v: float) -> None:
+    def observe(self, v: float, exemplar: object = None) -> None:
         v = float(v)
-        self.counts[bisect.bisect_left(self.edges, v)] += 1
+        i = bisect.bisect_left(self.edges, v)
+        self.counts[i] += 1
+        if exemplar is not None:
+            self.exemplars[i] = (exemplar, v)
         self.count += 1
         self.sum += v
         if v < self.min:

@@ -49,14 +49,17 @@ import time
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ProtectConfig
 from repro.core import microbuffer
 from repro.core import recovery as recovery_mod
 from repro.core.epoch import DeferredProtector, EngineHost
+from repro.core.pipeline import CommitRing, CommitTicket
 from repro.core.scrub import ScrubReport, Scrubber
 from repro.core.txn import Mode, ProtectedState, Protector
+from repro.kernels import ops as kops
 from repro.dist import elastic
 from repro.dist.straggler import StragglerPolicy
 from repro.obs import health as obs_health
@@ -139,10 +142,15 @@ class Transaction:
     propagates.
     """
 
-    def __init__(self, pool: "Pool", *, data_cursor=0, rng_key=None):
+    def __init__(self, pool: "Pool", *, data_cursor=0, rng_key=None,
+                 pages: Optional[Sequence[int]] = None):
         self._pool = pool
         self._data_cursor = data_cursor
         self._rng_key = rng_key
+        # the page footprint declared at pool.transaction(pages=...) —
+        # the merge-group conflict-check currency (None = whole state)
+        self.pages = (None if pages is None
+                      else tuple(int(p) for p in pages))
         self._staged: Optional[PyTree] = None
         self._commit_kw: dict = {}
         self._guarded: list = []          # (buffer, nd) pairs
@@ -185,6 +193,18 @@ class Transaction:
         checks = [microbuffer.check_nd(b) if nd else microbuffer.check(b)
                   for b, nd in self._guarded]
         return all(bool(jax.device_get(c)) for c in checks)
+
+    def canary_device(self) -> jax.Array:
+        """The staged DEVICE verdict over every watched guard page — one
+        unfetched bool scalar (`kernels.ops.stage_verdict`).  The async
+        pipeline's canary form: feed it to
+        `pool.commit_async(canary_ok=tx.canary_device())` and the abort
+        select rides inside the commit program, so dispatch never blocks
+        on the host the way `canary_ok` (a per-buffer device_get) does.
+        """
+        checks = [microbuffer.check_nd(b) if nd else microbuffer.check(b)
+                  for b, nd in self._guarded]
+        return kops.stage_verdict(checks)
 
     @property
     def aborted(self) -> bool:
@@ -347,6 +367,30 @@ class Pool(EngineHost):
             "pool_commit_aborted_total")
         self._m_commit_ms = self.metrics.histogram(
             "pool_commit_dispatch_ms")
+        # async commit pipeline (core/pipeline.py): the N-deep in-flight
+        # ring behind commit_async; resolve latency carries the dispatch
+        # span id as a histogram exemplar so a p99 sample links back to
+        # its trace event
+        self._m_resolve_ms = self.metrics.histogram(
+            "pool_commit_resolve_ms")
+        self._m_inflight = self.metrics.gauge("pool_inflight_depth")
+        self._ring = CommitRing(self.config.pipeline_depth,
+                                on_depth=self._m_inflight.set)
+        self._ticket_seq = 0
+        self._staged_sel = None       # cached jitted sync canary select
+        # merged-window bookkeeping (lock-free dirty-union semantics):
+        # the page-footprint union of every transaction opened since the
+        # last flush; a conflicting footprint seals the group (drain +
+        # flush) before the new transaction joins a fresh one, so
+        # conflicting txns serialize and disjoint txns coalesce into ONE
+        # telescoped flush
+        self._merge_open = False
+        self._merge_all = False
+        self._merge_pages: set = set()
+        self._m_txn_serialized = self.metrics.counter(
+            "pool_txn_serialized_total")
+        self._m_txn_coalesced = self.metrics.counter(
+            "pool_txn_coalesced_total")
         # health bookkeeping (host flags; pool.health() folds these)
         self._n_recoveries = 0
         self._n_followups = 0
@@ -409,6 +453,10 @@ class Pool(EngineHost):
         protection clears the exhaust/corruption health flags and
         restores the full syndrome budget.
         """
+        # re-protection supersedes any commit still in flight: void the
+        # tickets deterministically (verdict False, device untrusted)
+        # rather than resolving against buffers the re-arm replaced
+        self._ring.void_all()
         self.prot = self.protector.init(state)
         self._budget_exhausted = False
         self._unrepaired_pages = 0
@@ -471,6 +519,9 @@ class Pool(EngineHost):
             "commits": int(self._m_commits.value),
             "aborted_commits": int(self._m_aborted.value),
             "commit_dispatch_ms": self._m_commit_ms.summary(),
+            "pipeline_depth": self.config.pipeline_depth,
+            "in_flight": len(self._ring),
+            "commit_resolve_ms": self._m_resolve_ms.summary(),
             "scrub": self.scrubber.coverage(),
             "recoveries": self._n_recoveries,
             "recovery_followups": self._n_followups,
@@ -556,9 +607,187 @@ class Pool(EngineHost):
         self._m_commit_ms.observe((time.perf_counter() - t0) * 1e3)
         return ok
 
-    def transaction(self, *, data_cursor=0, rng_key=None) -> Transaction:
-        """`pgl_tx_begin`: returns the staging context manager."""
-        return Transaction(self, data_cursor=data_cursor, rng_key=rng_key)
+    # -- async commit pipeline ---------------------------------------------------
+
+    def _staged_sel_fn(self):
+        """Cached jitted select for the synchronous engine's device
+        canary: `Protector.commit` keys its canary statically (the jit
+        cache's `static_argnames`), so a traced verdict cannot ride the
+        existing program — instead the all-clear commit runs without
+        donation and this select gates the WHOLE new protected state on
+        the device canary per leaf.  A False canary yields the old state
+        bit-identically (the static abort path's result)."""
+        if self._staged_sel is None:
+            def _sel(v, ok, new, old):
+                v = jnp.asarray(v, bool).reshape(())
+                sel = jax.tree.map(lambda n, o: jnp.where(v, n, o),
+                                   new, old)
+                return sel, jnp.logical_and(v, ok)
+            self._staged_sel = jax.jit(_sel)
+        return self._staged_sel
+
+    def commit_async(self, state_new: PyTree, *, dirty_pages=None,
+                     dirty_words=None, data_cursor=0, rng_key=None,
+                     canary_ok=True, verify_old: bool = False,
+                     extras: Optional[dict] = None) -> CommitTicket:
+        """One transactional update as a future: dispatches the commit
+        and returns a `CommitTicket` carrying the UNfetched device
+        verdict, the dispatch timestamp, and the trace span id.  Up to
+        `ProtectConfig.pipeline_depth` tickets stay in flight (the ring
+        force-resolves the oldest past that); tickets resolve as their
+        device scalars land — `ticket.result()`, `pool.poll()` out of
+        dispatch order, or `pool.drain()` at a boundary.
+
+        `canary_ok` accepts either the host bool the synchronous
+        `commit` takes, or an UNfetched device bool (e.g.
+        `tx.canary_device()` / `kernels.ops.stage_verdict`) — the
+        staged form: the abort select rides inside the program, the
+        verdict can't be host-known at dispatch, and abort bookkeeping
+        (abort counter, scrub clean-streak) defers to resolution.
+        Routing (`dirty_pages` vs `dirty_words`) matches `commit`.
+        """
+        assert self.prot is not None, "Pool.commit_async before init()"
+        t0 = time.perf_counter()
+        staged = not isinstance(canary_ok, (bool, np.bool_))
+        if self._engine is not None:
+            assert not verify_old, \
+                "verify_old is a synchronous-engine feature (window=1)"
+            if staged:
+                self._est, ok = self._engine.commit_staged(
+                    self._est, state_new, canary=canary_ok,
+                    dirty_words=dirty_words, data_cursor=data_cursor,
+                    rng_key=rng_key)
+            else:
+                self._est, ok = self._engine.commit(
+                    self._est, state_new, dirty_words=dirty_words,
+                    data_cursor=data_cursor, rng_key=rng_key,
+                    canary_ok=bool(canary_ok))
+        else:
+            if staged:
+                # no donation: the old state is the select's False arm
+                prot_old = self._prot
+                prot_new, ok_c = self.protector.commit(
+                    prot_old, state_new, dirty_pages=dirty_pages,
+                    verify_old=verify_old, donate=False,
+                    data_cursor=data_cursor, rng_key=rng_key,
+                    canary_ok=True)
+                self._prot, ok = self._staged_sel_fn()(
+                    canary_ok, ok_c, prot_new, prot_old)
+            else:
+                self._prot, ok = self.protector.commit(
+                    self._prot, state_new, dirty_pages=dirty_pages,
+                    verify_old=verify_old, donate=self.donate,
+                    data_cursor=data_cursor, rng_key=rng_key,
+                    canary_ok=bool(canary_ok))
+            if self._arrival_fn is not None:
+                new = self._arrival_fn(self._prot, 1, True)
+                if new is not None:
+                    self._prot = new
+        seq = self._ticket_seq
+        self._ticket_seq += 1
+        span_id = self.tracer.emit("commit_dispatch", seq=seq,
+                                   staged=bool(staged))
+        if not staged:
+            # host-known canary: dispatch-time bookkeeping identical to
+            # the synchronous commit path
+            self.scrubber.on_commit(clean=bool(canary_ok))
+            if not canary_ok:
+                self._m_aborted.inc()
+        self._m_commits.inc()
+        self._m_commit_ms.observe((time.perf_counter() - t0) * 1e3)
+        return self._ring.submit(CommitTicket(
+            seq, ok, dispatched_at=t0, span_id=span_id, extras=extras,
+            staged=staged, on_resolve=self._on_ticket_resolved))
+
+    def _on_ticket_resolved(self, ticket: CommitTicket) -> None:
+        """Resolution bookkeeping (fires exactly once per ticket): the
+        resolve-latency histogram carries the ticket's trace span id as
+        an exemplar, and staged canaries settle their abort accounting
+        now that the verdict is host-known."""
+        lat = ticket.resolve_latency_ms
+        if lat is not None:
+            self._m_resolve_ms.observe(lat, exemplar=ticket.span_id)
+        if ticket.staged:
+            v = bool(ticket.result())
+            self.scrubber.on_commit(clean=v)
+            if not v:
+                self._m_aborted.inc()
+
+    def poll(self) -> list:
+        """Resolve any in-flight tickets whose device verdicts already
+        landed (out of dispatch order); returns them."""
+        return self._ring.poll()
+
+    def drain(self) -> list:
+        """Resolve EVERY in-flight ticket (dispatch order) — the
+        deterministic pipeline boundary.  `flush`, scrub, recovery and
+        rescale all drain first, so a pipeline interrupted anywhere
+        lands exactly where synchronous resolution would."""
+        return self._ring.drain()
+
+    @property
+    def in_flight(self) -> int:
+        """Unresolved commit tickets currently in the ring."""
+        return len(self._ring)
+
+    def flush(self) -> None:
+        """Bring deferred redundancy current (no-op when synchronous);
+        resolves the commit pipeline first and closes any open
+        transaction merge group — a flush is the deterministic boundary
+        every coalesced window telescopes into."""
+        self.drain()
+        if self._engine is not None and self._est is not None:
+            self._est = self._engine.flush_if_pending(self._est)
+        self._merge_open = False
+        self._merge_all = False
+        self._merge_pages = set()
+
+    # -- transactions (merged-window protocol) -----------------------------------
+
+    def _enter_footprint(self, pages) -> bool:
+        """The page-granular conflict check at `transaction()` entry
+        (lock-free dirty-union semantics): a footprint disjoint from the
+        open merge group joins it — its commits coalesce into the SAME
+        deferred window, one telescoped flush for all of them; a
+        conflicting footprint (overlap, or either side whole-state)
+        seals the group first (drain + flush), so conflicting
+        transactions serialize across windows.  Returns True when this
+        entry serialized."""
+        whole = pages is None
+        fp = set() if whole else set(int(p) for p in pages)
+        if not self._merge_open:
+            self._merge_open = True
+            self._merge_all = whole
+            self._merge_pages = fp
+            return False
+        conflict = self._merge_all or whole or bool(
+            self._merge_pages & fp)
+        if conflict:
+            self._m_txn_serialized.inc()
+            self.flush()              # seal: drain + telescoped flush
+            self._merge_open = True
+            self._merge_all = whole
+            self._merge_pages = fp
+            return True
+        self._m_txn_coalesced.inc()
+        self._merge_pages |= fp
+        return False
+
+    def transaction(self, *, data_cursor=0, rng_key=None,
+                    pages: Optional[Sequence[int]] = None) -> Transaction:
+        """`pgl_tx_begin`: returns the staging context manager.
+
+        `pages` declares the transaction's page footprint for the
+        merged-window protocol (`_enter_footprint`): concurrent open
+        transactions with DISJOINT footprints coalesce into one deferred
+        window (one telescoped flush); overlapping footprints — or any
+        transaction that declares none (None = whole state) — serialize
+        behind a seal.  Omitting `pages` preserves the classic
+        serial-transaction behavior exactly.
+        """
+        self._enter_footprint(pages)
+        return Transaction(self, data_cursor=data_cursor,
+                           rng_key=rng_key, pages=pages)
 
     # -- fault-arrival hook (chaos harness) -------------------------------------
 

@@ -68,6 +68,11 @@ class Server(PoolHost):
             # (and validates it; folded only when a pool is actually
             # built, so unprotected servers accept any window)
             protect_cfg = dataclasses.replace(protect_cfg, window=window)
+        # commit ring depth: decode commits at depth > 1 go through
+        # `commit_async` and resolve as their verdicts land, so the
+        # per-token protection program never blocks token emission;
+        # depth 1 keeps the classic resolve-per-commit path
+        self.pipeline_depth = int(protect_cfg.pipeline_depth)
         # telemetry surfaces (repro.obs) — mirrors the trainer's flags;
         # on an unprotected server (no pool) they are inert
         self.metrics_dir = metrics_dir
@@ -148,13 +153,19 @@ class Server(PoolHost):
         if self.pool is not None:
             # only the built engine's footprint spelling is computed —
             # the other would be host work cached for nothing
-            if self.pool.engine is not None:
-                self.pool.commit(new_cache,
-                                 dirty_words=self._dirty_words(self.pos))
+            fp = (dict(dirty_words=self._dirty_words(self.pos))
+                  if self.pool.engine is not None
+                  else dict(dirty_pages=self._dirty_pages(self.pos)
+                            .tolist()))
+            if self.pipeline_depth > 1:
+                # ring cadence: dispatch and move on; earlier verdicts
+                # resolve opportunistically as they land (the ring
+                # force-resolves the oldest past depth), and `generate`
+                # drains at the end
+                self.pool.commit_async(new_cache, **fp)
+                self.pool.poll()
             else:
-                self.pool.commit(
-                    new_cache,
-                    dirty_pages=self._dirty_pages(self.pos).tolist())
+                self.pool.commit(new_cache, **fp)
             self.pool.maybe_scrub()
             reg = self.pool.metrics
             reg.counter("server_steps_total").inc()
@@ -183,4 +194,8 @@ class Server(PoolHost):
         for _ in range(n_new - 1):
             tok = self.step(tok)
             out.append(np.asarray(jax.device_get(tok)))
+        if self.pool is not None:
+            # a generation boundary is a pipeline boundary: every
+            # in-flight commit verdict resolves before tokens return
+            self.pool.drain()
         return np.stack(out, axis=1)

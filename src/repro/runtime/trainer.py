@@ -68,6 +68,17 @@ class Trainer(PoolHost):
         self.seed = seed
         self.overlap_commit = bool(protect_cfg.overlap_commit)
         self.window = int(protect_cfg.window)
+        # overlap_commit is the legacy one-behind pipeline; fold it into
+        # the commit ring as an effective depth of 2 (dispatch t+1
+        # before awaiting t) so `run` has exactly one pipelining
+        # mechanism — the N-deep ring
+        depth = int(protect_cfg.pipeline_depth)
+        if self.overlap_commit and depth < 2:
+            depth = 2
+            protect_cfg = dataclasses.replace(protect_cfg,
+                                              pipeline_depth=depth)
+        self.pipeline_depth = depth
+        self.protect_cfg = protect_cfg
 
         self.model = build_model(cfg, mesh)
         self.optimizer = build_optimizer(train_cfg, cfg)
@@ -167,16 +178,16 @@ class Trainer(PoolHost):
         rng = jax.random.fold_in(jax.random.PRNGKey(self.seed), self.cursor)
         cursor_before = self.cursor
         new_state, metrics = self._train_step(self.prot.state, batch)
-        ok = self.pool.commit(new_state, data_cursor=self.cursor,
-                              rng_key=rng, canary_ok=canary_ok,
-                              verify_old=self.verify_old)
+        ticket = self.pool.commit_async(new_state, data_cursor=self.cursor,
+                                        rng_key=rng, canary_ok=canary_ok,
+                                        verify_old=self.verify_old)
         self.cursor += 1          # optimistic; rolled back on late abort
-        return {"ok": ok, "loss": metrics["loss"],
+        return {"ticket": ticket, "loss": metrics["loss"],
                 "cursor_before": cursor_before, "t0": t0}
 
     def _resolve_step(self, pending: dict) -> dict:
         """Await a dispatched step's commit; bookkeeping + scrub cadence."""
-        committed = bool(jax.device_get(pending["ok"]))
+        committed = bool(pending["ticket"].result())
         if committed:
             self._host_step += 1
         else:
@@ -223,6 +234,15 @@ class Trainer(PoolHost):
         return self._resolve_step(self._dispatch_step(canary_ok=canary_ok))
 
     def run(self, n_steps: int, checkpoint_every: int = 0) -> list:
+        """The training loop on the commit ring: up to
+        `pipeline_depth` steps stay dispatched-but-unresolved (compute
+        t+k launches before commit t's verdict is fetched), so the
+        async runtime overlaps parity reduce-scatters and flushes with
+        forward compute across the whole ring, not just one step
+        behind.  Depth 1 resolves every step inline (the synchronous
+        loop); the trailing in-flight steps drain at the end, so a
+        `run` boundary is always fully resolved.
+        """
         def maybe_checkpoint():
             if (outs and checkpoint_every and self._ckpt_mgr
                     and outs[-1]["step"] % checkpoint_every == 0
@@ -230,22 +250,19 @@ class Trainer(PoolHost):
                 self.save_checkpoint()
 
         outs = []
-        pending = None
+        pending: list = []
         for _ in range(n_steps):
-            if self.overlap_commit:
-                # dispatch step t+1's compute before awaiting commit t —
-                # the async runtime overlaps protection with forward
-                nxt = self._dispatch_step()
-                if pending is not None:
-                    outs.append(self._resolve_step(pending))
-                pending = nxt
+            if self.pipeline_depth > 1:
+                pending.append(self._dispatch_step())
+                if len(pending) >= self.pipeline_depth:
+                    outs.append(self._resolve_step(pending.pop(0)))
             else:
                 outs.append(self.step())
             maybe_checkpoint()
-        if pending is not None:
-            # the trailing overlapped step gets the same checkpoint
-            # cadence the synchronous path would give it
-            outs.append(self._resolve_step(pending))
+        while pending:
+            # the trailing pipelined steps get the same checkpoint
+            # cadence the synchronous path would give them
+            outs.append(self._resolve_step(pending.pop(0)))
             maybe_checkpoint()
         return outs
 

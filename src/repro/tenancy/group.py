@@ -70,6 +70,7 @@ from repro.core import gf
 from repro.core import layout as layout_mod
 from repro.core import redolog
 from repro.core.epoch import EpochState
+from repro.core.pipeline import CommitRing, CommitTicket
 from repro.core.txn import ProtectedState, Protector, tree_select
 from repro.dist import collectives as coll
 from repro.kernels import ops as kops
@@ -544,6 +545,7 @@ class PoolGroup:
     def __init__(self, mesh, *, capacity: int = 0,
                  evict_on_full: bool = True, data_axis: str = "data",
                  scrub_page_budget: int = 0, full_scrub_every: int = 4,
+                 pipeline_depth: int = 1,
                  metrics: Optional[MetricsRegistry] = None,
                  tracer: Optional[Tracer] = None):
         assert capacity >= 0, capacity
@@ -553,6 +555,14 @@ class PoolGroup:
         self.data_axis = data_axis
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None else Tracer()
+        # wave pipeline: `commit_async` dispatches whole commit waves
+        # through this ring, one ticket per wave (the group-level
+        # analogue of Pool's commit ring)
+        self.pipeline_depth = int(pipeline_depth)
+        self._ring = CommitRing(
+            self.pipeline_depth,
+            on_depth=self.metrics.gauge("group_inflight_waves").set)
+        self._ticket_seq = 0
         self.scheduler = ScrubScheduler(page_budget=scrub_page_budget,
                                         full_every=full_scrub_every)
         self._cohorts: Dict[tuple, Cohort] = {}
@@ -734,6 +744,47 @@ class PoolGroup:
                     rng_key=rk, **vkw)
         return out
 
+    def commit_async(self, updates: Dict[str, PyTree], *,
+                     extras: Optional[dict] = None,
+                     **kw) -> CommitTicket:
+        """Dispatch a commit wave through the group's ring: one
+        `CommitTicket` per wave, whose verdict is the AND of every
+        tenant's device verdict (`kernels.ops.stage_verdict`) and whose
+        `extras["verdicts"]` carries the per-tenant {tid: verdict} map
+        — each still lazily fetchable on its own.  Up to
+        `pipeline_depth` waves stay in flight; `drain()` is the
+        deterministic boundary (recovery and eviction resolve per-pool
+        state, so tenant operations never race a wave — the batched
+        programs already updated host-side prots at dispatch)."""
+        t0 = time.perf_counter()
+        verdicts = self.commit(updates, **kw)
+        ok = kops.stage_verdict(
+            [jnp.asarray(v, bool) for v in verdicts.values()])
+        seq = self._ticket_seq
+        self._ticket_seq += 1
+        span = self.tracer.emit("wave_dispatch", seq=seq,
+                                tenants=len(verdicts))
+        ex = {"verdicts": verdicts}
+        if extras:
+            ex.update(extras)
+        return self._ring.submit(CommitTicket(
+            seq, ok, dispatched_at=t0, span_id=span, extras=ex,
+            on_resolve=self._on_wave_resolved))
+
+    def _on_wave_resolved(self, ticket: CommitTicket) -> None:
+        lat = ticket.resolve_latency_ms
+        if lat is not None:
+            self.metrics.histogram("group_wave_resolve_ms").observe(
+                lat, exemplar=ticket.span_id)
+
+    def poll(self) -> list:
+        """Resolve any waves whose verdicts already landed."""
+        return self._ring.poll()
+
+    def drain(self) -> list:
+        """Resolve every in-flight wave (dispatch order)."""
+        return self._ring.drain()
+
     # -- scrub / recover / rescale ----------------------------------------
 
     def scrub_tick(self, page_budget: Optional[int] = None) -> list:
@@ -771,11 +822,13 @@ class PoolGroup:
         geometry and each pool reshards through `Pool.rescale` (flush →
         bit-exact reshard → re-protect).  The metric registry and trace
         are shared, so tenant labels survive the move."""
+        self.drain()                   # waves never survive a rescale
         new = PoolGroup(
             new_mesh, capacity=self.capacity,
             evict_on_full=self.evict_on_full, data_axis=self.data_axis,
             scrub_page_budget=self.scheduler.page_budget,
             full_scrub_every=self.scheduler.full_every,
+            pipeline_depth=self.pipeline_depth,
             metrics=self.metrics, tracer=self.tracer)
         for tid, handle in self._tenants.items():
             cold = new.admit(tid, handle.pool.abstract_state,

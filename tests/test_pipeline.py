@@ -1,0 +1,423 @@
+"""Async commit pipeline (core/pipeline.py + Pool.commit_async).
+
+The pipeline is bookkeeping around device scalars the commit programs
+already produce, so the bar is BIT-IDENTITY: an N-deep pipeline drained
+at any boundary must land the exact protection bits synchronous
+resolution lands — across {sync, deferred} engines, redundancy
+r in {1, 3}, ring depths {1, 2, 4, 8}, mid-flight device-canary aborts,
+and a fault arriving with k commits still in flight.  On top of that:
+out-of-order verdict resolution, the merged-window transaction protocol
+(disjoint footprints coalesce, conflicts serialize), the
+no-host-sync-at-dispatch guarantee (satellite 1's assertion: zero
+`jax.device_get` calls during steady-state async dispatch, including
+the replicated window-meta mirror), and the exemplar linkage from the
+resolve-latency histogram back to trace span ids
+(scripts/trace_check.py --prom).
+"""
+import dataclasses
+import importlib.util
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ProtectConfig
+from repro.core.pipeline import CommitRing, CommitTicket
+from repro.kernels import ops as kops
+from repro.obs.export import prometheus_text
+from repro.obs.trace import Tracer
+from repro.pool import Fault, Pool
+from repro.runtime import failure
+from tests.conftest import small_state
+
+
+def _evolve(cur):
+    return jax.tree.map(lambda x: (x * 1.01 + 0.003).astype(x.dtype), cur)
+
+
+def _chain(state, n):
+    """The deterministic state chain both pools commit (independent of
+    either pool's resolution policy, so divergence is the pool's)."""
+    out, cur = [], state
+    for _ in range(n):
+        cur = _evolve(cur)
+        out.append(cur)
+    return out
+
+
+def _assert_protection_equal(pa, pb):
+    np.testing.assert_array_equal(np.asarray(pa.digest),
+                                  np.asarray(pb.digest))
+    np.testing.assert_array_equal(np.asarray(pa.synd), np.asarray(pb.synd))
+    np.testing.assert_array_equal(np.asarray(pa.row), np.asarray(pb.row))
+
+
+def _assert_state_equal(sa, sb):
+    for la, lb in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# -- host-only ring / ticket semantics (no device work) -----------------------
+
+
+class _FakeScalar:
+    """A device-scalar stand-in with controllable readiness."""
+
+    def __init__(self, value, ready=False):
+        self.value = bool(value)
+        self._ready = bool(ready)
+
+    def is_ready(self):
+        return self._ready
+
+    def __bool__(self):
+        return self.value
+
+
+def test_ticket_resolves_once_and_fires_callback():
+    fired = []
+    t = CommitTicket(0, True, on_resolve=fired.append)
+    assert not t.resolved and t.ready()          # host bool: always ready
+    assert t.result() is True
+    assert t.resolved and t.resolve_latency_ms is not None
+    assert fired == [t]
+    # the callback saw the CACHED verdict (set before firing)
+    assert fired[0].result() is True
+    t.result()                                   # idempotent: fires once
+    assert fired == [t]
+
+
+def test_ticket_void_skips_device_and_is_deterministic():
+    t = CommitTicket(0, _FakeScalar(True, ready=False))
+    assert t.void(False) is False                # never consults the scalar
+    assert t.voided and t.result() is False      # resolution is sticky
+
+
+def test_ring_polls_out_of_dispatch_order():
+    ring = CommitRing(4)
+    slow = _FakeScalar(True, ready=False)
+    fast = _FakeScalar(True, ready=True)
+    t0 = ring.submit(CommitTicket(0, slow))
+    t1 = ring.submit(CommitTicket(1, fast))
+    t2 = ring.submit(CommitTicket(2, fast))
+    done = ring.poll()                           # t1/t2 land before t0
+    assert done == [t1, t2] and not t0.resolved and len(ring) == 1
+    slow._ready = True
+    assert ring.poll() == [t0] and len(ring) == 0
+
+
+def test_ring_backpressure_force_resolves_oldest():
+    depths = []
+    ring = CommitRing(2, on_depth=depths.append)
+    t0 = ring.submit(CommitTicket(0, True))
+    t1 = ring.submit(CommitTicket(1, True))
+    t2 = ring.submit(CommitTicket(2, True))      # full: t0 force-resolved
+    assert t0.resolved and not t1.resolved and not t2.resolved
+    assert ring.in_flight == [t1, t2]
+    assert ring.drain() == [t1, t2]              # dispatch order
+    assert depths == [1, 2, 2, 0]
+
+    bad = CommitRing(3)
+    for s in range(3):
+        bad.submit(CommitTicket(s, True))
+    voided = bad.void_all(False)
+    assert len(voided) == 3 and all(t.voided for t in voided)
+    assert all(t.result() is False for t in voided)
+
+
+def test_pipeline_depth_config_validation():
+    with pytest.raises(Exception):
+        ProtectConfig(mode="mlpc", redundancy=1, pipeline_depth=0)
+    with pytest.raises(AssertionError):
+        CommitRing(0)
+
+
+# -- drained pipeline == synchronous resolution, engines x r x depth ----------
+
+
+@pytest.mark.parametrize("window", [1, 4], ids=["sync", "deferred"])
+@pytest.mark.parametrize("red", [1, 3])
+def test_drained_pipeline_bit_identical(mesh42, window, red):
+    """ISSUE bar: for every depth in {1, 2, 4, 8}, dispatch the same
+    chain of commits through the ring, drain at the boundary, and the
+    full protection stack must equal the synchronous engine's bits —
+    both engines, r in {1, 3}."""
+    state, specs, _ = small_state(mesh42)
+    cfg = ProtectConfig(mode="mlpc", redundancy=red, window=window,
+                        block_words=64)
+    ref = Pool.open(state, specs, mesh=mesh42, config=cfg, donate=False)
+    chain = _chain(state, 2 * max(window, 2))
+    for i, s in enumerate(chain):                # synchronous reference
+        assert bool(ref.commit(s, data_cursor=i,
+                               rng_key=jax.random.PRNGKey(i)))
+    ref.flush()
+
+    for depth in (1, 2, 4, 8):
+        pcfg = dataclasses.replace(cfg, pipeline_depth=depth)
+        pool = Pool.open(state, specs, mesh=mesh42, config=pcfg,
+                         donate=False, protector=ref.protector)
+        tickets = [pool.commit_async(s, data_cursor=i,
+                                     rng_key=jax.random.PRNGKey(i))
+                   for i, s in enumerate(chain)]
+        assert pool.in_flight <= depth           # ring back-pressure held
+        pool.drain()
+        assert pool.in_flight == 0
+        assert all(t.resolved and t.result() for t in tickets)
+        pool.flush()
+        _assert_protection_equal(pool.prot, ref.prot)
+        _assert_state_equal(pool.state, ref.state)
+
+
+# -- staged device canaries: mid-flight aborts ---------------------------------
+
+
+@pytest.mark.parametrize("window", [1, 4], ids=["sync", "deferred"])
+def test_staged_abort_mid_flight_bit_identical(mesh42, window):
+    """A device-side canary verdict the host cannot know at dispatch
+    ([T, T, F, T, T] staged through `kops.stage_verdict`) must abort
+    commit 2 INSIDE the ring exactly as the host-known abort does, with
+    the abort counter settling at resolution."""
+    state, specs, _ = small_state(mesh42)
+    cfg = ProtectConfig(mode="mlpc", redundancy=2, window=window,
+                        block_words=64, pipeline_depth=4)
+    pool = Pool.open(state, specs, mesh=mesh42, config=cfg, donate=False)
+    ref = Pool.open(state, specs, mesh=mesh42, config=dataclasses.replace(
+        cfg, pipeline_depth=1), donate=False, protector=pool.protector)
+    chain = _chain(state, 5)
+    verdicts = [True, True, False, True, True]
+
+    tickets = []
+    for i, s in enumerate(chain):
+        dev = kops.stage_verdict([jnp.asarray(verdicts[i])])
+        tickets.append(pool.commit_async(s, data_cursor=i,
+                                         canary_ok=dev))
+        assert tickets[-1].staged
+    aborted_before = pool.metrics.counter(
+        "pool_commit_aborted_total").value
+    pool.drain()
+    assert [t.result() for t in tickets] == verdicts
+    # staged abort bookkeeping deferred to resolution, exactly one abort
+    assert pool.metrics.counter("pool_commit_aborted_total").value == \
+        aborted_before + 1
+    pool.flush()
+
+    for i, s in enumerate(chain):                # host-known reference
+        ok = ref.commit(s, data_cursor=i, canary_ok=verdicts[i])
+        assert bool(ok) == verdicts[i]
+    ref.flush()
+    _assert_protection_equal(pool.prot, ref.prot)
+    _assert_state_equal(pool.state, ref.state)
+
+
+# -- fault arrival with k commits in flight ------------------------------------
+
+
+def test_recover_with_inflight_commits(mesh42):
+    """Recovery must drain the ring first: with k=3 unresolved tickets
+    at injection, `recover` resolves them deterministically, repairs,
+    and the end state is bit-identical to a fault-free pool running the
+    same chain."""
+    state, specs, _ = small_state(mesh42)
+    cfg = ProtectConfig(mode="mlpc", redundancy=2, window=4,
+                        block_words=64, pipeline_depth=4)
+    pool = Pool.open(state, specs, mesh=mesh42, config=cfg, donate=False)
+    ref = Pool.open(state, specs, mesh=mesh42, config=cfg, donate=False,
+                    protector=pool.protector)
+    chain = _chain(state, 6)
+    for i, s in enumerate(chain[:3]):
+        pool.commit_async(s, data_cursor=i)
+    pool.drain()
+
+    burst = [pool.commit_async(s, data_cursor=3 + i)
+             for i, s in enumerate(chain[3:])]
+    assert pool.in_flight == 3
+    assert pool.stats()["in_flight"] == 3
+    assert pool.metrics.gauge("pool_inflight_depth").value == 3
+    pool.inject(lambda p, pr: failure.inject_rank_loss(p, pr, rank=1))
+    rep = pool.recover(Fault.rank_loss(1))
+    assert rep.verified
+    assert pool.in_flight == 0                   # recovery drained first
+    assert all(t.resolved and t.result() for t in burst)
+    pool.flush()
+
+    for i, s in enumerate(chain):
+        ref.commit(s, data_cursor=i)
+    ref.flush()
+    _assert_protection_equal(pool.prot, ref.prot)
+    _assert_state_equal(pool.state, ref.state)
+
+
+# -- merged-window transaction protocol ----------------------------------------
+
+
+def test_disjoint_transactions_coalesce(mesh42):
+    """Disjoint page footprints join ONE merge group — no seal between
+    them, the coalesced counter ticks, and the telescoped flush lands
+    the same bits as serial transactions."""
+    state, specs, _ = small_state(mesh42)
+    cfg = ProtectConfig(mode="mlpc", redundancy=2, window=4,
+                        block_words=64)
+    pool = Pool.open(state, specs, mesh=mesh42, config=cfg, donate=False)
+    ref = Pool.open(state, specs, mesh=mesh42, config=cfg, donate=False,
+                    protector=pool.protector)
+    chain = _chain(state, 3)
+
+    for i, s in enumerate(chain):
+        with pool.transaction(data_cursor=i, pages=[2 * i, 2 * i + 1]) \
+                as tx:
+            tx.stage(s)
+        assert tx.ok
+    assert pool.metrics.counter("pool_txn_coalesced_total").value == 2
+    assert pool.metrics.counter("pool_txn_serialized_total").value == 0
+    pool.flush()                                 # one telescoped flush
+
+    for i, s in enumerate(chain):
+        with ref.transaction(data_cursor=i) as tx:
+            tx.stage(s)
+    ref.flush()
+    _assert_protection_equal(pool.prot, ref.prot)
+
+
+def test_conflicting_transactions_serialize(mesh42):
+    """An overlapping footprint (or a whole-state transaction) seals the
+    open merge group — the serialized counter ticks and the group's
+    window flushes before the conflicting transaction joins a fresh
+    one."""
+    state, specs, _ = small_state(mesh42)
+    cfg = ProtectConfig(mode="mlpc", redundancy=2, window=4,
+                        block_words=64)
+    pool = Pool.open(state, specs, mesh=mesh42, config=cfg, donate=False)
+    chain = _chain(state, 3)
+
+    with pool.transaction(data_cursor=0, pages=[0, 1]) as tx:
+        tx.stage(chain[0])
+    with pool.transaction(data_cursor=1, pages=[1, 2]) as tx:  # overlap
+        tx.stage(chain[1])
+    assert pool.metrics.counter("pool_txn_serialized_total").value == 1
+    with pool.transaction(data_cursor=2) as tx:  # None = whole state
+        tx.stage(chain[2])
+    assert pool.metrics.counter("pool_txn_serialized_total").value == 2
+    assert pool.metrics.counter("pool_txn_coalesced_total").value == 0
+    pool.flush()
+    rep = pool.scrub()
+    assert rep.parity_ok and rep.bad_locations == []
+
+
+# -- no host sync at dispatch (satellite 1) ------------------------------------
+
+
+def test_async_dispatch_never_syncs_host(mesh42, monkeypatch):
+    """Steady-state `commit_async` on the deferred bulk engine — with
+    window-meta replication ON (the bulk default, now an async
+    all-gather instead of the old blocking `device_get`) — must make
+    ZERO `jax.device_get` calls at dispatch.  Draining (verdict fetch)
+    is where the sync belongs, and it shows up exactly there."""
+    state, specs, _ = small_state(mesh42)
+    cfg = ProtectConfig(mode="mlpc", redundancy=2, window=4,
+                        block_words=64, pipeline_depth=4)
+    pool = Pool.open(state, specs, mesh=mesh42, config=cfg, donate=False)
+    assert pool.engine is not None and pool.engine.replicate_meta
+    chain = _chain(state, 12)
+    for i, s in enumerate(chain[:8]):            # warm every program
+        pool.commit_async(s, data_cursor=i)
+    pool.drain()
+
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    for i, s in enumerate(chain[8:]):            # steady state: dispatch
+        pool.commit_async(s, data_cursor=8 + i)
+    assert calls == [], "commit_async dispatch blocked on the host"
+    pool.drain()                                 # resolution fetches
+    assert len(calls) > 0
+
+
+# -- PoolGroup waves ride the same ring ----------------------------------------
+
+
+def test_group_waves_through_ring(mesh42):
+    """A tenancy commit wave dispatched through `PoolGroup.commit_async`
+    is one ticket whose verdict folds every tenant's device verdict and
+    whose extras carry the per-tenant map; wave resolve latency lands in
+    the group histogram with the wave's span exemplar."""
+    from repro.tenancy import PoolGroup
+
+    state, specs, _ = small_state(mesh42)
+    cfg = ProtectConfig(mode="mlpc", redundancy=1, window=1,
+                        block_words=64)
+    grp = PoolGroup(mesh42, pipeline_depth=2)
+    for tid in ("alice", "bob"):
+        grp.admit(tid, jax.tree.map(lambda x: x + 0, state), specs,
+                  config=cfg)
+
+    tickets = []
+    for k in range(1, 3):
+        updates = {tid: jax.tree.map(
+            lambda x: (x * (1 + 0.01 * k)).astype(x.dtype), state)
+            for tid in ("alice", "bob")}
+        tickets.append(grp.commit_async(updates))
+    drained = grp.drain()
+    assert drained == tickets
+    for t in tickets:
+        assert t.result() is True                # AND over the wave
+        assert set(t.extras["verdicts"]) == {"alice", "bob"}
+        assert all(bool(jax.device_get(v))
+                   for v in t.extras["verdicts"].values())
+    hist = grp.metrics.histogram("group_wave_resolve_ms")
+    assert hist.count == 2
+    assert any(e is not None for e in hist.exemplars)
+
+
+# -- exemplars: resolve-latency histogram -> trace span linkage ----------------
+
+
+def _load_trace_check():
+    path = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                        "trace_check.py")
+    spec = importlib.util.spec_from_file_location("trace_check", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_resolve_histogram_exemplars_link_to_trace(mesh42, tmp_path):
+    """The p99 commit sample must carry its dispatch trace span id into
+    the Prometheus export (` # {span_id="N"} v` bucket suffixes), and
+    scripts/trace_check.py --prom must validate every exemplar against
+    the trace — and flag a dangling one."""
+    trace = str(tmp_path / "pool.jsonl")
+    state, specs, _ = small_state(mesh42)
+    cfg = ProtectConfig(mode="mlpc", redundancy=1, window=1,
+                        block_words=64, pipeline_depth=2)
+    tracer = Tracer(trace)
+    pool = Pool.open(state, specs, mesh=mesh42, config=cfg, donate=False,
+                     tracer=tracer)
+    for i, s in enumerate(_chain(state, 4)):
+        pool.commit_async(s, data_cursor=i)
+    pool.drain()
+    tracer.close()
+
+    text = prometheus_text(pool.metrics)
+    ex_lines = [ln for ln in text.splitlines()
+                if "pool_commit_resolve_ms_bucket" in ln
+                and '# {span_id="' in ln]
+    assert ex_lines, "no exemplar suffix on any resolve bucket"
+
+    tc = _load_trace_check()
+    prom = tmp_path / "pool.prom"
+    prom.write_text(text)
+    assert tc.check_exemplars(str(prom), [trace]) == []
+    assert tc.main([trace, "--prom", str(prom)]) == 0
+
+    # a dangling exemplar (span id absent from the trace) must FAIL
+    bad = tmp_path / "bad.prom"
+    bad.write_text(ex_lines[0].replace('span_id="', 'span_id="99'))
+    assert tc.check_exemplars(str(bad), [trace]) != []
+    assert tc.main([trace, "--prom", str(bad)]) == 1
+    # and a .prom with no exemplars at all is a linkage violation
+    empty = tmp_path / "empty.prom"
+    empty.write_text("pool_commits_total 4\n")
+    assert tc.check_exemplars(str(empty), [trace]) != []
